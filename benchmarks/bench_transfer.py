@@ -1,0 +1,59 @@
+"""Fig 2/3: DoPut/DoGet throughput × parallel streams × records-per-stream.
+
+Measured: localhost loopback TCP + in-proc (this container).  Modeled: the
+paper's IB client-server rates via netsim (labeled `model:`).  One CPU core
+means measured stream-scaling saturates immediately — the netsim columns
+carry the paper's curve shapes (EXPERIMENTS.md discusses both).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flight import FlightClient, FlightDescriptor, InMemoryFlightServer
+from repro.core.flight.netsim import FLIGHT_O_IB_GET, FLIGHT_O_IB_PUT
+
+from .common import Timing, records_batch
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    # paper: records of 32 B; 10-90 M records/stream.  CPU-scaled: 0.5-2 M.
+    n_records = 500_000 if quick else 2_000_000
+    batches = [records_batch(n_records // 8, seed=s) for s in range(8)]
+    nbytes = sum(b.nbytes() for b in batches)
+
+    srv = InMemoryFlightServer(batches_per_endpoint=1).serve_tcp()
+    srv.add_dataset("bench", batches)
+    stream_counts = (1, 2, 4) if quick else (1, 2, 4, 8, 16)
+
+    for streams in stream_counts:
+        # DoGet over TCP loopback
+        client = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+        info = client.get_flight_info(FlightDescriptor.for_path("bench"))
+        _, stats = client.read_all_parallel(info, max_streams=streams)
+        out.append(Timing(f"fig2_doget_tcp_streams{streams}", stats.seconds, stats.bytes))
+        # DoPut over TCP loopback
+        stats = client.write_parallel(FlightDescriptor.for_path(f"up{streams}"),
+                                      batches, max_streams=streams)
+        out.append(Timing(f"fig2_doput_tcp_streams{streams}", stats.seconds, stats.bytes))
+
+    # in-proc zero-copy reference (the shared-memory ceiling)
+    c0 = FlightClient(srv)
+    info = c0.get_flight_info(FlightDescriptor.for_path("bench"))
+    _, stats = c0.read_all_parallel(info, max_streams=4)
+    out.append(Timing("fig2_doget_inproc_zerocopy", stats.seconds, stats.bytes))
+    srv.shutdown()
+
+    # modeled IB client-server rates (paper Fig 3 endpoints)
+    payload = 10_000_000 * 32  # 10M records × 32B, paper's smallest point
+    for streams in (1, 2, 4, 8, 16):
+        t = FLIGHT_O_IB_GET.transfer_seconds(payload, streams)
+        out.append(Timing(f"fig3_model_doget_ib_streams{streams}", t, payload))
+        t = FLIGHT_O_IB_PUT.transfer_seconds(payload, streams)
+        out.append(Timing(f"fig3_model_doput_ib_streams{streams}", t, payload))
+    return out
+
+
+if __name__ == "__main__":
+    for t in run():
+        print(t.csv())

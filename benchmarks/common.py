@@ -1,0 +1,68 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import RecordBatch
+
+
+def taxi_batch(n: int, seed: int = 0, with_strings: bool = True) -> RecordBatch:
+    """NYC-taxi-like rows: ints, floats and (faithfully) datetime strings."""
+    rng = np.random.default_rng(seed)
+    cols = {
+        "vendor_id": rng.integers(1, 3, n).astype(np.int32),
+        "passenger_count": rng.integers(1, 7, n).astype(np.int32),
+        "trip_distance": rng.gamma(2.0, 1.5, n).astype(np.float32),
+        "fare_amount": rng.gamma(3.0, 5.0, n).astype(np.float64),
+        "tip_amount": rng.gamma(1.0, 2.0, n).astype(np.float64),
+        "total_amount": rng.gamma(4.0, 5.0, n).astype(np.float64),
+    }
+    batch = RecordBatch.from_numpy(cols)
+    if with_strings:
+        base = np.datetime64("2015-01-01T00:00:00")
+        secs = rng.integers(0, 365 * 24 * 3600, n)
+        strs = [(str(base + np.timedelta64(int(s), "s"))) for s in secs]
+        d = batch.to_pydict()
+        d["pickup_datetime"] = strs
+        batch = RecordBatch.from_pydict(d)
+    return batch
+
+
+def records_batch(n_records: int, record_bytes: int = 32, seed: int = 0) -> RecordBatch:
+    """The paper's microbenchmark shape: fixed-width records (32 B each)."""
+    rng = np.random.default_rng(seed)
+    n_cols = record_bytes // 8
+    return RecordBatch.from_numpy({
+        f"f{i}": rng.integers(0, 1 << 40, n_records).astype(np.int64)
+        for i in range(n_cols)
+    })
+
+
+@dataclass
+class Timing:
+    name: str
+    seconds: float
+    nbytes: int = 0
+    extra: dict | None = None
+
+    @property
+    def mb_per_s(self) -> float:
+        return self.nbytes / max(self.seconds, 1e-12) / 1e6
+
+    def csv(self, derived: str = "") -> str:
+        us = self.seconds * 1e6
+        return f"{self.name},{us:.1f},{derived or f'{self.mb_per_s:.1f}MB/s'}"
+
+
+def timeit(fn, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -1,0 +1,102 @@
+"""Per-opcode / per-site cost breakdown for one dry-run cell — the §Perf
+profiling tool (our 'profile' is the partitioned HLO, per the assignment).
+
+  PYTHONPATH=src python benchmarks/hlo_breakdown.py <arch> <shape> [k]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import sys
+from collections import defaultdict
+
+from repro.launch.hloanalysis import HloAnalyzer, _shape_bytes, COLLECTIVE_OPS
+
+
+def breakdown(hlo_text: str, default_trips: int = 1, k: int = 18):
+    an = HloAnalyzer(hlo_text, default_trips)
+    sites = []           # (bytes, kind, opcode, comp, meta)
+    coll_sites = []
+    by_opcode = defaultdict(float)
+
+    def walk(name, mult):
+        comp = an.comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "iota"):
+                continue
+            if oc == "while":
+                trips = an._while_trips(op, op.attr("condition"))
+                walk(op.attr("body"), mult * trips)
+                continue
+            meta = ""
+            if "op_name=" in op.rhs:
+                meta = op.rhs.split('op_name="')[1].split('"')[0][-90:]
+            if oc in COLLECTIVE_OPS:
+                b = _shape_bytes(op.result_type) * (2 if oc == "all-reduce" else 1) * mult
+                coll_sites.append((b, oc, op.result_type[:40], meta))
+                by_opcode[oc] += b
+                continue
+            if oc == "fusion":
+                target = op.attr("calls")
+                inner = an.cost(target) if target else None
+                if inner:
+                    for cop in COLLECTIVE_OPS:
+                        if inner.collective_bytes[cop]:
+                            coll_sites.append((inner.collective_bytes[cop] * mult, cop,
+                                               "(in fusion)", meta))
+                            by_opcode[cop] += inner.collective_bytes[cop] * mult
+                charges = an._fusion_param_charges(target) if target else []
+                opnds = op.operands()
+                b = an._fusion_result_charge(target, op)
+                for i, o in enumerate(opnds):
+                    ch = charges[i] if i < len(charges) else "full"
+                    b += _shape_bytes(comp.symbols.get(o, "")) if ch == "full" else ch
+                sites.append((b * mult, "bytes", oc, op.result_type[:44], meta))
+                by_opcode[oc] += b * mult
+                continue
+            if oc in ("dynamic-slice", "gather"):
+                b = 2 * _shape_bytes(op.result_type) * mult
+            elif oc == "dynamic-update-slice":
+                ops_c = op.operands()
+                b = 2 * _shape_bytes(comp.symbols.get(ops_c[1], "")) * mult if len(ops_c) > 1 else 0
+            elif oc in ("dot", "convolution", "custom-call", "reduce", "sort", "scatter",
+                        "reduce-window", "call", "conditional"):
+                b = (_shape_bytes(op.result_type) + sum(
+                    _shape_bytes(comp.symbols.get(o, "")) for o in op.operands())) * mult
+            else:
+                b = 2 * _shape_bytes(op.result_type) * mult
+            sites.append((b, "bytes", oc, op.result_type[:44], meta))
+            by_opcode[oc] += b
+
+    walk(an.entry, 1.0)
+    total = an.cost()
+    print(f"TOTAL flops={total.flops:.3e} bytes={total.bytes:.3e} "
+          f"coll={total.total_collective_bytes:.3e}")
+    print("\n-- bytes by opcode --")
+    for oc, b in sorted(by_opcode.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"  {b:.3e}  {oc}")
+    print(f"\n-- top {k} byte sites --")
+    for b, kind, oc, t, meta in sorted(sites, reverse=True)[:k]:
+        print(f"  {b:.3e}  {oc:16s} {t:44s} {meta}")
+    print(f"\n-- top {k} collective sites --")
+    for b, oc, t, meta in sorted(coll_sites, reverse=True)[:k]:
+        print(f"  {b:.3e}  {oc:18s} {t:44s} {meta}")
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    k = int(sys.argv[3]) if len(sys.argv) > 3 else 18
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.configs.base import get_config
+
+    mesh = make_production_mesh()
+    lowered, compiled, meta = lower_cell(arch, shape, mesh)
+    breakdown(compiled.as_text(), default_trips=get_config(arch).n_superblocks, k=k)
+
+
+if __name__ == "__main__":
+    main()

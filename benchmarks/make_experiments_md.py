@@ -1,0 +1,77 @@
+"""Regenerates the data-driven sections of EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python benchmarks/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+ART = REPO / "experiments" / "artifacts"
+PERF = REPO / "experiments" / "perf"
+
+
+def dryrun_section() -> str:
+    rows = ["## §Dry-run — 40 cells × 2 production meshes", ""]
+    recs = [json.loads(f.read_text()) for f in sorted(ART.glob("*.json"))]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skipped"]
+    rows.append(f"**{len(ok)} cells lowered + compiled OK, {len(sk)} skipped per assignment "
+                f"rules, {len(recs) - len(ok) - len(sk)} failed** "
+                f"(meshes: `(16,16)`=256 chips and `(2,16,16)`=512 chips, "
+                f"`--xla_force_host_platform_device_count=512`).")
+    rows.append("")
+    rows.append("| arch | shape | mesh | status | args GB/dev | temp GB/dev | "
+                "collective GB/dev/step |")
+    rows.append("|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") == "ok":
+            ma = r["memory_analysis"]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{ma['argument_bytes']/1e9:.2f} | {ma['temp_bytes']/1e9:.2f} | "
+                f"{r['collectives']['total_collective_bytes']/1e9:.2f} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','—')} | "
+                        f"{r.get('status')} — {r.get('reason','')[:45]} | — | — | — |")
+    return "\n".join(rows)
+
+
+def roofline_section() -> str:
+    import sys
+    sys.path.insert(0, str(REPO))
+    from benchmarks.roofline import table
+    return ("## §Roofline — single-pod (16×16), per-device terms\n\n"
+            "Terms: `compute = HLO_FLOPs/dev ÷ 197 TF/s`, `memory = bytes/dev ÷ "
+            "819 GB/s`, `collective = collective_bytes/dev ÷ 50 GB/s`.  FLOPs/"
+            "bytes/collectives come from the trip-count-aware HLO analyzer "
+            "(launch/hloanalysis.py) over the compiled SPMD module — XLA's own "
+            "cost analysis counts loop bodies once, undercounting scanned models "
+            "24–94×.  `useful FLOPs ratio` = MODEL_FLOPS/HLO_FLOPs (remat "
+            "recompute, causal-mask waste and head padding show up here).\n\n"
+            + table("pod_16x16"))
+
+
+def perf_section() -> str:
+    rows = ["## §Perf — measured iterations (see narrative below the table)", ""]
+    if PERF.exists():
+        rows.append("| experiment | compute s | memory s | collective s | bound s | dominant |")
+        rows.append("|---|---|---|---|---|---|")
+        for f in sorted(PERF.glob("*.json")):
+            r = json.loads(f.read_text())
+            t = r["roofline"]
+            rows.append(f"| {r['experiment']} | {t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+                        f"{t['collective_s']:.3f} | {t['step_time_lower_bound_s']:.3f} | "
+                        f"{t['dominant'].replace('_s','')} |")
+    return "\n".join(rows)
+
+
+def main():
+    out = REPO / "experiments" / "generated_sections.md"
+    out.write_text("\n\n".join([dryrun_section(), roofline_section(), perf_section()]))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

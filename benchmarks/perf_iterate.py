@@ -1,0 +1,138 @@
+"""§Perf hillclimb driver: named experiments on the three chosen cells.
+
+Each experiment = (cell, change) → lower + analyze → JSON in
+experiments/perf/<name>.json.  EXPERIMENTS.md §Perf narrates the
+hypothesis → change → before/after → verdict chain from these artifacts.
+
+  PYTHONPATH=src python benchmarks/perf_iterate.py <experiment> [...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+PERF = REPO / "experiments" / "perf"
+
+
+def run(name: str, arch: str, shape: str, **kw):
+    from repro.launch.dryrun import analyze, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    t0 = time.time()
+    lowered, compiled, meta = lower_cell(arch, shape, mesh, **kw)
+    rec = {"experiment": name, "arch": arch, "shape": shape,
+           "change": {k: str(v) for k, v in kw.items()},
+           **analyze(compiled, meta["cfg"], meta["shape"], mesh),
+           "wall_s": round(time.time() - t0, 1)}
+    PERF.mkdir(parents=True, exist_ok=True)
+    (PERF / f"{name}.json").write_text(json.dumps(rec, indent=2, default=str))
+    t = rec["roofline"]
+    print(f"[{name}] compute={t['compute_s']:.3f}s memory={t['memory_s']:.3f}s "
+          f"collective={t['collective_s']:.3f}s dominant={t['dominant']} "
+          f"bound={t['step_time_lower_bound_s']:.3f}s useful={rec['useful_flops_ratio']}")
+    return rec
+
+
+EXPERIMENTS = {
+    # -- cell A: deepseek decode_32k (worst-fraction, memory-bound) --------
+    "A0_deepseek_decode_base": dict(arch="deepseek_coder_33b", shape="decode_32k"),
+    # A1 happened in code: carry-based cache (vs ys-stacking) — rerun = after
+    "A2_deepseek_decode_seqshard": dict(
+        arch="deepseek_coder_33b", shape="decode_32k",
+        # shard the KV cache on sequence over data (distributed flash-decode)
+        # instead of sharding batch: per-chip KV reads drop 16x
+        rules={"batch": None, "kv_seq": ("data",)},
+        extra_cfg={"force_seq_sharded_decode": True},
+    ),
+    # -- cell B: xlstm train_4k (most collective-bound) ---------------------
+    "B0_xlstm_train_base": dict(arch="xlstm_350m", shape="train_4k"),
+    "B1_xlstm_train_dp_remap": dict(
+        arch="xlstm_350m", shape="train_4k",
+        # a 350M model has no business being TP=16: remap the model axis to
+        # batch (pure DP over 256 chips); params stay FSDP over data
+        rules={"batch": ("pod", "data", "model"), "ff": None, "inner": None,
+               "heads": None, "kv_heads": None, "vocab": None},
+    ),
+    "B2_xlstm_train_dp_fsdp_both": dict(
+        arch="xlstm_350m", shape="train_4k",
+        # B1 + shard params over model too (FSDP over 256) to cut the
+        # all-gather sizes per layer
+        rules={"batch": ("pod", "data", "model"), "ff": None, "inner": None,
+               "heads": None, "kv_heads": None, "vocab": None,
+               "embed": ("data", "model")},
+    ),
+    "A3_deepseek_decode_fp8_cache": dict(
+        arch="deepseek_coder_33b", shape="decode_32k",
+        # the paper's wire-compression theme applied to the KV cache: fp8
+        # storage halves the per-token cache reads (dequant on the fly)
+        cache_dtype="float8_e4m3fn",
+    ),
+    "A4_deepseek_decode_fp8_seqshard": dict(
+        arch="deepseek_coder_33b", shape="decode_32k",
+        cache_dtype="float8_e4m3fn",
+        rules={"batch": None, "kv_seq": ("data",)},
+        extra_cfg={"force_seq_sharded_decode": True},
+    ),
+    "B3_xlstm_train_dp_bf16acc": dict(
+        arch="xlstm_350m", shape="train_4k",
+        rules={"batch": ("pod", "data", "model"), "ff": None, "inner": None,
+               "heads": None, "kv_heads": None, "vocab": None},
+        matmul_accum="bfloat16",
+    ),
+    # -- cell C: moonshot train_4k (MoE, paper-representative) --------------
+    "C0_moonshot_train_base": dict(arch="moonshot_v1_16b_a3b", shape="train_4k"),
+    "C1_moonshot_train_remat_dots": dict(
+        arch="moonshot_v1_16b_a3b", shape="train_4k",
+        remat_policy="dots",  # save dot outputs: no fwd recompute in bwd
+    ),
+    "C2_moonshot_train_bigger_microbatch": dict(
+        arch="moonshot_v1_16b_a3b", shape="train_4k",
+        # halve TP: model=16 -> experts sharded 16-way is fine, but FFN/heads
+        # over 8 with data=32 — expressed via remapping batch over model too
+        rules={"batch": ("pod", "data")},
+    ),
+    "C3_moonshot_train_bf16_accum": dict(
+        arch="moonshot_v1_16b_a3b", shape="train_4k",
+        # backward activation psums run on the pre-cast f32 partials; bf16
+        # accumulation halves every TP/MoE collective's bytes
+        matmul_accum="bfloat16",
+    ),
+    "C4_moonshot_train_bf16acc_dprouter": dict(
+        arch="moonshot_v1_16b_a3b", shape="train_4k",
+        matmul_accum="bfloat16",
+        remat_policy="dots",
+    ),
+    # -- bonus cell D: jamba train_4k (largest memory term in the table) ----
+    "D0_jamba_train": dict(arch="jamba_1_5_large_398b", shape="train_4k"),
+    "D2_jamba_train_chunk128": dict(arch="jamba_1_5_large_398b", shape="train_4k",
+                                    extra_cfg={"mamba_chunk": 128}),
+    "D3_jamba_train_chunk32": dict(arch="jamba_1_5_large_398b", shape="train_4k",
+                                   extra_cfg={"mamba_chunk": 32}),
+    "D4_jamba_train_chunk16": dict(arch="jamba_1_5_large_398b", shape="train_4k",
+                                   extra_cfg={"mamba_chunk": 16}),
+    "D5_jamba_train_chunk8": dict(arch="jamba_1_5_large_398b", shape="train_4k",
+                                  extra_cfg={"mamba_chunk": 8}),
+}
+
+
+def main():
+    names = sys.argv[1:] or list(EXPERIMENTS)
+    for n in names:
+        if n not in EXPERIMENTS:
+            print(f"unknown experiment {n!r}; have {list(EXPERIMENTS)}")
+            continue
+        try:
+            run(n, **EXPERIMENTS[n])
+        except Exception as e:
+            import traceback
+            print(f"[{n}] FAILED: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Roofline table generator — reads experiments/artifacts/*.json into the
+EXPERIMENTS.md §Roofline table and prints a console summary.
+
+Per (arch × shape × mesh): the three terms (compute/memory/collective
+seconds), dominant bottleneck, MODEL_FLOPS/HLO_FLOPS useful ratio, and a
+one-line "what would move the dominant term".
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "experiments" / "artifacts"
+
+_ADVICE = {
+    "compute_s": "at the compute roofline -- only model/precision changes help",
+    "memory_s": "cut activation traffic: fewer saved residuals, fused ops, bf16 stacks",
+    "collective_s": "cut wire bytes: reshard (less TP for small models), quantized collectives, overlap",
+}
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    out = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") == "skipped":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped: {r.get('reason','')[:40]} | — |"
+    if r.get("status") != "ok":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | {r.get('status')} | — |"
+    t = r["roofline"]
+    dom = t["dominant"].replace("_s", "")
+    useful = r.get("useful_flops_ratio")
+    frac = t.get("roofline_fraction_vs_compute")
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+            f"{t['collective_s']:.3f} | **{dom}** | {useful:.2f} | {frac:.2%} |")
+
+
+def table(mesh: str = "pod_16x16") -> str:
+    rows = [
+        f"### Roofline — {mesh} (per-device terms, seconds/step)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | bottleneck | useful FLOPs ratio | roofline fraction |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        rows.append(fmt_row(r))
+    return "\n".join(rows)
+
+
+def worst_cells(mesh: str = "pod_16x16", k: int = 6) -> list[tuple]:
+    recs = [r for r in load_records(mesh) if r.get("status") == "ok"]
+    scored = []
+    for r in recs:
+        t = r["roofline"]
+        frac = t.get("roofline_fraction_vs_compute") or 0.0
+        scored.append((frac, r["arch"], r["shape"], t["dominant"]))
+    return sorted(scored)[:k]
+
+
+def main() -> None:
+    print(table("pod_16x16"))
+    print()
+    print("worst roofline fractions (hillclimb candidates):")
+    for frac, arch, shape, dom in worst_cells():
+        print(f"  {frac:7.2%}  {arch} × {shape}  ({dom})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the assignment.  ``--full`` runs
+the paper-scale sizes (slower); default is CPU-quick.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from . import (bench_endpoints, bench_export, bench_kernels, bench_protocols,
+                   bench_query, bench_serde, bench_transfer)
+    suites = {
+        "transfer": bench_transfer,    # Fig 2/3
+        "export": bench_export,        # Fig 4
+        "protocols": bench_protocols,  # Fig 5/6
+        "query": bench_query,          # Fig 8/9
+        "endpoints": bench_endpoints,  # Fig 10
+        "serde": bench_serde,          # §1 claim
+        "kernels": bench_kernels,      # ours
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            for t in mod.run(quick=quick):
+                extra = f" {t.extra}" if t.extra else ""
+                print(t.csv() + extra, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline summary from the dry-run artifacts
+    try:
+        from .roofline import load_records
+        recs = [r for r in load_records("pod_16x16") if r.get("status") == "ok"]
+        for r in recs:
+            t = r["roofline"]
+            print(f"roofline_{r['arch']}__{r['shape']},"
+                  f"{t['step_time_lower_bound_s']*1e6:.0f},"
+                  f"dom={t['dominant']};frac={t['roofline_fraction_vs_compute']:.3f}")
+    except Exception as e:
+        print(f"roofline,ERROR,{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

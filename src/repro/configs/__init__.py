@@ -1,0 +1,12 @@
+from .base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ShapeSpec,
+    batch_logical_axes,
+    cell_supported,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    make_smoke_batch,
+    supported_cells,
+)

@@ -1,0 +1,142 @@
+"""Config registry: assigned architectures × input shapes.
+
+Each arch module defines ``CONFIG`` (exact assignment numbers) and
+``SMOKE_CONFIG`` (reduced same-family config for CPU tests).  ``input_specs``
+builds ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero
+allocation) for every model input of a (config, shape) cell.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm import ModelConfig
+
+ARCH_IDS = [
+    "moonshot_v1_16b_a3b",
+    "qwen3_moe_235b_a22b",
+    "deepseek_coder_33b",
+    "phi4_mini_3_8b",
+    "yi_6b",
+    "internlm2_1_8b",
+    "jamba_1_5_large_398b",
+    "xlstm_350m",
+    "phi_3_vision_4_2b",
+    "hubert_xlarge",
+]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.SMOKE_CONFIG
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment skip rules (DESIGN.md §5)."""
+    if cfg.family == "audio" and shape.kind == "decode":
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and cfg.family not in ("hybrid", "ssm"):
+        return False, "long_500k needs sub-quadratic attention (full-attention arch)"
+    return True, ""
+
+
+def supported_cells(arch_id: str) -> list[str]:
+    cfg = get_config(arch_id)
+    return [s for s, spec in SHAPES.items() if cell_supported(cfg, spec)[0]]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for every input of the lowered step (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            batch = {
+                "frames": sds((B, S, cfg.frontend_dim), f32),
+                "labels": sds((B, S), i32),
+                "mask": sds((B, S), f32),
+            }
+        elif cfg.frontend == "vision":
+            P = cfg.frontend_tokens
+            batch = {
+                "tokens": sds((B, S - P), i32),
+                "patches": sds((B, P, cfg.frontend_dim), f32),
+                "labels": sds((B, S - P), i32),
+            }
+        else:
+            batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if shape.kind == "prefill":
+            batch.pop("labels", None)
+            batch.pop("mask", None)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    return {"tokens": sds((B, 1), i32), "pos": sds((), i32)}
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Logical sharding axes for the input batch pytree."""
+    seq_shardable = shape.global_batch == 1  # long_500k: nothing to split on batch
+    b = None if seq_shardable else "batch"
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            axes = {"frames": (b, "seq", None), "labels": (b, "seq"), "mask": (b, "seq")}
+        elif cfg.frontend == "vision":
+            axes = {"tokens": (b, "seq"), "patches": (b, "seq", None), "labels": (b, "seq")}
+        else:
+            axes = {"tokens": (b, "seq"), "labels": (b, "seq")}
+        if shape.kind == "prefill":
+            axes.pop("labels", None)
+            axes.pop("mask", None)
+        return axes
+    return {"tokens": (b, None), "pos": ()}
+
+
+def make_smoke_batch(cfg: ModelConfig, batch: int = 2, seq: int = 32, rng=None) -> dict:
+    """Tiny concrete batch for CPU smoke tests."""
+    rng = rng or np.random.default_rng(0)
+    if cfg.frontend == "audio":
+        return {
+            "frames": jnp.asarray(rng.standard_normal((batch, seq, cfg.frontend_dim)), jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+            "mask": jnp.asarray(rng.integers(0, 2, (batch, seq)), jnp.float32),
+        }
+    if cfg.frontend == "vision":
+        P = cfg.frontend_tokens
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq - P)), jnp.int32),
+            "patches": jnp.asarray(rng.standard_normal((batch, P, cfg.frontend_dim)), jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq - P)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+    }

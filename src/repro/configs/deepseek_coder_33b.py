@@ -1,0 +1,35 @@
+"""deepseek-coder-33b [arXiv:2401.14196] — llama-arch dense.
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256.
+56 q heads don't divide the 16-way model axis: the grouped head layout pads
+q-heads 56→64 per kv group with exactly-masked zero heads (attention.py).
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab=32256,
+    rope_theta=100000.0,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="deepseek-coder-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=7,      # deliberately non-divisible: exercises head padding
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    shard_groups=2,  # pads 7q -> 8 over 2 groups; head_mask kills the pad
+)

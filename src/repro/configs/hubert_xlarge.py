@@ -1,0 +1,46 @@
+"""hubert-xlarge [arXiv:2106.07447] — encoder-only audio (w2v2 arch).
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (codebook targets).
+Encoder-only: bidirectional attention, masked-prediction loss, no decode
+shapes.  The conv waveform frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed 512-d frame embeddings.
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    norm_type="ln",
+    activation="gelu",
+    frontend="audio",
+    frontend_dim=512,
+    param_dtype=jnp.float32,
+    # 504-way codebook can't shard 16 ways; the table is 2.6 MB -- replicate
+    logical_rules={"vocab": None},
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="hubert-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=64,
+    causal=False,
+    norm_type="ln",
+    activation="gelu",
+    frontend="audio",
+    frontend_dim=32,
+    shard_groups=1,
+)

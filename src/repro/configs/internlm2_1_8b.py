@@ -1,0 +1,31 @@
+"""internlm2-1.8b [arXiv:2403.17297] — GQA dense.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=92544,
+    param_dtype=jnp.float32,   # small enough for f32 master params
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="internlm2-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab=512,
+    shard_groups=1,
+)

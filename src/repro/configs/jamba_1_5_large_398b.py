@@ -1,0 +1,51 @@
+"""jamba-1.5-large-398b [arXiv:2403.19887] — hybrid Mamba+attention, MoE.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2.
+Superblock of 8: attention at index 4, Mamba elsewhere (1:7); MoE every
+2nd layer (Jamba's e=16/2-layer period), dense FFN otherwise.
+Runs long_500k: Mamba state is O(1), the 9 attention layers use the
+sequence-sharded distributed flash-decode over the 500k KV cache.
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+from ..models.mamba import MambaConfig
+from ..models.moe import MoEConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    attn_period=8,
+    attn_index=4,
+    moe=MoEConfig(n_experts=16, top_k=2, d_model=8192, d_ff=24576),
+    moe_every=2,
+    moe_offset=1,
+    mamba=MambaConfig(d_model=8192, d_state=16, d_conv=4, expand=2),
+    param_dtype=jnp.bfloat16,
+    mamba_chunk=32,  # §Perf D3: best memory term of {16,32,64,128}
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="jamba-smoke",
+    family="hybrid",
+    n_layers=8,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=512,
+    attn_period=8,
+    attn_index=4,
+    moe=MoEConfig(n_experts=4, top_k=2, d_model=64, d_ff=128, capacity_factor=4.0),
+    moe_every=2,
+    moe_offset=1,
+    mamba=MambaConfig(d_model=64, d_state=4, d_conv=4, expand=2),
+    shard_groups=1,
+    mamba_chunk=8,
+)

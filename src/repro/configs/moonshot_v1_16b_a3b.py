@@ -1,0 +1,37 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B) [hf:moonshotai/Moonlight-16B-A3B].
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64e top-6.
+DeepSeek-V3-style family; we add 2 shared experts (Moonlight does; the
+first-layer-dense detail is dropped to keep the layer scan homogeneous —
+noted in DESIGN.md §Arch-applicability).
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+from ..models.moe import MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163840,
+    moe=MoEConfig(n_experts=64, top_k=6, d_model=2048, d_ff=1408, n_shared_experts=2),
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="moonshot-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=96,
+    vocab=512,
+    moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=96, n_shared_experts=2, capacity_factor=4.0),
+    shard_groups=1,
+)

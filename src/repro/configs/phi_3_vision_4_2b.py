@@ -1,0 +1,40 @@
+"""phi-3-vision-4.2b [hf:microsoft/Phi-3-vision-128k-instruct] — VLM.
+
+32L d_model=3072 32H (MHA kv=32) d_ff=8192 vocab=32064; phi3-mini backbone +
+CLIP ViT-L/14 frontend.  Per the assignment the frontend is a STUB:
+``input_specs()`` supplies 256 precomputed patch embeddings (CLIP d=1024)
+which the model projects and prepends to the text sequence.
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+    frontend="vision",
+    frontend_dim=1024,
+    frontend_tokens=256,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="phi3v-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=512,
+    frontend="vision",
+    frontend_dim=32,
+    frontend_tokens=8,
+    shard_groups=1,
+)

@@ -1,0 +1,40 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-*; assignment numbers].
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536 vocab=151936, MoE 128e top-8.
+Qwen3 uses qk-norm and no shared experts.
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+from ..models.moe import MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    moe=MoEConfig(n_experts=128, top_k=8, d_model=4096, d_ff=1536),
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen3-moe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=48,
+    vocab=512,
+    qk_norm=True,
+    moe=MoEConfig(n_experts=16, top_k=4, d_model=64, d_ff=48),
+    shard_groups=1,
+)

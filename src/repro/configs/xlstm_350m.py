@@ -1,0 +1,41 @@
+"""xlstm-350m [arXiv:2405.04517] — sLSTM + mLSTM blocks.
+
+24L d_model=1024 4H d_ff=0 (mixers carry their own projections) vocab=50304.
+Block ratio 3:1 mLSTM:sLSTM (paper's xLSTM[7:1] rounded to a 4-block
+superblock for the layer scan).  Runs long_500k via O(1) recurrent decode.
+"""
+import jax.numpy as jnp
+
+from ..models.lm import ModelConfig
+from ..models.xlstm import XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    norm_type="ln",
+    slstm_period=4,
+    xlstm=XLSTMConfig(d_model=1024, n_heads=4),
+    param_dtype=jnp.float32,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="xlstm-smoke",
+    family="ssm",
+    n_layers=4,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    d_ff=0,
+    vocab=512,
+    norm_type="ln",
+    slstm_period=4,
+    xlstm=XLSTMConfig(d_model=64, n_heads=2),
+    shard_groups=1,
+    mamba_chunk=8,
+)

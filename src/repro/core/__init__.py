@@ -1,0 +1,7 @@
+"""Core columnar format + Flight protocol (the paper's contribution)."""
+from . import schema as types  # noqa: F401
+from .array import Array, concat_arrays  # noqa: F401
+from .buffer import Bitmap, Buffer  # noqa: F401
+from .ipc import read_stream, write_stream  # noqa: F401
+from .recordbatch import RecordBatch, Table, batch_from_rows  # noqa: F401
+from .schema import Field, Schema, schema  # noqa: F401

@@ -1,0 +1,263 @@
+"""Columnar arrays: the Arrow Buffers layout (validity / offsets / values).
+
+Each ``Array`` owns 0-3 buffers depending on type (Table 2 of the paper):
+  primitive        -> [validity?, values]
+  utf8 / binary    -> [validity?, offsets(int32), values(uint8)]
+  list<T>          -> [validity?, offsets(int32)] + child Array
+  fixed_size_list  -> [validity?] + child Array
+
+Arrays are immutable; ``slice`` is zero-copy for values/offsets (offsets are
+re-based lazily via an ``offset`` field, like Arrow).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from .buffer import Bitmap, Buffer, pad_to
+from .schema import (
+    BinaryType,
+    DataType,
+    FixedSizeListType,
+    ListType,
+    PrimitiveType,
+    Utf8Type,
+    type_from_numpy,
+)
+
+
+class Array:
+    """An immutable columnar array of ``length`` values of ``type``."""
+
+    def __init__(
+        self,
+        type: DataType,
+        length: int,
+        validity: Bitmap | None,
+        buffers: list[Buffer],
+        children: list["Array"] | None = None,
+        offset: int = 0,
+    ):
+        self.type = type
+        self.length = length
+        self.validity = validity
+        self.buffers = buffers
+        self.children = children or []
+        self.offset = offset  # logical start into buffers (zero-copy slicing)
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def from_numpy(values: np.ndarray, mask: np.ndarray | None = None) -> "Array":
+        """Zero-copy from a 1-D numpy array (2-D becomes fixed_size_list)."""
+        if values.ndim == 2:
+            child = Array.from_numpy(np.ascontiguousarray(values).reshape(-1))
+            typ = FixedSizeListType(child.type, values.shape[1])
+            validity = Bitmap.from_bools(mask) if mask is not None else None
+            return Array(typ, values.shape[0], validity, [], [child])
+        if values.ndim != 1:
+            raise ValueError("from_numpy wants 1-D or 2-D")
+        typ = type_from_numpy(values.dtype)
+        validity = Bitmap.from_bools(mask) if mask is not None else None
+        return Array(typ, len(values), validity, [Buffer.from_array(values)])
+
+    @staticmethod
+    def from_pylist(values: Sequence[Any], type: DataType | None = None) -> "Array":
+        """Build from a python list; ``None`` entries become nulls."""
+        mask = np.array([v is not None for v in values], dtype=bool)
+        has_nulls = not mask.all()
+        validity = Bitmap.from_bools(mask) if has_nulls else None
+
+        if type is None:
+            type = _infer_type(values)
+
+        if isinstance(type, PrimitiveType):
+            np_vals = np.array(
+                [v if v is not None else 0 for v in values], dtype=type.np_dtype
+            )
+            return Array(type, len(values), validity, [Buffer.from_array(np_vals)])
+
+        if isinstance(type, (Utf8Type, BinaryType)):
+            encoded = [
+                (v.encode() if isinstance(v, str) else (v or b"")) for v in values
+            ]
+            offsets = np.zeros(len(values) + 1, dtype=np.int32)
+            np.cumsum([len(e) for e in encoded], out=offsets[1:])
+            data = b"".join(encoded)
+            return Array(
+                type,
+                len(values),
+                validity,
+                [Buffer.from_array(offsets), Buffer.from_bytes(data)],
+            )
+
+        if isinstance(type, ListType):
+            offsets = np.zeros(len(values) + 1, dtype=np.int32)
+            np.cumsum([len(v) if v is not None else 0 for v in values], out=offsets[1:])
+            flat: list[Any] = []
+            for v in values:
+                if v is not None:
+                    flat.extend(v)
+            child = Array.from_pylist(flat, type.value_type)
+            return Array(type, len(values), validity, [Buffer.from_array(offsets)], [child])
+
+        if isinstance(type, FixedSizeListType):
+            flat = []
+            for v in values:
+                if v is None:
+                    flat.extend([0] * type.list_size)
+                else:
+                    if len(v) != type.list_size:
+                        raise ValueError("fixed_size_list length mismatch")
+                    flat.extend(v)
+            child = Array.from_pylist(flat, type.value_type)
+            return Array(type, len(values), validity, [], [child])
+
+        raise TypeError(f"cannot build {type!r} from pylist")
+
+    # ------------------------------------------------------------------ #
+    # accessors
+    # ------------------------------------------------------------------ #
+    @property
+    def null_count(self) -> int:
+        if self.validity is None:
+            return 0
+        return self.validity.slice(self.offset, self.length).null_count() if (
+            self.offset or self.validity.length != self.length
+        ) else self.validity.null_count()
+
+    def is_valid(self, i: int) -> bool:
+        if self.validity is None:
+            return True
+        return self.validity.is_valid(self.offset + i)
+
+    def _values(self) -> np.ndarray:
+        """The raw values region (primitive types), honoring offset/length."""
+        assert isinstance(self.type, PrimitiveType)
+        v = self.buffers[0].view(self.type.np_dtype)
+        return v[self.offset : self.offset + self.length]
+
+    def _offsets(self) -> np.ndarray:
+        v = self.buffers[0].view(np.int32)
+        return v[self.offset : self.offset + self.length + 1]
+
+    def to_numpy(self, zero_copy: bool = True) -> np.ndarray:
+        """Values as numpy.  Primitive: zero-copy view.  fixed_size_list: 2-D view."""
+        if isinstance(self.type, PrimitiveType):
+            return self._values()
+        if isinstance(self.type, FixedSizeListType):
+            child = self.children[0]
+            sz = self.type.list_size
+            flat = child.to_numpy()[self.offset * sz : (self.offset + self.length) * sz]
+            return flat.reshape(self.length, sz)
+        raise TypeError(f"to_numpy unsupported for {self.type!r} (use to_pylist)")
+
+    def value(self, i: int):
+        if not self.is_valid(i):
+            return None
+        t = self.type
+        if isinstance(t, PrimitiveType):
+            return self._values()[i].item()
+        if isinstance(t, (Utf8Type, BinaryType)):
+            off = self._offsets()
+            raw = self.buffers[1].view(np.uint8)[off[i] : off[i + 1]].tobytes()
+            return raw.decode() if isinstance(t, Utf8Type) else raw
+        if isinstance(t, ListType):
+            off = self._offsets()
+            child = self.children[0]
+            return [child.value(j) for j in range(off[i], off[i + 1])]
+        if isinstance(t, FixedSizeListType):
+            sz, child = t.list_size, self.children[0]
+            s = (self.offset + i) * sz
+            return [child.value(j) for j in range(s, s + sz)]
+        raise TypeError(t)
+
+    def to_pylist(self) -> list:
+        return [self.value(i) for i in range(self.length)]
+
+    def slice(self, offset: int, length: int | None = None) -> "Array":
+        """Zero-copy logical slice."""
+        if length is None:
+            length = self.length - offset
+        if offset < 0 or offset + length > self.length:
+            raise IndexError(f"slice [{offset}, {offset + length}) of {self.length}")
+        return Array(
+            self.type, length, self.validity, self.buffers, self.children, self.offset + offset
+        )
+
+    def take(self, indices: np.ndarray) -> "Array":
+        """Gather rows (copies — it must)."""
+        indices = np.asarray(indices)
+        t = self.type
+        if isinstance(t, PrimitiveType):
+            vals = self._values()[indices]
+            mask = None
+            if self.validity is not None:
+                mask = self.validity.to_bools()[self.offset : self.offset + self.length][indices]
+            return Array.from_numpy(vals, mask)
+        # general path through python values (fine for tests/small data)
+        return Array.from_pylist([self.value(int(i)) for i in indices], t)
+
+    def nbytes(self) -> int:
+        n = sum(b.nbytes for b in self.buffers)
+        if self.validity is not None:
+            n += self.validity.buffer.nbytes
+        return n + sum(c.nbytes() for c in self.children)
+
+    def __len__(self) -> int:
+        return self.length
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Array):
+            return NotImplemented
+        return (
+            self.type == other.type
+            and self.length == other.length
+            and self.to_pylist() == other.to_pylist()
+        )
+
+    def __repr__(self) -> str:
+        head = self.to_pylist()[:6]
+        more = ", ..." if self.length > 6 else ""
+        return f"Array<{self.type!r}>[{self.length}]{head}{more}"
+
+
+def _infer_type(values: Sequence[Any]) -> DataType:
+    from .schema import binary, bool_, float64, int64, list_, utf8
+
+    for v in values:
+        if v is None:
+            continue
+        if isinstance(v, bool):
+            return bool_
+        if isinstance(v, int):
+            return int64
+        if isinstance(v, float):
+            return float64
+        if isinstance(v, str):
+            return utf8
+        if isinstance(v, bytes):
+            return binary
+        if isinstance(v, (list, tuple)):
+            return list_(_infer_type(v))
+        if isinstance(v, np.generic):
+            return type_from_numpy(v.dtype)
+        raise TypeError(f"cannot infer arrow type of {type(v)}")
+    return int64  # all-null column
+
+
+def concat_arrays(arrays: list[Array]) -> Array:
+    """Concatenate arrays of the same type (copies)."""
+    if not arrays:
+        raise ValueError("empty concat")
+    t = arrays[0].type
+    if any(a.type != t for a in arrays):
+        raise TypeError("concat type mismatch")
+    if isinstance(t, PrimitiveType) and all(a.validity is None for a in arrays):
+        return Array.from_numpy(np.concatenate([a._values() for a in arrays]))
+    out: list = []
+    for a in arrays:
+        out.extend(a.to_pylist())
+    return Array.from_pylist(out, t)

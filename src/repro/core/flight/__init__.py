@@ -1,0 +1,14 @@
+"""Arrow-Flight-style RPC: protocol, transports, server, client, netsim."""
+from .client import FlightClient, FlightExchange, FlightStreamReader, TransferStats  # noqa: F401
+from .protocol import (  # noqa: F401
+    Action,
+    ActionResult,
+    FlightDescriptor,
+    FlightEndpoint,
+    FlightError,
+    FlightInfo,
+    FlightUnavailableError,
+    Location,
+    Ticket,
+)
+from .server import FlightServerBase, InMemoryFlightServer  # noqa: F401

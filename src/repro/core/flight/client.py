@@ -1,0 +1,339 @@
+"""Flight client: single-stream RPCs + the parallel/hedged stream manager.
+
+Two connection modes, chosen by ``Location``:
+
+* ``inproc://`` — the client holds the server object; ``DoGet`` moves
+  ``RecordBatch`` references (zero-copy, models shared memory on one host).
+* ``tcp://host:port`` — framed IPC over a socket (see transport.py).
+
+``read_all_parallel`` implements the paper's throughput recipe: one worker
+per endpoint, ``max_streams`` concurrent connections (paper Fig 2: scale
+streams up to ~half the cores).  Because tickets are idempotent range reads,
+the same worker loop also provides **straggler mitigation**: a configurable
+hedge timer re-issues a slow endpoint's ticket against a replica location and
+takes whichever stream finishes first.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Iterator
+
+from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
+from ..recordbatch import RecordBatch, Table
+from ..schema import Schema
+from .protocol import (
+    Action,
+    ActionResult,
+    FlightDescriptor,
+    FlightEndpoint,
+    FlightError,
+    FlightInfo,
+    FlightUnavailableError,
+    Location,
+    Ticket,
+)
+from .server import FlightServerBase
+from .transport import KIND_CTRL, KIND_DATA, FrameConnection, dial
+
+
+# --------------------------------------------------------------------------
+# stream reader/writer handles
+# --------------------------------------------------------------------------
+
+
+class FlightStreamReader:
+    """Iterates RecordBatches of one DoGet stream."""
+
+    def __init__(self, schema: Schema, batches: Iterator[RecordBatch], on_done=None):
+        self.schema = schema
+        self._batches = batches
+        self._on_done = on_done
+
+    def __iter__(self) -> Iterator[RecordBatch]:
+        for b in self._batches:
+            yield b
+        if self._on_done:
+            self._on_done()
+
+    def read_all(self) -> Table:
+        return Table(list(self))
+
+
+class FlightStreamWriter:
+    """Feeds one DoPut stream; ``close()`` returns the server's stats ack."""
+
+    def __init__(self, schema: Schema, conn: FrameConnection | None, server: FlightServerBase | None,
+                 descriptor: FlightDescriptor):
+        self._schema = schema
+        self._conn = conn
+        self._queue: list[RecordBatch] = []
+        self._server = server
+        self._descriptor = descriptor
+        if conn is not None:
+            conn.send_data(encode_schema(schema))
+
+    def write_batch(self, batch: RecordBatch) -> None:
+        if batch.schema != self._schema:
+            raise FlightError("batch schema mismatch on DoPut stream")
+        if self._conn is not None:
+            self._conn.send_data(encode_batch(batch))
+        else:
+            self._queue.append(batch)
+
+    def close(self) -> dict:
+        if self._conn is not None:
+            self._conn.send_data(encode_eos())
+            ack = self._conn.recv_ctrl()
+            return ack.get("stats", {})
+        return self._server.do_put_impl(self._descriptor, self._schema, iter(self._queue))
+
+
+# --------------------------------------------------------------------------
+# client
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TransferStats:
+    rows: int = 0
+    bytes: int = 0
+    seconds: float = 0.0
+    streams: int = 1
+
+    @property
+    def mb_per_s(self) -> float:
+        return self.bytes / max(self.seconds, 1e-12) / 1e6
+
+
+class FlightClient:
+    def __init__(self, target: FlightServerBase | Location | str, token: str | None = None):
+        self._server: FlightServerBase | None = None
+        self._addr: tuple[str, int] | None = None
+        self.token = token
+        if isinstance(target, FlightServerBase):
+            self._server = target
+        else:
+            uri = target.uri if isinstance(target, Location) else target
+            if uri.startswith("inproc://"):
+                raise FlightError("inproc location needs the server object")
+            if not uri.startswith("tcp://"):
+                raise FlightError(f"unsupported location {uri!r}")
+            host, port = uri[len("tcp://") :].rsplit(":", 1)
+            self._addr = (host, int(port))
+        self._conn_pool: queue.SimpleQueue[FrameConnection] = queue.SimpleQueue()
+
+    # -- connection management ------------------------------------------- #
+    @property
+    def is_inproc(self) -> bool:
+        return self._server is not None
+
+    def _checkout(self) -> FrameConnection:
+        try:
+            return self._conn_pool.get_nowait()
+        except queue.Empty:
+            try:
+                return dial(*self._addr)
+            except OSError as e:
+                raise FlightUnavailableError(f"dial {self._addr}: {e}") from e
+
+    def _checkin(self, conn: FrameConnection) -> None:
+        self._conn_pool.put(conn)
+
+    def _request(self, payload: dict) -> dict:
+        payload.setdefault("token", self.token)
+        conn = self._checkout()
+        try:
+            conn.send_ctrl(payload)
+            resp = conn.recv_ctrl()
+        except (ConnectionError, OSError) as e:
+            conn.close()
+            raise FlightUnavailableError(str(e)) from e
+        self._checkin(conn)
+        return resp
+
+    # -- control plane ------------------------------------------------------ #
+    def get_flight_info(self, descriptor: FlightDescriptor) -> FlightInfo:
+        if self._server is not None:
+            return self._server.get_flight_info_impl(descriptor)
+        return FlightInfo.from_json(self._request(
+            {"method": "GetFlightInfo", "descriptor": descriptor.to_json()})["info"])
+
+    def list_flights(self) -> list[FlightInfo]:
+        if self._server is not None:
+            return self._server.list_flights_impl()
+        return [FlightInfo.from_json(o) for o in self._request({"method": "ListFlights"})["infos"]]
+
+    def do_action(self, action: Action | str) -> list[ActionResult]:
+        if isinstance(action, str):
+            action = Action(action)
+        if self._server is not None:
+            return self._server.do_action_impl(action)
+        return [ActionResult.from_json(o)
+                for o in self._request({"method": "DoAction", "action": action.to_json()})["results"]]
+
+    # -- data plane ----------------------------------------------------------- #
+    def do_get(self, ticket: Ticket) -> FlightStreamReader:
+        if self._server is not None:
+            schema, batches = self._server.do_get_impl(ticket)
+            return FlightStreamReader(schema, batches)
+        conn = self._checkout()
+        try:
+            conn.send_ctrl({"method": "DoGet", "ticket": ticket.to_json(), "token": self.token})
+            conn.recv_ctrl()  # ok / error
+            kind, meta, body = conn.recv_frame()
+            msg = decode_message(meta, body)
+            if msg.kind != "schema":
+                raise FlightError("DoGet: expected schema message")
+        except (ConnectionError, OSError) as e:
+            conn.close()
+            raise FlightUnavailableError(str(e)) from e
+        schema = msg.schema
+
+        def gen() -> Iterator[RecordBatch]:
+            while True:
+                k, m, b = conn.recv_frame()
+                dm = decode_message(m, b)
+                if dm.kind == "eos":
+                    return
+                yield dm.batch(schema)
+
+        return FlightStreamReader(schema, gen(), on_done=lambda: self._checkin(conn))
+
+    def do_put(self, descriptor: FlightDescriptor, schema: Schema) -> FlightStreamWriter:
+        if self._server is not None:
+            return FlightStreamWriter(schema, None, self._server, descriptor)
+        conn = self._checkout()
+        conn.send_ctrl({"method": "DoPut", "descriptor": descriptor.to_json(), "token": self.token})
+        conn.recv_ctrl()
+        return FlightStreamWriter(schema, conn, None, descriptor)
+
+    def do_exchange(self, descriptor: FlightDescriptor, schema: Schema) -> "FlightExchange":
+        return FlightExchange(self, descriptor, schema)
+
+    # -- parallel stream manager (the paper's Fig 2/3 engine) ---------------- #
+    def read_all_parallel(
+        self,
+        info: FlightInfo,
+        max_streams: int = 8,
+        hedge_after: float | None = None,
+        client_factory=None,
+    ) -> tuple[Table, TransferStats]:
+        """Pull every endpoint of ``info`` with up to ``max_streams`` parallel
+        DoGet streams.  ``hedge_after`` seconds without completion re-issues
+        the ticket on a replica location (straggler mitigation).
+        ``client_factory(location) -> FlightClient`` lets hedges cross hosts.
+        """
+        endpoints = list(info.endpoints)
+        results: list[list[RecordBatch] | None] = [None] * len(endpoints)
+        t0 = time.perf_counter()
+
+        def fetch(i: int, ep: FlightEndpoint) -> None:
+            def attempt(client: "FlightClient") -> list[RecordBatch]:
+                return list(client.do_get(ep.ticket))
+
+            if hedge_after is None:
+                results[i] = attempt(self)
+                return
+            done = threading.Event()
+            winner: list[list[RecordBatch]] = []
+
+            def primary():
+                try:
+                    out = attempt(self)
+                    if not done.is_set():
+                        winner.append(out)
+                        done.set()
+                except FlightError:
+                    pass
+
+            pt = threading.Thread(target=primary, daemon=True)
+            pt.start()
+            if not done.wait(hedge_after):
+                # hedge on a replica (or retry same server if no factory)
+                for loc in ep.locations:
+                    try:
+                        client = client_factory(loc) if client_factory else self
+                        out = attempt(client)
+                        if not done.is_set():
+                            winner.append(out)
+                            done.set()
+                        break
+                    except FlightError:
+                        continue
+                done.wait()
+            results[i] = winner[0]
+
+        with ThreadPoolExecutor(max_workers=max_streams) as pool:
+            list(pool.map(lambda args: fetch(*args), enumerate(endpoints)))
+
+        batches = [b for r in results for b in (r or [])]
+        dt = time.perf_counter() - t0
+        table = Table(batches)
+        return table, TransferStats(table.num_rows, table.nbytes(), dt, min(max_streams, len(endpoints)))
+
+    def write_parallel(
+        self,
+        descriptor: FlightDescriptor,
+        batches: list[RecordBatch],
+        max_streams: int = 8,
+    ) -> TransferStats:
+        """DoPut the batches over N parallel streams (round-robin)."""
+        schema = batches[0].schema
+        shards = [batches[i::max_streams] for i in range(max_streams)]
+        shards = [s for s in shards if s]
+        t0 = time.perf_counter()
+
+        def put(shard: list[RecordBatch]) -> None:
+            w = self.do_put(descriptor, schema)
+            for b in shard:
+                w.write_batch(b)
+            w.close()
+
+        with ThreadPoolExecutor(max_workers=len(shards)) as pool:
+            list(pool.map(put, shards))
+        dt = time.perf_counter() - t0
+        return TransferStats(
+            sum(b.num_rows for b in batches), sum(b.nbytes() for b in batches), dt, len(shards)
+        )
+
+
+class FlightExchange:
+    """Bidirectional per-batch exchange (the scoring-microservice verb)."""
+
+    def __init__(self, client: FlightClient, descriptor: FlightDescriptor, schema: Schema):
+        self._client = client
+        self._schema = schema
+        self._descriptor = descriptor
+        self._out_schema: Schema | None = None
+        if client.is_inproc:
+            self._conn = None
+        else:
+            self._conn = client._checkout()
+            self._conn.send_ctrl(
+                {"method": "DoExchange", "descriptor": descriptor.to_json(), "token": client.token}
+            )
+            self._conn.recv_ctrl()
+            self._conn.send_data(encode_schema(schema))
+
+    def exchange(self, batch: RecordBatch) -> RecordBatch:
+        if self._conn is None:
+            return self._client._server.do_exchange_impl(self._descriptor, self._schema, batch)
+        self._conn.send_data(encode_batch(batch))
+        kind, meta, body = self._conn.recv_frame()
+        msg = decode_message(meta, body)
+        if msg.kind == "schema":
+            self._out_schema = msg.schema
+            kind, meta, body = self._conn.recv_frame()
+            msg = decode_message(meta, body)
+        return msg.batch(self._out_schema or self._schema)
+
+    def close(self) -> None:
+        if self._conn is not None:
+            self._conn.send_data(encode_eos())
+            kind, meta, body = self._conn.recv_frame()  # server EOS
+            self._client._checkin(self._conn)
+            self._conn = None

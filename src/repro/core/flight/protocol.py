@@ -1,0 +1,166 @@
+"""Flight control-plane messages (Fig 1 of the paper).
+
+Semantics mirror Arrow Flight RPC: a client asks ``GetFlightInfo(descriptor)``
+and receives a ``FlightInfo`` whose ``endpoints`` carry ``Ticket``s — opaque,
+idempotent handles to streams of RecordBatches, each with one or more
+``locations`` (replicas).  ``DoGet(ticket)`` pulls a stream; ``DoPut``
+pushes one.  Tickets being *range reads* (dataset, start, stop) is what makes
+parallel streams, resumable loaders, and hedged (straggler-mitigating) reads
+trivial — the property the data plane exploits.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+from ..schema import Schema
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FlightDescriptor:
+    """Names a dataset: a path (storage) or a command (query plan)."""
+
+    path: tuple[str, ...] | None = None
+    command: bytes | None = None
+
+    @classmethod
+    def for_path(cls, *path: str) -> "FlightDescriptor":
+        return cls(path=tuple(path))
+
+    @classmethod
+    def for_command(cls, command: bytes | str) -> "FlightDescriptor":
+        if isinstance(command, str):
+            command = command.encode()
+        return cls(command=command)
+
+    @property
+    def key(self) -> str:
+        if self.path is not None:
+            return "path:" + "/".join(self.path)
+        return "cmd:" + (self.command or b"").decode("utf-8", "replace")
+
+    def to_json(self) -> dict:
+        return {
+            "path": list(self.path) if self.path is not None else None,
+            "command": self.command.decode("latin1") if self.command is not None else None,
+        }
+
+    @classmethod
+    def from_json(cls, o: dict) -> "FlightDescriptor":
+        return cls(
+            path=tuple(o["path"]) if o.get("path") is not None else None,
+            command=o["command"].encode("latin1") if o.get("command") is not None else None,
+        )
+
+
+@dataclass(frozen=True)
+class Ticket:
+    """Opaque stream handle.  We structure ours as an idempotent range read."""
+
+    raw: bytes
+
+    @classmethod
+    def for_range(cls, dataset: str, start: int, stop: int, **extra: Any) -> "Ticket":
+        return cls(json.dumps({"dataset": dataset, "start": start, "stop": stop, **extra}).encode())
+
+    def range(self) -> dict:
+        return json.loads(self.raw.decode())
+
+    def to_json(self) -> dict:
+        return {"raw": self.raw.decode("latin1")}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "Ticket":
+        return cls(o["raw"].encode("latin1"))
+
+
+@dataclass(frozen=True)
+class Location:
+    """Where a ticket can be redeemed.  ``inproc:`` or ``tcp://host:port``."""
+
+    uri: str
+
+    @classmethod
+    def for_tcp(cls, host: str, port: int) -> "Location":
+        return cls(f"tcp://{host}:{port}")
+
+    @classmethod
+    def inproc(cls, name: str = "local") -> "Location":
+        return cls(f"inproc://{name}")
+
+
+@dataclass(frozen=True)
+class FlightEndpoint:
+    ticket: Ticket
+    locations: tuple[Location, ...] = ()
+
+    def to_json(self) -> dict:
+        return {"ticket": self.ticket.to_json(), "locations": [l.uri for l in self.locations]}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "FlightEndpoint":
+        return cls(Ticket.from_json(o["ticket"]), tuple(Location(u) for u in o["locations"]))
+
+
+@dataclass
+class FlightInfo:
+    schema: Schema
+    descriptor: FlightDescriptor
+    endpoints: list[FlightEndpoint]
+    total_records: int = -1
+    total_bytes: int = -1
+
+    def to_json(self) -> dict:
+        return {
+            "schema": self.schema.to_json(),
+            "descriptor": self.descriptor.to_json(),
+            "endpoints": [e.to_json() for e in self.endpoints],
+            "total_records": self.total_records,
+            "total_bytes": self.total_bytes,
+        }
+
+    @classmethod
+    def from_json(cls, o: dict) -> "FlightInfo":
+        return cls(
+            Schema.from_json(o["schema"]),
+            FlightDescriptor.from_json(o["descriptor"]),
+            [FlightEndpoint.from_json(e) for e in o["endpoints"]],
+            o["total_records"],
+            o["total_bytes"],
+        )
+
+
+@dataclass(frozen=True)
+class Action:
+    type: str
+    body: bytes = b""
+
+    def to_json(self) -> dict:
+        return {"type": self.type, "body": self.body.decode("latin1")}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "Action":
+        return cls(o["type"], o["body"].encode("latin1"))
+
+
+@dataclass(frozen=True)
+class ActionResult:
+    body: bytes
+
+    def to_json(self) -> dict:
+        return {"body": self.body.decode("latin1")}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "ActionResult":
+        return cls(o["body"].encode("latin1"))
+
+
+class FlightError(RuntimeError):
+    pass
+
+
+class FlightUnavailableError(FlightError):
+    """Endpoint unreachable — callers may fail over to a replica location."""

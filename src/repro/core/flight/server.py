@@ -1,0 +1,274 @@
+"""Flight server: RPC dispatch + an in-memory store implementation.
+
+``FlightServerBase`` defines the six verbs (GetFlightInfo, ListFlights,
+DoGet, DoPut, DoAction, DoExchange) against abstract handlers; it can be
+used in-process (zero-copy object handoff) or served over TCP via
+``serve_tcp`` (thread per connection, streaming IPC frames).
+
+``InMemoryFlightServer`` is the paper's "simple data producer with an
+InMemoryStore" (§4.2.2) — datasets are lists of RecordBatches keyed by
+descriptor path; tickets are idempotent (dataset, start, stop) range reads,
+so any batch range can be re-fetched (hedged reads / resume).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Iterable, Iterator
+
+from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
+from ..recordbatch import RecordBatch
+from ..schema import Schema
+from .protocol import (
+    Action,
+    ActionResult,
+    FlightDescriptor,
+    FlightEndpoint,
+    FlightError,
+    FlightInfo,
+    Location,
+    Ticket,
+)
+from .transport import KIND_CTRL, KIND_DATA, FrameConnection, SocketListener
+
+
+class FlightServerBase:
+    """Override the ``*_impl`` handlers to build a service."""
+
+    def __init__(self, location_name: str = "local", auth_token: str | None = None):
+        self.location_name = location_name
+        self.auth_token = auth_token
+        self._listener: SocketListener | None = None
+
+    # -- handlers to override ------------------------------------------- #
+    def list_flights_impl(self) -> list[FlightInfo]:
+        raise NotImplementedError
+
+    def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
+        raise NotImplementedError
+
+    def do_get_impl(self, ticket: Ticket) -> tuple[Schema, Iterator[RecordBatch]]:
+        raise NotImplementedError
+
+    def do_put_impl(
+        self, descriptor: FlightDescriptor, schema: Schema, batches: Iterator[RecordBatch]
+    ) -> dict:
+        raise NotImplementedError
+
+    def do_action_impl(self, action: Action) -> list[ActionResult]:
+        raise NotImplementedError
+
+    def do_exchange_impl(
+        self, descriptor: FlightDescriptor, schema: Schema, batch: RecordBatch
+    ) -> RecordBatch:
+        """Per-batch bidirectional handler (scoring microservice pattern)."""
+        raise NotImplementedError
+
+    # -- locations -------------------------------------------------------- #
+    def locations(self) -> tuple[Location, ...]:
+        locs: list[Location] = [Location.inproc(self.location_name)]
+        if self._listener is not None:
+            locs.append(Location.for_tcp(self._listener.host, self._listener.port))
+        return tuple(locs)
+
+    # -- TCP serving ------------------------------------------------------ #
+    def serve_tcp(self, host: str = "127.0.0.1", port: int = 0) -> "FlightServerBase":
+        self._listener = SocketListener(self._handle_connection, host, port).start()
+        return self
+
+    @property
+    def port(self) -> int:
+        assert self._listener is not None, "serve_tcp() first"
+        return self._listener.port
+
+    def shutdown(self) -> None:
+        if self._listener is not None:
+            self._listener.stop()
+            self._listener = None
+
+    # -- dispatch ---------------------------------------------------------- #
+    def _check_auth(self, req: dict) -> None:
+        if self.auth_token is not None and req.get("token") != self.auth_token:
+            raise FlightError("unauthenticated: bad or missing token")
+
+    def _handle_connection(self, conn: FrameConnection) -> None:
+        """One connection = a sequence of RPCs (like an HTTP/2 channel)."""
+        while True:
+            try:
+                kind, req, _ = conn.recv_frame()
+            except (ConnectionError, OSError):
+                return
+            if kind != KIND_CTRL:
+                raise FlightError("expected control frame opening an RPC")
+            method = req.get("method")
+            try:
+                self._check_auth(req)
+                if method == "GetFlightInfo":
+                    info = self.get_flight_info_impl(FlightDescriptor.from_json(req["descriptor"]))
+                    conn.send_ctrl({"info": info.to_json()})
+                elif method == "ListFlights":
+                    infos = self.list_flights_impl()
+                    conn.send_ctrl({"infos": [i.to_json() for i in infos]})
+                elif method == "DoAction":
+                    results = self.do_action_impl(Action.from_json(req["action"]))
+                    conn.send_ctrl({"results": [r.to_json() for r in results]})
+                elif method == "DoGet":
+                    self._serve_do_get(conn, Ticket.from_json(req["ticket"]))
+                elif method == "DoPut":
+                    self._serve_do_put(conn, FlightDescriptor.from_json(req["descriptor"]))
+                elif method == "DoExchange":
+                    self._serve_do_exchange(conn, FlightDescriptor.from_json(req["descriptor"]))
+                elif method == "Handshake":
+                    conn.send_ctrl({"ok": True})
+                else:
+                    raise FlightError(f"unknown method {method!r}")
+            except FlightError as e:
+                conn.send_ctrl({"error": str(e)})
+
+    def _serve_do_get(self, conn: FrameConnection, ticket: Ticket) -> None:
+        schema, batches = self.do_get_impl(ticket)
+        conn.send_ctrl({"ok": True})
+        conn.send_data(encode_schema(schema))
+        for b in batches:
+            conn.send_data(encode_batch(b))
+        conn.send_data(encode_eos())
+
+    def _recv_stream(self, conn: FrameConnection) -> tuple[Schema, Iterator[RecordBatch]]:
+        kind, meta, body = conn.recv_frame()
+        if kind != KIND_DATA:
+            raise FlightError("expected schema message")
+        msg = decode_message(meta, body)
+        if msg.kind != "schema":
+            raise FlightError(f"expected schema, got {msg.kind}")
+        schema = msg.schema
+
+        def gen() -> Iterator[RecordBatch]:
+            while True:
+                k, m, b = conn.recv_frame()
+                if k != KIND_DATA:
+                    raise FlightError("expected data frame in stream")
+                dm = decode_message(m, b)
+                if dm.kind == "eos":
+                    return
+                yield dm.batch(schema)
+
+        return schema, gen()
+
+    def _serve_do_put(self, conn: FrameConnection, descriptor: FlightDescriptor) -> None:
+        conn.send_ctrl({"ok": True})
+        schema, batches = self._recv_stream(conn)
+        stats = self.do_put_impl(descriptor, schema, batches)
+        conn.send_ctrl({"ok": True, "stats": stats})
+
+    def _serve_do_exchange(self, conn: FrameConnection, descriptor: FlightDescriptor) -> None:
+        conn.send_ctrl({"ok": True})
+        kind, meta, body = conn.recv_frame()
+        msg = decode_message(meta, body)
+        if msg.kind != "schema":
+            raise FlightError("exchange: expected schema first")
+        in_schema = msg.schema
+        out_schema_sent = False
+        while True:
+            k, m, b = conn.recv_frame()
+            dm = decode_message(m, b)
+            if dm.kind == "eos":
+                conn.send_data(encode_eos())
+                return
+            out = self.do_exchange_impl(descriptor, in_schema, dm.batch(in_schema))
+            if not out_schema_sent:
+                conn.send_data(encode_schema(out.schema))
+                out_schema_sent = True
+            conn.send_data(encode_batch(out))
+
+
+class InMemoryFlightServer(FlightServerBase):
+    """Dataset store: descriptor path[0] -> list[RecordBatch]."""
+
+    def __init__(
+        self,
+        location_name: str = "local",
+        auth_token: str | None = None,
+        batches_per_endpoint: int = 0,
+    ):
+        super().__init__(location_name, auth_token)
+        self._store: dict[str, list[RecordBatch]] = {}
+        self._schemas: dict[str, Schema] = {}
+        self._lock = threading.Lock()
+        self.batches_per_endpoint = batches_per_endpoint  # 0 = single endpoint
+
+    # -- direct (in-proc) API ------------------------------------------- #
+    def add_dataset(self, name: str, batches: list[RecordBatch]) -> None:
+        with self._lock:
+            self._store[name] = list(batches)
+            self._schemas[name] = batches[0].schema
+
+    def dataset(self, name: str) -> list[RecordBatch]:
+        return self._store[name]
+
+    # -- handlers ---------------------------------------------------------- #
+    def _info_for(self, name: str) -> FlightInfo:
+        batches = self._store[name]
+        n = len(batches)
+        per = self.batches_per_endpoint or n or 1
+        endpoints = [
+            FlightEndpoint(Ticket.for_range(name, i, min(i + per, n)), self.locations())
+            for i in range(0, max(n, 1), per)
+        ]
+        return FlightInfo(
+            self._schemas[name],
+            FlightDescriptor.for_path(name),
+            endpoints,
+            total_records=sum(b.num_rows for b in batches),
+            total_bytes=sum(b.nbytes() for b in batches),
+        )
+
+    def list_flights_impl(self) -> list[FlightInfo]:
+        with self._lock:
+            return [self._info_for(name) for name in self._store]
+
+    def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
+        if descriptor.path is None:
+            raise FlightError("in-memory store resolves path descriptors only")
+        name = descriptor.path[0]
+        with self._lock:
+            if name not in self._store:
+                raise FlightError(f"no such flight: {name}")
+            return self._info_for(name)
+
+    def do_get_impl(self, ticket: Ticket) -> tuple[Schema, Iterator[RecordBatch]]:
+        r = ticket.range()
+        name = r["dataset"]
+        with self._lock:
+            if name not in self._store:
+                raise FlightError(f"no such flight: {name}")
+            batches = self._store[name][r["start"] : r["stop"]]
+            schema = self._schemas[name]
+        return schema, iter(batches)
+
+    def do_put_impl(self, descriptor, schema, batches) -> dict:
+        name = descriptor.path[0] if descriptor.path else descriptor.key
+        received = list(batches)
+        with self._lock:
+            self._store.setdefault(name, [])
+            self._store[name].extend(received)
+            self._schemas.setdefault(name, schema)
+        return {
+            "batches": len(received),
+            "rows": sum(b.num_rows for b in received),
+            "bytes": sum(b.nbytes() for b in received),
+        }
+
+    def do_action_impl(self, action: Action) -> list[ActionResult]:
+        if action.type == "drop":
+            with self._lock:
+                self._store.pop(action.body.decode(), None)
+            return [ActionResult(b"dropped")]
+        if action.type == "list-names":
+            with self._lock:
+                names = ",".join(self._store)
+            return [ActionResult(names.encode())]
+        if action.type == "health":
+            return [ActionResult(b"ok")]
+        raise FlightError(f"unknown action {action.type!r}")
+
+    def do_exchange_impl(self, descriptor, schema, batch) -> RecordBatch:
+        return batch  # echo; scoring services override

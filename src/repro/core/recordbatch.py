@@ -1,0 +1,160 @@
+"""RecordBatch / Table — the unit the paper ships over the wire.
+
+A ``RecordBatch`` is a schema plus equal-length columnar ``Array``s.  All
+row-wise APIs exist only for tests/interoperability; the hot paths
+(slice/select/IPC) never touch individual rows — that is the paper's point.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, Sequence
+
+import numpy as np
+
+from .array import Array, concat_arrays
+from .schema import Field, Schema
+
+class RecordBatch:
+    def __init__(self, schema: Schema, columns: list[Array]):
+        if len(schema) != len(columns):
+            raise ValueError(f"schema has {len(schema)} fields, got {len(columns)} columns")
+        lengths = {len(c) for c in columns}
+        if len(lengths) > 1:
+            raise ValueError(f"ragged columns: {sorted(lengths)}")
+        for f, c in zip(schema.fields, columns):
+            if f.type != c.type:
+                raise TypeError(f"column {f.name!r}: schema {f.type!r} != array {c.type!r}")
+            if not f.nullable and c.null_count:
+                raise ValueError(f"non-nullable column {f.name!r} has nulls")
+        self.schema = schema
+        self.columns = list(columns)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_pydict(cls, data: dict[str, Any], schema: Schema | None = None) -> "RecordBatch":
+        cols, fields = [], []
+        for name, values in data.items():
+            want = schema.field(name).type if schema is not None else None
+            if isinstance(values, np.ndarray):
+                arr = Array.from_numpy(values)
+            elif isinstance(values, Array):
+                arr = values
+            else:
+                arr = Array.from_pylist(values, want)
+            cols.append(arr)
+            fields.append(Field(name, arr.type, nullable=True))
+        return cls(schema or Schema(tuple(fields)), cols)
+
+    @classmethod
+    def from_numpy(cls, data: dict[str, np.ndarray]) -> "RecordBatch":
+        return cls.from_pydict(data)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def num_rows(self) -> int:
+        return len(self.columns[0]) if self.columns else 0
+
+    @property
+    def num_columns(self) -> int:
+        return len(self.columns)
+
+    def column(self, key: str | int) -> Array:
+        if isinstance(key, str):
+            key = self.schema.index(key)
+        return self.columns[key]
+
+    def __getitem__(self, key: str | int) -> Array:
+        return self.column(key)
+
+    def nbytes(self) -> int:
+        return sum(c.nbytes() for c in self.columns)
+
+    # -- zero-copy transforms (the wire-speed ops) ----------------------- #
+    def slice(self, offset: int, length: int | None = None) -> "RecordBatch":
+        if length is None:
+            length = self.num_rows - offset
+        return RecordBatch(self.schema, [c.slice(offset, length) for c in self.columns])
+
+    def select(self, names: Sequence[str]) -> "RecordBatch":
+        """Projection pushdown primitive: column subset, zero-copy."""
+        idx = [self.schema.index(n) for n in names]
+        return RecordBatch(self.schema.select(list(names)), [self.columns[i] for i in idx])
+
+    def take(self, indices: np.ndarray) -> "RecordBatch":
+        return RecordBatch(self.schema, [c.take(indices) for c in self.columns])
+
+    def filter(self, mask: np.ndarray) -> "RecordBatch":
+        return self.take(np.nonzero(np.asarray(mask, dtype=bool))[0])
+
+    # -- row-wise views (tests / baselines only) ------------------------- #
+    def to_pydict(self) -> dict[str, list]:
+        return {f.name: c.to_pylist() for f, c in zip(self.schema.fields, self.columns)}
+
+    def to_rows(self) -> list[tuple]:
+        """Row materialization — deliberately the slow path (ODBC-sim uses it)."""
+        cols = [c.to_pylist() for c in self.columns]
+        return list(zip(*cols)) if cols else []
+
+    def iter_rows(self) -> Iterator[tuple]:
+        for i in range(self.num_rows):
+            yield tuple(c.value(i) for c in self.columns)
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, RecordBatch):
+            return NotImplemented
+        return self.schema == other.schema and all(
+            a == b for a, b in zip(self.columns, other.columns)
+        )
+
+    def __repr__(self) -> str:
+        return f"RecordBatch({self.num_rows} rows, {self.num_columns} cols, {self.nbytes()}B)"
+
+
+class Table:
+    """A sequence of same-schema RecordBatches (a Flight stream's payload)."""
+
+    def __init__(self, batches: list[RecordBatch]):
+        if not batches:
+            raise ValueError("Table needs >=1 batch")
+        s = batches[0].schema
+        for b in batches[1:]:
+            if b.schema != s:
+                raise ValueError("schema mismatch across batches")
+        self.batches = list(batches)
+
+    @property
+    def schema(self) -> Schema:
+        return self.batches[0].schema
+
+    @property
+    def num_rows(self) -> int:
+        return sum(b.num_rows for b in self.batches)
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes() for b in self.batches)
+
+    def combine(self) -> RecordBatch:
+        if len(self.batches) == 1:
+            return self.batches[0]
+        cols = [
+            concat_arrays([b.columns[i] for b in self.batches])
+            for i in range(self.batches[0].num_columns)
+        ]
+        return RecordBatch(self.schema, cols)
+
+    def to_pydict(self) -> dict[str, list]:
+        return self.combine().to_pydict()
+
+    def __iter__(self):
+        return iter(self.batches)
+
+    def __repr__(self) -> str:
+        return f"Table({len(self.batches)} batches, {self.num_rows} rows)"
+
+
+def batch_from_rows(schema: Schema, rows: list[tuple]) -> RecordBatch:
+    """Row→column materialization (the expensive direction; used by the
+    'hot blocks' export benchmark to reproduce Fig 4's cliff)."""
+    cols = []
+    for i, f in enumerate(schema.fields):
+        cols.append(Array.from_pylist([r[i] for r in rows], f.type))
+    return RecordBatch(schema, cols)

@@ -1,0 +1,221 @@
+"""Schema / DataType layer — names + types + nullability for RecordBatches.
+
+Mirrors the Arrow type system closely enough for the paper's use cases:
+fixed-width primitives, variable-width binary/utf8, lists, and fixed-size
+lists (the tensor-friendly type the data plane uses for embeddings).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field as dc_field
+from typing import Any
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Data types
+# --------------------------------------------------------------------------
+
+
+class DataType:
+    """Base type. ``id`` is the wire tag; fixed-width types carry numpy dtype."""
+
+    id: str = "?"
+
+    @property
+    def is_primitive(self) -> bool:
+        return isinstance(self, PrimitiveType)
+
+    @property
+    def is_varlen(self) -> bool:
+        return isinstance(self, (Utf8Type, BinaryType, ListType))
+
+    def to_json(self) -> dict:
+        return {"id": self.id}
+
+    def __eq__(self, other):
+        return type(self) is type(other) and self.to_json() == other.to_json()
+
+    def __hash__(self):
+        return hash(json.dumps(self.to_json(), sort_keys=True))
+
+    def __repr__(self):
+        return self.id
+
+
+@dataclass(frozen=True, eq=False, repr=False)
+class PrimitiveType(DataType):
+    """Fixed-width type backed by a numpy dtype (int/uint/float/bool)."""
+
+    np_dtype: np.dtype
+
+    @property
+    def id(self) -> str:  # type: ignore[override]
+        return self.np_dtype.name
+
+    @property
+    def itemsize(self) -> int:
+        return self.np_dtype.itemsize
+
+    def to_json(self) -> dict:
+        return {"id": "primitive", "dtype": self.np_dtype.str}
+
+
+class Utf8Type(DataType):
+    id = "utf8"
+
+
+class BinaryType(DataType):
+    id = "binary"
+
+
+@dataclass(frozen=True, eq=False, repr=False)
+class ListType(DataType):
+    """Variable-length list of a child type (offsets + child array)."""
+
+    value_type: DataType
+
+    @property
+    def id(self) -> str:  # type: ignore[override]
+        return f"list<{self.value_type.id}>"
+
+    def to_json(self) -> dict:
+        return {"id": "list", "value": self.value_type.to_json()}
+
+
+@dataclass(frozen=True, eq=False, repr=False)
+class FixedSizeListType(DataType):
+    """Fixed-size list — the embedding/tensor column type (no offsets buffer)."""
+
+    value_type: DataType
+    list_size: int
+
+    @property
+    def id(self) -> str:  # type: ignore[override]
+        return f"fixed_size_list<{self.value_type.id}>[{self.list_size}]"
+
+    def to_json(self) -> dict:
+        return {"id": "fixed_size_list", "value": self.value_type.to_json(), "size": self.list_size}
+
+
+# Convenience singletons (Arrow-style constructors)
+def _prim(np_dt) -> PrimitiveType:
+    return PrimitiveType(np.dtype(np_dt))
+
+
+int8, int16, int32, int64 = _prim("int8"), _prim("int16"), _prim("int32"), _prim("int64")
+uint8, uint16, uint32, uint64 = _prim("uint8"), _prim("uint16"), _prim("uint32"), _prim("uint64")
+float16, float32, float64 = _prim("float16"), _prim("float32"), _prim("float64")
+bool_ = _prim("bool")
+utf8 = Utf8Type()
+binary = BinaryType()
+
+
+def list_(value_type: DataType) -> ListType:
+    return ListType(value_type)
+
+
+def fixed_size_list(value_type: DataType, size: int) -> FixedSizeListType:
+    return FixedSizeListType(value_type, size)
+
+
+def type_from_json(obj: dict) -> DataType:
+    tid = obj["id"]
+    if tid == "primitive":
+        return PrimitiveType(np.dtype(obj["dtype"]))
+    if tid == "utf8":
+        return utf8
+    if tid == "binary":
+        return binary
+    if tid == "list":
+        return ListType(type_from_json(obj["value"]))
+    if tid == "fixed_size_list":
+        return FixedSizeListType(type_from_json(obj["value"]), obj["size"])
+    raise ValueError(f"unknown type id {tid!r}")
+
+
+def type_from_numpy(dt) -> PrimitiveType:
+    return PrimitiveType(np.dtype(dt))
+
+
+# --------------------------------------------------------------------------
+# Field / Schema
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Field:
+    name: str
+    type: DataType
+    nullable: bool = True
+    metadata: dict = dc_field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "type": self.type.to_json(),
+            "nullable": self.nullable,
+            "metadata": self.metadata,
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "Field":
+        return cls(obj["name"], type_from_json(obj["type"]), obj["nullable"], obj.get("metadata", {}))
+
+
+@dataclass(frozen=True)
+class Schema:
+    fields: tuple[Field, ...]
+    metadata: dict = dc_field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "fields", tuple(self.fields))
+        names = [f.name for f in self.fields]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate field names: {names}")
+
+    @property
+    def names(self) -> list[str]:
+        return [f.name for f in self.fields]
+
+    def field(self, name: str) -> Field:
+        for f in self.fields:
+            if f.name == name:
+                return f
+        raise KeyError(name)
+
+    def index(self, name: str) -> int:
+        for i, f in enumerate(self.fields):
+            if f.name == name:
+                return i
+        raise KeyError(name)
+
+    def select(self, names: list[str]) -> "Schema":
+        return Schema(tuple(self.field(n) for n in names), dict(self.metadata))
+
+    def to_json(self) -> dict:
+        return {"fields": [f.to_json() for f in self.fields], "metadata": self.metadata}
+
+    def serialize(self) -> bytes:
+        return json.dumps(self.to_json(), sort_keys=True).encode()
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "Schema":
+        return cls(tuple(Field.from_json(f) for f in obj["fields"]), obj.get("metadata", {}))
+
+    @classmethod
+    def deserialize(cls, data: bytes) -> "Schema":
+        return cls.from_json(json.loads(data.decode()))
+
+    def __len__(self) -> int:
+        return len(self.fields)
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{f.name}: {f.type!r}{'' if f.nullable else ' not null'}" for f in self.fields)
+        return f"Schema<{inner}>"
+
+
+def schema(pairs: list[tuple[str, DataType]] | dict[str, DataType], metadata: dict | None = None) -> Schema:
+    if isinstance(pairs, dict):
+        pairs = list(pairs.items())
+    return Schema(tuple(Field(n, t) for n, t in pairs), metadata or {})

@@ -1,0 +1,2 @@
+from .dataset import corpus_schema, pack_documents, synthesize_corpus  # noqa: F401
+from .loader import FlightDataLoader, LoaderState  # noqa: F401

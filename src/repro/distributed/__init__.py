@@ -1,0 +1,9 @@
+"""Distributed runtime: sharding, collectives, checkpoint, fault, elastic."""
+from .sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingCtx,
+    resolve_spec,
+    sharding_for,
+    single_device_ctx,
+    tree_shardings,
+)

@@ -1,0 +1,68 @@
+"""Elastic scaling: rebuild the mesh when the world size changes.
+
+Synchronous SPMD cannot lose a participant mid-step, so elasticity happens
+at checkpoint boundaries: on membership change the controller (1) picks the
+largest supported mesh ≤ alive hosts, (2) restores the last committed
+checkpoint **resharded** onto the new mesh (checkpoint.py does arbitrary
+region reassembly), (3) rescales the data plane (Flight endpoints are range
+tickets — re-partitioning the shard->host map is a metadata operation), and
+(4) resumes.  Batch-size semantics under shrink are configurable: keep the
+global batch (more grad accumulation) or scale it with the world.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+# meshes we can reform to, largest first: (pod, data, model) — model axis is
+# kept at 16 (TP within a rack is fixed by the wiring), pods×data flex.
+_SUPPORTED: list[tuple[int, int, int]] = [
+    (2, 16, 16), (1, 16, 16), (1, 8, 16), (1, 4, 16), (1, 2, 16), (1, 1, 16),
+    (1, 1, 8), (1, 1, 4), (1, 1, 2), (1, 1, 1),
+]
+
+
+@dataclass(frozen=True)
+class WorldChange:
+    old_devices: int
+    new_devices: int
+    mesh_shape: tuple[int, int, int]
+    microbatch_scale: int  # grad-accum factor to keep global batch constant
+
+
+def best_mesh_shape(n_devices: int) -> tuple[int, int, int]:
+    for shape in _SUPPORTED:
+        if int(np.prod(shape)) <= n_devices:
+            return shape
+    raise ValueError(f"no supported mesh for {n_devices} devices")
+
+
+def plan_reshape(old_devices: int, new_devices: int,
+                 keep_global_batch: bool = True) -> WorldChange:
+    shape = best_mesh_shape(new_devices)
+    used = int(np.prod(shape))
+    scale = max(1, old_devices // used) if keep_global_batch else 1
+    return WorldChange(old_devices, new_devices, shape, scale)
+
+
+def make_elastic_mesh(change: WorldChange, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    p, d, m = change.mesh_shape
+    n = p * d * m
+    arr = np.array(devices[:n])
+    if p > 1:
+        return Mesh(arr.reshape(p, d, m), ("pod", "data", "model"))
+    return Mesh(arr.reshape(d, m), ("data", "model"))
+
+
+def repartition_tickets(n_shards: int, workers: list[str]) -> dict[str, list[int]]:
+    """Data-plane rescale: reassign dataset shard ranges to surviving
+    workers (round robin; tickets are idempotent ranges so no data moves)."""
+    assign: dict[str, list[int]] = {w: [] for w in workers}
+    for s in range(n_shards):
+        assign[workers[s % len(workers)]].append(s)
+    return assign

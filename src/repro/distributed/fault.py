@@ -1,0 +1,143 @@
+"""Fault tolerance: heartbeats, failure detection, restart policy, stragglers.
+
+The coordinator view of a 1000+-node job.  Mechanisms:
+
+* **Heartbeat registry** — workers POST heartbeats (here: Flight DoAction
+  "heartbeat"); the detector marks a worker dead after ``timeout_s`` without
+  one, and the job controller reacts per ``RestartPolicy``.
+* **Straggler detection** — per-step duration reports; a worker slower than
+  ``straggler_factor`` × median for ``patience`` consecutive steps is flagged.
+  Mitigation on the data plane is *hedged DoGet* (client.py) — tickets are
+  idempotent range reads, so re-issuing against a replica endpoint is safe —
+  and on the compute plane, flagged hosts are queued for replacement at the
+  next checkpoint boundary (synchronous SPMD can't drop a participant
+  mid-step; see elastic.py for the reshape).
+* **TrainSupervisor** — wraps the train loop: run → on failure restore last
+  committed checkpoint → reshape mesh if the world changed → resume.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable
+
+
+class WorkerState(str, Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"
+    DEAD = "dead"
+    STRAGGLER = "straggler"
+
+
+@dataclass
+class WorkerInfo:
+    worker_id: str
+    last_heartbeat: float = field(default_factory=time.time)
+    state: WorkerState = WorkerState.HEALTHY
+    step_times: list[float] = field(default_factory=list)
+    slow_streak: int = 0
+
+
+class FailureDetector:
+    """Phi-accrual-lite: timeout-based with a suspect grace period."""
+
+    def __init__(self, timeout_s: float = 30.0, suspect_s: float = 10.0):
+        self.timeout_s = timeout_s
+        self.suspect_s = suspect_s
+        self.workers: dict[str, WorkerInfo] = {}
+        self._lock = threading.Lock()
+
+    def register(self, worker_id: str) -> None:
+        with self._lock:
+            self.workers[worker_id] = WorkerInfo(worker_id)
+
+    def heartbeat(self, worker_id: str) -> None:
+        with self._lock:
+            w = self.workers.setdefault(worker_id, WorkerInfo(worker_id))
+            w.last_heartbeat = time.time()
+            if w.state in (WorkerState.SUSPECT, WorkerState.DEAD):
+                w.state = WorkerState.HEALTHY
+
+    def sweep(self, now: float | None = None) -> list[str]:
+        """Advance states; returns newly-dead worker ids."""
+        now = now or time.time()
+        newly_dead = []
+        with self._lock:
+            for w in self.workers.values():
+                dt = now - w.last_heartbeat
+                if dt > self.timeout_s and w.state != WorkerState.DEAD:
+                    w.state = WorkerState.DEAD
+                    newly_dead.append(w.worker_id)
+                elif dt > self.suspect_s and w.state == WorkerState.HEALTHY:
+                    w.state = WorkerState.SUSPECT
+        return newly_dead
+
+    def alive(self) -> list[str]:
+        with self._lock:
+            return [w.worker_id for w in self.workers.values()
+                    if w.state != WorkerState.DEAD]
+
+
+class StragglerDetector:
+    def __init__(self, factor: float = 1.5, patience: int = 3):
+        self.factor = factor
+        self.patience = patience
+        self.detector_times: dict[str, list[float]] = {}
+        self.slow_streaks: dict[str, int] = {}
+
+    def report(self, worker_id: str, step_s: float) -> None:
+        self.detector_times.setdefault(worker_id, []).append(step_s)
+        self.detector_times[worker_id] = self.detector_times[worker_id][-20:]
+
+    def flagged(self) -> list[str]:
+        latest = {w: t[-1] for w, t in self.detector_times.items() if t}
+        if len(latest) < 2:
+            return []
+        med = statistics.median(latest.values())
+        out = []
+        for w, t in latest.items():
+            if t > self.factor * med:
+                self.slow_streaks[w] = self.slow_streaks.get(w, 0) + 1
+            else:
+                self.slow_streaks[w] = 0
+            if self.slow_streaks.get(w, 0) >= self.patience:
+                out.append(w)
+        return out
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    backoff_s: float = 5.0
+    elastic: bool = True          # allow resuming with fewer/more hosts
+    min_workers: int = 1
+
+
+class TrainSupervisor:
+    """run_fn(start_step, world) -> final_step; restarts on failure from the
+    last committed checkpoint (checkpoint manager passed by caller)."""
+
+    def __init__(self, policy: RestartPolicy, ckpt_mgr, logger: Callable[[str], None] = print):
+        self.policy = policy
+        self.ckpt = ckpt_mgr
+        self.log = logger
+        self.restarts = 0
+
+    def run(self, run_fn: Callable[[int], int]) -> int:
+        while True:
+            start = (self.ckpt.latest_step() or 0)
+            try:
+                return run_fn(start)
+            except Exception as e:  # worker failure surfaces here
+                self.restarts += 1
+                if self.restarts > self.policy.max_restarts:
+                    self.log(f"[supervisor] giving up after {self.restarts - 1} restarts: {e}")
+                    raise
+                self.log(f"[supervisor] failure at step>={start}: {e!r}; "
+                         f"restart {self.restarts}/{self.policy.max_restarts} "
+                         f"from step {self.ckpt.latest_step() or 0} in {self.policy.backoff_s}s")
+                time.sleep(self.policy.backoff_s)

@@ -1,0 +1,155 @@
+"""Logical-axis sharding: one vocabulary, per-arch rules, GSPMD + shard_map.
+
+Every parameter/activation is annotated with *logical* axis names; a rule
+table maps them onto mesh axes.  This is the MaxText/GSPMD idiom and is what
+lets one model definition run on the (16,16) single-pod and (2,16,16)
+multi-pod meshes unchanged.
+
+Conventions (see DESIGN.md §4):
+  batch    -> ("pod", "data")      data parallel over pods × data axis
+  embed    -> "data"               FSDP: parameters sharded on the d_model dim
+  heads    -> "model"              Megatron TP on (padded) q heads
+  kv_heads -> "model"              kv heads replicated up to 16 then TP
+  ff       -> "model"              TP on FFN hidden
+  experts  -> "model"              expert parallelism
+  vocab    -> "model"              embedding/logits vocab dim
+  inner    -> "model"              mamba/xlstm inner dim
+  kv_seq   -> "data"               decode KV streamed seq-sharded (flash decode)
+  layers/seq/stack -> replicated
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "embed": "data",
+    "embed_nosplit": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "experts_rep": None,
+    "vocab": "model",
+    "inner": "model",
+    "kv_seq": ("pod", "data"),
+    "kv_heads_rep": None,
+    "q_per_kv": None,
+    "ff_nosplit": None,
+    "inner_nosplit": None,
+    "heads_nosplit": None,
+    "layers": None,
+    "stack": None,
+    "seq": None,
+    "head_dim": None,
+    "conv": None,
+    "state": None,
+    "dt": None,
+    "patch": None,
+    None: None,
+}
+
+
+def mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def resolve_spec(logical: tuple, mesh: Mesh, rules: dict | None = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for ``mesh``.
+
+    Rules naming mesh axes absent from ``mesh`` degrade to replication (this
+    is what makes the same model run single-pod without a "pod" axis).
+    """
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    axes = mesh_axes(mesh)
+    out, used = [], set()
+
+    def pick(name):
+        if name is None:
+            return None
+        r = rules.get(name, None)
+        if r is None:
+            return None
+        cands = r if isinstance(r, tuple) else (r,)
+        chosen = tuple(c for c in cands if c in axes and c not in used)
+        used.update(chosen)
+        if not chosen:
+            return None
+        return chosen if len(chosen) > 1 else chosen[0]
+
+    for name in logical:
+        out.append(pick(name))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(logical: tuple, mesh: Mesh, rules: dict | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical, mesh, rules))
+
+
+def tree_shardings(logical_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda ax: sharding_for(ax, mesh, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+class ShardingCtx:
+    """Mesh + rule table threaded through model construction.
+
+    ``ctx.constrain(x, ("batch", "seq", "embed_nosplit"))`` is the only way
+    models talk about distribution — physical axes never appear in model code.
+    """
+
+    def __init__(self, mesh: Mesh, rules: dict | None = None):
+        self.mesh = mesh
+        self.rules = {**DEFAULT_RULES, **(rules or {})}
+
+    def spec(self, logical: tuple) -> P:
+        return resolve_spec(logical, self.mesh, self.rules)
+
+    def sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+    def constrain(self, x, logical: tuple):
+        return jax.lax.with_sharding_constraint(x, self.sharding(logical))
+
+    def axis_size(self, mesh_axis: str) -> int:
+        return self.mesh.shape[mesh_axis] if mesh_axis in self.mesh.axis_names else 1
+
+    @property
+    def model_parallelism(self) -> int:
+        return self.axis_size("model")
+
+    @property
+    def data_parallelism(self) -> int:
+        return self.axis_size("data") * self.axis_size("pod")
+
+
+def single_device_ctx(rules: dict | None = None) -> ShardingCtx:
+    """A 1×1 ("data","model") mesh for CPU smoke tests — constraints no-op."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return ShardingCtx(Mesh(dev, ("data", "model")), rules)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def batch_shard_count(mesh: Mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n
+
+
+def divisible_batch(global_batch: int, mesh: Mesh) -> bool:
+    return global_batch % batch_shard_count(mesh) == 0

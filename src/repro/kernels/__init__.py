@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's data-movement hot-spots.
+
+varlen_unpack     — columnar->padded-dense (deserialization)
+quantize/dequant  — int8 wire compression (collectives / transfer)
+selection_gather  — query-filter row materialization
+flash_decode      — KV-cache decode attention (scoring microservice)
+
+Validated in interpret mode against ref.py oracles (tests/test_kernels.py).
+"""
+from . import ops, ref  # noqa: F401

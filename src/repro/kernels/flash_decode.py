@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: flash-decode (single-token KV-cache attention).
+
+The latency hot-spot of the batch-scoring microservice (paper Fig 11) and of
+``serve_step``: one query token attends over a long KV cache.  TPU mapping:
+
+  * grid = (batch × heads, S/block_s): K/V stream HBM→VMEM block by block
+    while the (1, d) query stays resident.
+  * online softmax carried in VMEM scratch (m, l, acc) across the S-grid
+    dim; finalized on the last block — the same partial-softmax combine that
+    ``flash_decode_shardmap`` runs *across chips*, here run *across blocks*.
+  * block_s × d tiles are (8,128)-aligned for the VPU/MXU.
+
+This kernel is the single-shard inner loop of the distributed decode path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                         acc_ref, *, block_s: int, scale: float):
+    sblk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(sblk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :].astype(jnp.float32)                 # (d,)
+    k = k_ref[...].astype(jnp.float32)                  # (block_s, d)
+    v = v_ref[...].astype(jnp.float32)
+    length = len_ref[0]
+
+    s = (k @ q) * scale                                  # (block_s,)
+    pos = sblk * block_s + jax.lax.iota(jnp.int32, block_s)
+    s = jnp.where(pos < length, s, -1e30)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)                               # (block_s,)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[0] * corr + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * corr + (p[None, :] @ v)  # (1, d)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(sblk == nblk - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, length,
+                 block_s: int = 512, interpret: bool = True):
+    """q (BH, d); k/v (BH, S, d); length (BH,) int32 -> (BH, d).
+
+    Callers flatten (batch, heads) into BH (GQA repeats kv externally).
+    """
+    BH, d = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    grid = (BH, S // bs)
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_flash_decode_kernel, block_s=bs, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+            pl.BlockSpec((None, bs, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((None, bs, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),    # m: running max
+            pltpu.VMEM((1,), jnp.float32),    # l: running denom
+            pltpu.VMEM((1, d), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v, jnp.asarray(length, jnp.int32))

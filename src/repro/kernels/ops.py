@@ -1,0 +1,79 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the wrappers run the compiled kernels (``interpret=False``); on CPU
+(this container) they run the kernel bodies in interpret mode for
+correctness, or fall back to the ``ref.py`` oracle where interpret overhead
+is prohibitive for large inputs.  The data plane / serving layers call only
+these entry points.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_decode import flash_decode as _flash_decode
+from .quantize import dequantize as _dequantize
+from .quantize import quantize as _quantize
+from .selection_gather import selection_gather as _selection_gather
+from .varlen_unpack import varlen_unpack as _varlen_unpack
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(override: bool | None) -> bool:
+    if override is not None:
+        return override
+    return on_tpu()
+
+
+@partial(jax.jit, static_argnames=("max_len", "pad_id", "use_pallas", "interpret"))
+def varlen_unpack(offsets, values, max_len: int, pad_id: int = 0,
+                  use_pallas: bool | None = None, interpret: bool | None = None):
+    """Arrow list column -> padded (N, max_len) + lengths (the data plane's
+    columnar->tensor conversion; see data/loader.py)."""
+    if _use_pallas(use_pallas):
+        return _varlen_unpack(offsets, values, max_len, pad_id,
+                              interpret=not on_tpu() if interpret is None else interpret)
+    return ref.varlen_unpack_ref(offsets, values, max_len, pad_id)
+
+
+@partial(jax.jit, static_argnames=("block", "use_pallas"))
+def quantize(x, block: int = 128, use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
+        return _quantize(x, interpret=not on_tpu())
+    return ref.quantize_ref(x, block)
+
+
+@partial(jax.jit, static_argnames=("block", "out_dtype", "use_pallas"))
+def dequantize(q, scales, block: int = 128, out_dtype=jnp.float32,
+               use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
+        return _dequantize(q, scales, out_dtype, interpret=not on_tpu())
+    return ref.dequantize_ref(q, scales, block, out_dtype)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def selection_gather(values, indices, use_pallas: bool | None = None):
+    if _use_pallas(use_pallas):
+        return _selection_gather(values, indices, interpret=not on_tpu())
+    return ref.selection_gather_ref(values, indices)
+
+
+@partial(jax.jit, static_argnames=("block_s", "use_pallas"))
+def flash_decode(q, k, v, length, block_s: int = 512, use_pallas: bool | None = None):
+    """q (B,H,d), k/v (B,S,H,d), length (B,) -> (B,H,d)."""
+    if _use_pallas(use_pallas):
+        B, H, d = q.shape
+        S = k.shape[1]
+        qf = q.reshape(B * H, d)
+        kf = jnp.swapaxes(k, 1, 2).reshape(B * H, S, d)
+        vf = jnp.swapaxes(v, 1, 2).reshape(B * H, S, d)
+        lf = jnp.repeat(jnp.asarray(length, jnp.int32).reshape(-1), H)
+        out = _flash_decode(qf, kf, vf, lf, block_s=block_s, interpret=not on_tpu())
+        return out.reshape(B, H, d)
+    return ref.flash_decode_ref(q, k, v, length)

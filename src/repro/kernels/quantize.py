@@ -1,0 +1,78 @@
+"""Pallas TPU kernels: blockwise int8 quantize / dequantize.
+
+The paper's wire-compression theme ("use ~95 % of the bandwidth") applied to
+TPU fabrics: gradients/activations are quantized to int8 with one f32 scale
+per (row, 128-lane block) before crossing ICI/DCN (see
+distributed/collectives.py), quartering collective bytes.
+
+TPU mapping: tiles of (block_m, 128) in VMEM — 128 matches the VPU lane
+count, so the per-block |max| reduction is a native cross-lane reduce and the
+scale broadcast stays in-register.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_BLOCK = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)            # (bm, 128)
+    amax = jnp.max(jnp.abs(x), axis=-1)           # (bm,)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, None]
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s_ref[...]).astype(out_dtype)
+
+
+def quantize(x: jax.Array, block_m: int = 256, interpret: bool = True):
+    """x (M, K) float -> (q int8 (M, K), scales f32 (M, K/128))."""
+    M, K = x.shape
+    assert K % LANE_BLOCK == 0, (K,)
+    bm = min(block_m, M)
+    assert M % bm == 0, (M, bm)
+    grid = (M // bm, K // LANE_BLOCK)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, LANE_BLOCK), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, LANE_BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M, K // LANE_BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+def dequantize(q: jax.Array, s: jax.Array, out_dtype=jnp.float32,
+               block_m: int = 256, interpret: bool = True):
+    M, K = q.shape
+    bm = min(block_m, M)
+    assert M % bm == 0 and K % LANE_BLOCK == 0
+    grid = (M // bm, K // LANE_BLOCK)
+    kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, LANE_BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, LANE_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
+        interpret=interpret,
+    )(q, s)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the *mathematical definition* the kernel must match; tests
+sweep shapes/dtypes and assert allclose between ``ops.py`` (interpret-mode
+Pallas) and these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def varlen_unpack_ref(offsets: jax.Array, values: jax.Array, max_len: int,
+                      pad_id: int = 0):
+    """Arrow list<int> column -> padded dense (N, max_len) + lengths.
+
+    offsets: (N+1,) int32 monotone; values: (total,) — the deserialization
+    hot-spot: ragged columnar rows become an MXU-friendly padded matrix.
+    Rows longer than max_len are truncated.
+    """
+    N = offsets.shape[0] - 1
+    starts = offsets[:-1]
+    lens = jnp.minimum(offsets[1:] - starts, max_len)
+    idx = starts[:, None] + jnp.arange(max_len, dtype=offsets.dtype)[None, :]
+    idx = jnp.clip(idx, 0, values.shape[0] - 1)
+    out = values[idx]
+    mask = jnp.arange(max_len, dtype=offsets.dtype)[None, :] < lens[:, None]
+    out = jnp.where(mask, out, jnp.asarray(pad_id, values.dtype))
+    return out, lens.astype(jnp.int32)
+
+
+def quantize_ref(x: jax.Array, block: int = 128):
+    """Blockwise symmetric int8 quantization along the last dim.
+
+    x: (..., K) float -> (q int8 (..., K), scales f32 (..., K//block)).
+    """
+    *lead, K = x.shape
+    assert K % block == 0, (K, block)
+    xb = x.astype(jnp.float32).reshape(*lead, K // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, K), scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 128,
+                   dtype=jnp.float32):
+    *lead, K = q.shape
+    qb = q.reshape(*lead, K // block, block).astype(jnp.float32)
+    return (qb * scale[..., None]).reshape(*lead, K).astype(dtype)
+
+
+def selection_gather_ref(values: jax.Array, indices: jax.Array):
+    """Query-filter materialization: rows of ``values`` (N, D) at ``indices``
+    (M,) int32 (may repeat / be unsorted).  Negative index = zero row."""
+    safe = jnp.maximum(indices, 0)
+    out = values[safe]
+    return jnp.where((indices >= 0)[:, None], out, jnp.zeros_like(out))
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, length,
+                     softmax_scale: float | None = None):
+    """Single-step KV-cache attention (the serving hot-spot).
+
+    q: (B, H, d); k/v: (B, S, H, d); length: scalar/(B,) valid prefix.
+    """
+    import math
+    B, H, d = q.shape
+    S = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(length).reshape(-1, 1), (B, S))
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

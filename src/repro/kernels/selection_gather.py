@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: selection-vector row gather (query-filter materialization).
+
+The server-side work behind the paper's Fig 8 query path: after a predicate
+produces a selection vector, the surviving rows must be compacted into a
+dense output batch for the wire.  TPU mapping: row indices ride in SMEM
+(scalar prefetch); each grid step copies ``block_rows`` rows of the (N, D)
+values block into an output tile with dynamic-start row loads.  Negative
+indices produce zero rows (null semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, values_ref, out_ref, *, block_rows: int):
+    pid = pl.program_id(0)
+    row0 = pid * block_rows
+
+    def body(i, _):
+        src = idx_ref[row0 + i]
+        safe = jnp.clip(src, 0, values_ref.shape[0] - 1)
+        row = values_ref[pl.ds(safe, 1), :]
+        out_ref[pl.ds(i, 1), :] = jnp.where(src >= 0, row, jnp.zeros_like(row))
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, body, 0)
+
+
+def selection_gather(values: jax.Array, indices: jax.Array, block_rows: int = 8,
+                     interpret: bool = True):
+    """values (N, D), indices (M,) int32 -> (M, D)."""
+    N, D = values.shape
+    M = indices.shape[0]
+    assert M % block_rows == 0, (M, block_rows)
+    grid = (M // block_rows,)
+    kernel = functools.partial(_gather_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(values.shape, lambda i, *_: (0, 0))],
+            out_specs=pl.BlockSpec((block_rows, D), lambda i, *_: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, D), values.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), values)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: Arrow varlen column → padded dense matrix.
+
+The deserialization hot-spot of the paper (row→column materialization,
+Fig 4's cliff), TPU-adapted: the ragged ``values`` buffer of an Arrow
+``list<T>`` column is unpacked into an (8,128)-aligned padded (N, L) matrix
+the MXU can consume directly.
+
+TPU mapping (DESIGN.md §6):
+  * ``offsets`` ride in **SMEM** via ``PrefetchScalarGridSpec`` — they're
+    control data (DMA descriptors), exactly what scalar prefetch is for.
+  * the whole ``values`` region sits in **ANY/VMEM** as one block; each grid
+    step copies ``block_rows`` rows with dynamic-start fixed-size slices
+    (``pl.ds(start, L)``) and masks the tail with an iota comparison — the
+    dynamic-slice+mask idiom replaces per-row variable-length DMA, which the
+    TPU DMA engine can't express efficiently.
+  * output is tiled (block_rows, L) in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_kernel(offsets_ref, values_ref, out_ref, lens_ref, *, max_len: int,
+                   block_rows: int, pad_id):
+    pid = pl.program_id(0)
+    row0 = pid * block_rows
+
+    def body(i, _):
+        row = row0 + i
+        start = offsets_ref[row]
+        end = offsets_ref[row + 1]
+        length = jnp.minimum(end - start, max_len)
+        # fixed-size dynamic-start load; the wrapper pads `values` by max_len
+        # so start+max_len is always in bounds without shifting the window
+        vals = values_ref[pl.ds(start, max_len)]
+        mask = jax.lax.iota(jnp.int32, max_len) < length
+        out_ref[i, :] = jnp.where(mask, vals, jnp.asarray(pad_id, vals.dtype))
+        lens_ref[i] = length
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, body, 0)
+
+
+def varlen_unpack(offsets: jax.Array, values: jax.Array, max_len: int,
+                  pad_id: int = 0, block_rows: int = 8, interpret: bool = True):
+    """offsets (N+1,) int32, values (total,) -> (padded (N,max_len), lens (N,))."""
+    N = offsets.shape[0] - 1
+    assert N % block_rows == 0, (N, block_rows)
+    values = jnp.concatenate([values, jnp.zeros((max_len,), values.dtype)])
+    grid = (N // block_rows,)
+    kernel = functools.partial(_unpack_kernel, max_len=max_len,
+                               block_rows=block_rows, pad_id=pad_id)
+    out, lens = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,            # offsets land in SMEM
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(values.shape, lambda i, *_: (0,)),  # whole values block
+            ],
+            out_specs=[
+                pl.BlockSpec((block_rows, max_len), lambda i, *_: (i, 0)),
+                pl.BlockSpec((block_rows,), lambda i, *_: (i,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((N, max_len), values.dtype),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), values)
+    return out, lens

@@ -1,0 +1,107 @@
+"""Sweep driver: run every (arch × shape × mesh) dry-run cell as a separate
+subprocess (isolates compile memory; a crash in one cell can't kill the
+sweep).  Writes/updates experiments/artifacts/*.json incrementally and prints
+a summary table at the end.
+
+  python -m repro.launch.dryrun_all [--multi-pod] [--only arch1,arch2] [--redo]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[3]
+ARTIFACTS = REPO / "experiments" / "artifacts"
+
+
+def cells():
+    from ..configs.base import ARCH_IDS, SHAPES, cell_supported, get_config
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape, spec in SHAPES.items():
+            ok, why = cell_supported(cfg, spec)
+            out.append((arch, shape, ok, why))
+    return out
+
+
+def artifact_path(arch: str, shape: str, multi_pod: bool) -> Path:
+    mesh = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    return ARTIFACTS / f"{arch}__{shape}__{mesh}.json"
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, timeout: int = 5400) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                              env=env, cwd=str(REPO))
+        status = "ok" if proc.returncode == 0 else "error"
+        tail = (proc.stdout + proc.stderr)[-1500:]
+    except subprocess.TimeoutExpired:
+        status, tail = "timeout", ""
+    p = artifact_path(arch, shape, multi_pod)
+    if p.exists():
+        rec = json.loads(p.read_text())
+    else:
+        rec = {"arch": arch, "shape": shape, "status": status, "log_tail": tail,
+               "wall_s": round(time.time() - t0, 1)}
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--redo", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    todo = cells()
+    for multi_pod in meshes:
+        for arch, shape, ok, why in todo:
+            if only and arch not in only:
+                continue
+            p = artifact_path(arch, shape, multi_pod)
+            if not ok:
+                ARTIFACTS.mkdir(parents=True, exist_ok=True)
+                p.write_text(json.dumps({"arch": arch, "shape": shape,
+                                         "mesh": p.stem.split("__")[-1],
+                                         "status": "skipped", "reason": why}, indent=2))
+                print(f"SKIP  {arch} × {shape}: {why}")
+                continue
+            if p.exists() and not args.redo:
+                rec = json.loads(p.read_text())
+                if rec.get("status") == "ok":
+                    print(f"HAVE  {arch} × {shape} × {'multi' if multi_pod else 'single'}")
+                    continue
+            t0 = time.time()
+            rec = run_one(arch, shape, multi_pod)
+            print(f"{rec.get('status','?').upper():5s} {arch} × {shape} × "
+                  f"{'multi' if multi_pod else 'single'}  ({time.time()-t0:.0f}s)",
+                  flush=True)
+
+    # summary
+    n_ok = n_err = n_skip = 0
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        s = rec.get("status")
+        n_ok += s == "ok"
+        n_err += s in ("error", "timeout")
+        n_skip += s == "skipped"
+    print(f"\nsummary: {n_ok} ok, {n_err} failed, {n_skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

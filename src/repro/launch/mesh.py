@@ -1,0 +1,29 @@
+"""Production mesh builders (functions, never module-level constants — importing
+this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None) -> Mesh:
+    """Arbitrary small mesh over available (possibly forced-host) devices."""
+    n = (pod or 1) * data * model
+    devs = np.array(jax.devices()[:n])
+    if pod is not None:
+        return Mesh(devs.reshape(pod, data, model), ("pod", "data", "model"))
+    return Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (§Roofline sources)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link (~what one all-reduce hop sees)

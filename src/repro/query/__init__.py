@@ -1,0 +1,4 @@
+"""Query subsystem: pushdown engine + Flight query service + row baselines."""
+from .engine import QueryPlan, aggregate, execute, execute_batch  # noqa: F401
+from .expr import col, lit  # noqa: F401
+from .service import FlightQueryService  # noqa: F401

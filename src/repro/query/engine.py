@@ -1,0 +1,107 @@
+"""Query execution over RecordBatches: projection / predicate / aggregation.
+
+``QueryPlan`` is the wire-serializable plan a Flight descriptor carries
+(``FlightDescriptor.for_command(plan.serialize())``).  Execution is fully
+columnar: predicates produce selection masks, projections are zero-copy
+column subsets, and only then do surviving rows materialize — the ordering
+the paper credits for the 20-30× over row-based protocols.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Iterator
+
+import numpy as np
+
+from ..core.recordbatch import RecordBatch
+from .expr import Expr, evaluate, referenced_columns
+
+_AGGS = {"sum": np.sum, "mean": np.mean, "min": np.min, "max": np.max, "count": len}
+
+
+@dataclass
+class QueryPlan:
+    dataset: str
+    projection: list[str] | None = None          # None = all columns
+    predicate: Expr | None = None
+    aggregations: list[tuple[str, str]] = field(default_factory=list)  # (op, col)
+    limit: int | None = None
+
+    def serialize(self) -> bytes:
+        return json.dumps({
+            "dataset": self.dataset,
+            "projection": self.projection,
+            "predicate": self.predicate.to_json() if self.predicate else None,
+            "aggregations": self.aggregations,
+            "limit": self.limit,
+        }).encode()
+
+    @classmethod
+    def deserialize(cls, raw: bytes) -> "QueryPlan":
+        o = json.loads(raw.decode())
+        return cls(
+            dataset=o["dataset"],
+            projection=o["projection"],
+            predicate=Expr.from_json(o["predicate"]) if o["predicate"] else None,
+            aggregations=[tuple(a) for a in o["aggregations"]],
+            limit=o["limit"],
+        )
+
+    def required_columns(self, all_names: list[str]) -> list[str]:
+        need = set(self.projection or all_names)
+        if self.predicate is not None:
+            need |= referenced_columns(self.predicate)
+        for _, c in self.aggregations:
+            need.add(c)
+        return [n for n in all_names if n in need]
+
+
+def execute_batch(plan: QueryPlan, batch: RecordBatch) -> RecordBatch:
+    """Columnar filter → project → limit on one batch."""
+    # read only referenced columns (projection pushdown: zero-copy select)
+    batch = batch.select(plan.required_columns(batch.schema.names))
+    if plan.predicate is not None:
+        mask = evaluate(plan.predicate, batch)
+        batch = batch.filter(mask)
+    if plan.projection is not None:
+        batch = batch.select([n for n in plan.projection if n in batch.schema.names])
+    if plan.limit is not None:
+        batch = batch.slice(0, min(plan.limit, batch.num_rows))
+    return batch
+
+
+def execute(plan: QueryPlan, batches: list[RecordBatch]) -> Iterator[RecordBatch]:
+    remaining = plan.limit
+    for b in batches:
+        sub = QueryPlan(plan.dataset, plan.projection, plan.predicate, [], remaining)
+        out = execute_batch(sub, b)
+        if out.num_rows:
+            yield out
+        if remaining is not None:
+            remaining -= out.num_rows
+            if remaining <= 0:
+                return
+
+
+def aggregate(plan: QueryPlan, batches: list[RecordBatch]) -> dict[str, float]:
+    """Filtered aggregation (server-side; only scalars cross the wire)."""
+    acc: dict[str, list] = {f"{op}({c})": [] for op, c in plan.aggregations}
+    n = 0
+    for b in execute(QueryPlan(plan.dataset, None, plan.predicate), batches):
+        n += b.num_rows
+        for op, c in plan.aggregations:
+            if op == "count":
+                continue
+            acc[f"{op}({c})"].append(b.column(c).to_numpy())
+    out: dict[str, float] = {}
+    for op, c in plan.aggregations:
+        key = f"{op}({c})"
+        if op == "count":
+            out[key] = float(n)
+        elif acc[key]:
+            arr = np.concatenate(acc[key])
+            out[key] = float(_AGGS[op](arr))
+        else:
+            out[key] = float("nan")
+    return out

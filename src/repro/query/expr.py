@@ -1,0 +1,111 @@
+"""Vectorized expression tree over RecordBatch columns (the pushdown IR).
+
+``col("fare") > 10.0`` builds an ``Expr``; ``evaluate`` runs it columnar
+(numpy-vectorized) server-side.  This is the mini query engine behind the
+Dremio-analogue Flight service — predicates/projections execute where the
+data lives and only surviving columns/rows cross the wire (paper §4.1).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from ..core.recordbatch import RecordBatch
+
+
+class Expr:
+    def _bin(self, op: str, other) -> "Expr":
+        return BinOp(op, self, other if isinstance(other, Expr) else Literal(other))
+
+    def __gt__(self, o): return self._bin(">", o)
+    def __ge__(self, o): return self._bin(">=", o)
+    def __lt__(self, o): return self._bin("<", o)
+    def __le__(self, o): return self._bin("<=", o)
+    def __eq__(self, o): return self._bin("==", o)  # type: ignore[override]
+    def __ne__(self, o): return self._bin("!=", o)  # type: ignore[override]
+    def __and__(self, o): return self._bin("&", o)
+    def __or__(self, o): return self._bin("|", o)
+    def __add__(self, o): return self._bin("+", o)
+    def __sub__(self, o): return self._bin("-", o)
+    def __mul__(self, o): return self._bin("*", o)
+    def __hash__(self):
+        return hash(json.dumps(self.to_json(), sort_keys=True))
+
+    def to_json(self) -> dict:
+        raise NotImplementedError
+
+    @staticmethod
+    def from_json(o: dict) -> "Expr":
+        k = o["kind"]
+        if k == "col":
+            return Col(o["name"])
+        if k == "lit":
+            return Literal(o["value"])
+        if k == "bin":
+            return BinOp(o["op"], Expr.from_json(o["lhs"]), Expr.from_json(o["rhs"]))
+        raise ValueError(k)
+
+
+@dataclass(frozen=True, eq=False)
+class Col(Expr):
+    name: str
+
+    def to_json(self):
+        return {"kind": "col", "name": self.name}
+
+
+@dataclass(frozen=True, eq=False)
+class Literal(Expr):
+    value: Any
+
+    def to_json(self):
+        return {"kind": "lit", "value": self.value}
+
+
+@dataclass(frozen=True, eq=False)
+class BinOp(Expr):
+    op: str
+    lhs: Expr
+    rhs: Expr
+
+    def to_json(self):
+        return {"kind": "bin", "op": self.op,
+                "lhs": self.lhs.to_json(), "rhs": self.rhs.to_json()}
+
+
+def col(name: str) -> Col:
+    return Col(name)
+
+
+def lit(v) -> Literal:
+    return Literal(v)
+
+
+_OPS = {
+    ">": np.greater, ">=": np.greater_equal, "<": np.less, "<=": np.less_equal,
+    "==": np.equal, "!=": np.not_equal,
+    "&": np.logical_and, "|": np.logical_or,
+    "+": np.add, "-": np.subtract, "*": np.multiply,
+}
+
+
+def evaluate(expr: Expr, batch: RecordBatch) -> np.ndarray:
+    """Columnar evaluation -> numpy array (bool for predicates)."""
+    if isinstance(expr, Col):
+        return batch.column(expr.name).to_numpy()
+    if isinstance(expr, Literal):
+        return np.asarray(expr.value)
+    if isinstance(expr, BinOp):
+        return _OPS[expr.op](evaluate(expr.lhs, batch), evaluate(expr.rhs, batch))
+    raise TypeError(expr)
+
+
+def referenced_columns(expr: Expr) -> set[str]:
+    if isinstance(expr, Col):
+        return {expr.name}
+    if isinstance(expr, BinOp):
+        return referenced_columns(expr.lhs) | referenced_columns(expr.rhs)
+    return set()

@@ -1,0 +1,1 @@
+from .service import Batcher, BatcherConfig, LMScoringService, ScoringService  # noqa: F401

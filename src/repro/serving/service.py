@@ -1,0 +1,123 @@
+"""Batch-scoring microservice over Flight — the XGBatch analogue (Fig 11).
+
+``ScoringService`` is a FlightServer whose ``DoExchange`` scores incoming
+RecordBatches with a JAX model function and streams scored batches back:
+clients stream requests in, results out, with zero (de)serialization at
+either boundary — the paper's microservice pattern.
+
+``LMScoringService`` wires it to an ``LM``: request batches carry a
+``tokens`` list column, responses add ``next_token``/``logprob`` columns
+(prefill scoring).  ``Batcher`` coalesces many small client requests into
+model-shaped batches (the latency/throughput knob real scoring services
+expose; requests are padded into fixed slots so one jit'd function serves
+every shape).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.array import Array
+from ..core.flight.protocol import FlightDescriptor, FlightError
+from ..core.flight.server import InMemoryFlightServer
+from ..core.recordbatch import RecordBatch
+from ..core.schema import Schema
+
+
+class ScoringService(InMemoryFlightServer):
+    """DoExchange(batch) -> score_fn(batch).  score_fn: RecordBatch -> RecordBatch."""
+
+    def __init__(self, score_fn: Callable[[RecordBatch], RecordBatch], **kw):
+        super().__init__(**kw)
+        self.score_fn = score_fn
+        self.requests_served = 0
+
+    def do_exchange_impl(self, descriptor, schema, batch) -> RecordBatch:
+        out = self.score_fn(batch)
+        self.requests_served += 1
+        return out
+
+
+@dataclass
+class BatcherConfig:
+    max_batch: int = 8         # model batch slots
+    max_wait_s: float = 0.005  # coalescing window
+    pad_to: int = 128          # sequence padding bucket
+
+
+class Batcher:
+    """Coalesces single requests into padded model batches (thread-safe)."""
+
+    def __init__(self, cfg: BatcherConfig, model_fn: Callable[[np.ndarray, np.ndarray], np.ndarray]):
+        self.cfg = cfg
+        self.model_fn = model_fn  # (tokens (B,L) int32, lens (B,)) -> scores
+        self._lock = threading.Lock()
+        self._pending: list[tuple[np.ndarray, threading.Event, list]] = []
+
+    def score(self, tokens: np.ndarray) -> np.ndarray:
+        """Blocking single-request API; coalesced under the hood."""
+        done = threading.Event()
+        slot: list = []
+        with self._lock:
+            self._pending.append((tokens, done, slot))
+            if len(self._pending) >= self.cfg.max_batch:
+                self._flush_locked()
+        if not done.wait(self.cfg.max_wait_s):
+            with self._lock:
+                if not done.is_set():
+                    self._flush_locked()
+            done.wait()
+        return slot[0]
+
+    def _flush_locked(self) -> None:
+        if not self._pending:
+            return
+        batch, self._pending = self._pending[: self.cfg.max_batch], self._pending[self.cfg.max_batch:]
+        lens = np.array([len(t) for t, _, _ in batch], np.int32)
+        L = int(np.ceil(max(int(lens.max()), 1) / self.cfg.pad_to) * self.cfg.pad_to)
+        toks = np.zeros((self.cfg.max_batch, L), np.int32)  # fixed slots: one jit shape
+        for i, (t, _, _) in enumerate(batch):
+            toks[i, : len(t)] = t[:L]
+        scores = self.model_fn(toks, np.pad(lens, (0, self.cfg.max_batch - len(batch))))
+        for i, (_, done, slot) in enumerate(batch):
+            slot.append(np.asarray(scores[i]))
+            done.set()
+
+
+class LMScoringService(ScoringService):
+    """Scores ``tokens`` list-columns with an LM prefill (greedy next token)."""
+
+    def __init__(self, model, params, max_seq: int = 512, **kw):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+
+        @jax.jit
+        def _score(tokens):
+            lgts, _ = model.prefill(params, {"tokens": tokens})
+            nxt = jnp.argmax(lgts, axis=-1)
+            lp = jax.nn.log_softmax(lgts, axis=-1)
+            return nxt.astype(jnp.int32), jnp.max(lp, axis=-1)
+
+        self._score = _score
+        super().__init__(self._score_batch, **kw)
+
+    def _score_batch(self, batch: RecordBatch) -> RecordBatch:
+        col = batch.column("tokens")
+        rows = col.to_pylist()
+        B = len(rows)
+        toks = np.zeros((B, self.max_seq), np.int32)
+        for i, r in enumerate(rows):
+            r = (r or [])[: self.max_seq]
+            toks[i, : len(r)] = r
+        nxt, lp = self._score(jnp.asarray(toks))
+        return RecordBatch.from_pydict({
+            "next_token": np.asarray(nxt),
+            "logprob": np.asarray(lp, np.float32),
+        })

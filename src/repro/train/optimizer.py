@@ -1,0 +1,192 @@
+"""Optimizers: AdamW and Adafactor (factored second moment, for ≥100 B models).
+
+Pure pytree implementations (no optax dependency in this container).  State
+layout mirrors params so the same sharding tree applies; Adafactor's factored
+stats add only O(rows+cols) memory — the difference between Jamba-398B
+fitting in HBM or not (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"           # adamw | adafactor
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    min_lr_ratio: float = 0.1
+    # adafactor
+    factored_min_dim: int = 128
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, mu, nu, p):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), simplified: factored v, no first moment
+# ---------------------------------------------------------------------------
+
+
+def _factored(p, min_dim) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def adafactor_init(params, cfg: OptimizerConfig | None = None):
+    cfg = cfg or OptimizerConfig(name="adafactor")
+
+    def init_leaf(p):
+        if _factored(p, cfg.factored_min_dim):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),         # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(init_leaf, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8  # Adafactor's schedule
+
+    def upd(g, v, p):
+        g2 = g * g + 1e-30
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": vhat}
+        u = g / jnp.sqrt(vhat + cfg.eps)
+        # update clipping (RMS <= 1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = tree.flatten_up_to(state["v"])
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return new_params, {"v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, partial(adamw_update, cfg)
+    if cfg.name == "adafactor":
+        return partial(adafactor_init, cfg=cfg), partial(adafactor_update, cfg)
+    raise ValueError(cfg.name)
+
+
+def opt_state_logical_axes(opt_cfg: OptimizerConfig, param_axes):
+    """Logical axes for optimizer state (mirrors params; factored stats drop
+    the reduced dim's axis)."""
+    if opt_cfg.name == "adamw":
+        return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+    def leaf_axes(ax):
+        # ax is the tuple of logical names for one param
+        # shapes aren't available here; mirror _factored via name count only
+        return ax
+
+    def v_axes(ax, shape_hint=None):
+        return ax
+
+    # adafactor: we need shapes — caller should use opt_state_axes_with_params
+    raise NotImplementedError("use opt_state_axes_with_params for adafactor")
+
+
+def opt_state_axes_with_params(opt_cfg: OptimizerConfig, params, param_axes):
+    """Axes tree matching the *actual* opt state structure."""
+    if opt_cfg.name == "adamw":
+        return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+    is_ax = lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+    def leaf(p, ax):
+        if _factored(p, opt_cfg.factored_min_dim):
+            return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+        return {"v": ax}
+
+    v = jax.tree.map(leaf, params, jax.tree.unflatten(jax.tree.structure(params),
+                                                      jax.tree.flatten(param_axes, is_leaf=is_ax)[0]))
+    return {"v": v, "step": ()}

@@ -1,0 +1,99 @@
+"""Step builders: train_step / prefill_step / serve_step as pjit-able fns.
+
+``build_train_step`` returns (fn, in_shardings, out_shardings) ready for
+``jax.jit(...).lower(...)`` — the dry-run consumes exactly this.  Gradient
+accumulation (microbatching) is a ``lax.scan`` over batch slices; donation of
+params/opt-state keeps the memory analysis honest.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ShapeSpec, batch_logical_axes
+from ..distributed.sharding import ShardingCtx, tree_shardings
+from ..models.lm import LM, ModelConfig
+from .optimizer import OptimizerConfig, make_optimizer, opt_state_axes_with_params
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1
+    compressed_allreduce: bool = False  # int8 ring psum (distributed/collectives)
+
+
+def build_train_step(model: LM, train_cfg: TrainConfig, param_axes):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt_init, opt_update = make_optimizer(train_cfg.optimizer)
+    mb = train_cfg.microbatches
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if mb > 1:
+            def micro(carry, mbatch):
+                gsum, lsum = carry
+                loss, metrics, grads = grads_of(params, mbatch)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbatches)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss_sum / mb
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if train_cfg.compressed_allreduce:
+            # pjit path: apply the hop codec's quantization to gradients (the
+            # wire substitution itself lives in the DP driver's shard_map
+            # train step — see train/loop.py build_dp_train_step)
+            from ..distributed.collectives import quantized_error_feedback
+            zeros = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+            grads, _ = quantized_error_feedback(grads, zeros)
+
+        new_params, new_opt, opt_metrics = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step, opt_init
+
+
+def step_shardings(model: LM, train_cfg: TrainConfig, param_axes, params_shape,
+                   shape: ShapeSpec):
+    """(in_shardings, out_shardings) trees for jit(train_step)."""
+    ctx = model.ctx
+    p_sh = tree_shardings(param_axes, ctx.mesh, ctx.rules)
+    opt_axes = opt_state_axes_with_params(train_cfg.optimizer, params_shape, param_axes)
+    o_sh = tree_shardings(opt_axes, ctx.mesh, ctx.rules)
+    b_axes = batch_logical_axes(model.cfg, shape)
+    b_sh = tree_shardings(b_axes, ctx.mesh, ctx.rules)
+    metrics_sh = None  # replicated scalars
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh)
+
+
+def build_prefill_step(model: LM):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def build_serve_step(model: LM):
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+    return serve_step

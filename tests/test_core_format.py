@@ -1,0 +1,150 @@
+"""Core columnar format: buffers, arrays, RecordBatch, IPC round-trips."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Array, Buffer, RecordBatch, read_stream, write_stream
+from repro.core import types
+from repro.core.buffer import Bitmap
+from repro.core.ipc import encode_batch
+
+
+class TestBuffer:
+    def test_alignment(self):
+        for n in (1, 63, 64, 1000):
+            assert Buffer.allocate(n).is_aligned
+
+    def test_zero_copy_view(self):
+        arr = np.arange(100, dtype=np.int64)
+        buf = Buffer.from_array(arr)
+        assert buf.address == arr.ctypes.data  # no copy
+        assert np.array_equal(buf.view(np.int64), arr)
+
+    def test_slice_shares_memory(self):
+        buf = Buffer.from_array(np.arange(10, dtype=np.int32))
+        s = buf.slice(4, 8)
+        assert s.address == buf.address + 4
+
+    def test_bitmap_roundtrip(self):
+        mask = np.array([True, False, True, True, False, True, False, False, True])
+        bm = Bitmap.from_bools(mask)
+        assert np.array_equal(bm.to_bools(), mask)
+        assert bm.null_count() == 4
+        assert bm.is_valid(0) and not bm.is_valid(1)
+
+
+class TestArray:
+    def test_primitive_zero_copy(self):
+        vals = np.arange(1000, dtype=np.float32)
+        arr = Array.from_numpy(vals)
+        assert arr.to_numpy().ctypes.data == vals.ctypes.data
+
+    def test_nulls(self):
+        arr = Array.from_pylist([1, None, 3])
+        assert arr.null_count == 1
+        assert arr.to_pylist() == [1, None, 3]
+
+    def test_strings(self):
+        arr = Array.from_pylist(["Arrow", "Data", "!"])
+        assert arr.to_pylist() == ["Arrow", "Data", "!"]
+
+    def test_lists(self):
+        arr = Array.from_pylist([[1, 2], [], None, [3]])
+        assert arr.to_pylist() == [[1, 2], [], None, [3]]
+
+    def test_slice_is_zero_copy_and_correct(self):
+        arr = Array.from_numpy(np.arange(100, dtype=np.int32))
+        s = arr.slice(10, 20)
+        assert len(s) == 20 and s.to_pylist()[0] == 10
+        assert s.buffers[0].address == arr.buffers[0].address  # shares buffer
+
+    def test_take(self):
+        arr = Array.from_numpy(np.arange(10, dtype=np.int64))
+        assert arr.take(np.array([3, 1, 7])).to_pylist() == [3, 1, 7]
+
+
+class TestRecordBatch:
+    def test_paper_table1(self):
+        """The exact example from the paper's Table 1."""
+        b = RecordBatch.from_pydict({
+            "X": [555, 56565, None],
+            "Y": ["Arrow", "Data", "!"],
+            "Z": [5.7866, 0.0, 3.14],
+        })
+        assert b.num_rows == 3 and b.num_columns == 3
+        assert b.column("X").null_count == 1
+        assert b.to_pydict()["Y"] == ["Arrow", "Data", "!"]
+
+    def test_select_zero_copy(self):
+        b = RecordBatch.from_numpy({"a": np.arange(5), "b": np.ones(5)})
+        s = b.select(["b"])
+        assert s.schema.names == ["b"]
+        assert s.column("b").buffers[0].address == b.column("b").buffers[0].address
+
+    def test_schema_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            RecordBatch.from_pydict({"a": [1, 2], "b": [1]})
+
+    def test_filter(self):
+        b = RecordBatch.from_numpy({"a": np.arange(10, dtype=np.int64)})
+        out = b.filter(np.arange(10) % 2 == 0)
+        assert out.column("a").to_pylist() == [0, 2, 4, 6, 8]
+
+
+class TestIPC:
+    def test_roundtrip_mixed(self):
+        b = RecordBatch.from_pydict({
+            "i": [1, None, 3], "s": ["a", "bb", "ccc"], "f": [0.5, 1.5, -2.0],
+            "l": [[1, 2], None, [3]],
+        })
+        out = read_stream(write_stream([b]))
+        assert out[0] == b
+
+    def test_decode_is_zero_copy_views(self):
+        b = RecordBatch.from_numpy({"x": np.arange(1 << 12, dtype=np.int64)})
+        data = write_stream([b])
+        out = read_stream(data)[0]
+        # decoded column must be a view into one body allocation, not a copy
+        assert out.column("x").buffers[0].nbytes == (1 << 12) * 8
+
+    def test_sliced_batch_roundtrip(self):
+        b = RecordBatch.from_pydict({"s": ["aa", "bb", "cc", "dd"], "v": [1, 2, 3, 4]})
+        out = read_stream(write_stream([b.slice(1, 2)]))[0]
+        assert out.to_pydict() == {"s": ["bb", "cc"], "v": [2, 3]}
+
+    def test_scatter_gather_parts_match_bytes(self):
+        b = RecordBatch.from_numpy({"x": np.arange(100, dtype=np.float64)})
+        msg = encode_batch(b)
+        assert len(msg.to_bytes()) == msg.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+pyval = st.one_of(st.none(), st.integers(-2**40, 2**40))
+pystr = st.one_of(st.none(), st.text(max_size=12))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(pyval, min_size=1, max_size=50))
+def test_prop_int_column_roundtrip(values):
+    b = RecordBatch.from_pydict({"c": values})
+    assert read_stream(write_stream([b]))[0].to_pydict()["c"] == values
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(pystr, min_size=1, max_size=50))
+def test_prop_str_column_roundtrip(values):
+    b = RecordBatch.from_pydict({"c": values})
+    assert read_stream(write_stream([b]))[0].to_pydict()["c"] == values
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=2, max_size=60),
+       st.data())
+def test_prop_slice_equals_pylist_slice(values, data):
+    b = RecordBatch.from_pydict({"c": values})
+    i = data.draw(st.integers(0, len(values) - 1))
+    j = data.draw(st.integers(i, len(values)))
+    assert b.slice(i, j - i).to_pydict()["c"] == values[i:j]

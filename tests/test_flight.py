@@ -1,0 +1,148 @@
+"""Flight protocol: RPC verbs, transports, parallel streams, auth, hedging."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    Action,
+    FlightClient,
+    FlightDescriptor,
+    FlightError,
+    InMemoryFlightServer,
+    Ticket,
+)
+
+
+def make_batches(n=4, rows=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "a": rng.integers(0, 100, rows).astype(np.int64),
+        "b": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+@pytest.fixture()
+def server():
+    srv = InMemoryFlightServer(batches_per_endpoint=1).serve_tcp()
+    srv.add_dataset("ds", make_batches())
+    yield srv
+    srv.shutdown()
+
+
+@pytest.fixture(params=["inproc", "tcp"])
+def client(request, server):
+    if request.param == "inproc":
+        return FlightClient(server)
+    return FlightClient(f"tcp://127.0.0.1:{server.port}")
+
+
+class TestVerbs:
+    def test_get_flight_info(self, client):
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        assert len(info.endpoints) == 4
+        assert info.total_records == 4000
+
+    def test_list_flights(self, client):
+        infos = client.list_flights()
+        assert [i.descriptor.key for i in infos] == ["path:ds"]
+
+    def test_do_get_stream(self, client):
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        batches = list(client.do_get(info.endpoints[0].ticket))
+        assert len(batches) == 1 and batches[0].num_rows == 1000
+
+    def test_do_get_roundtrip_data(self, client, server):
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        got = client.do_get(info.endpoints[2].ticket).read_all().combine()
+        assert got == server.dataset("ds")[2]
+
+    def test_do_put(self, client, server):
+        batches = make_batches(2, 50, seed=9)
+        w = client.do_put(FlightDescriptor.for_path("up"), batches[0].schema)
+        for b in batches:
+            w.write_batch(b)
+        stats = w.close()
+        assert stats["rows"] == 100
+        assert server.dataset("up")[0] == batches[0]
+
+    def test_do_action(self, client):
+        names = client.do_action("list-names")[0].body.decode()
+        assert "ds" in names
+
+    def test_unknown_flight_raises(self, client):
+        with pytest.raises(FlightError):
+            client.get_flight_info(FlightDescriptor.for_path("nope"))
+
+    def test_do_exchange_echo(self, client):
+        b = make_batches(1, 10)[0]
+        ex = client.do_exchange(FlightDescriptor.for_path("echo"), b.schema)
+        assert ex.exchange(b) == b
+        ex.close()
+
+    def test_ticket_range_reads_are_idempotent(self, client):
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        t = info.endpoints[1].ticket
+        a = client.do_get(t).read_all().combine()
+        b = client.do_get(t).read_all().combine()
+        assert a == b
+
+
+class TestParallelStreams:
+    def test_read_all_parallel(self, client):
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        table, stats = client.read_all_parallel(info, max_streams=4)
+        assert table.num_rows == 4000
+        assert stats.streams == 4
+
+    def test_write_parallel(self, client, server):
+        batches = make_batches(8, 100, seed=5)
+        stats = client.write_parallel(FlightDescriptor.for_path("pp"), batches, max_streams=4)
+        assert stats.rows == 800
+        assert sum(b.num_rows for b in server.dataset("pp")) == 800
+
+    def test_hedged_read_completes(self, client):
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        table, _ = client.read_all_parallel(info, max_streams=2, hedge_after=0.5)
+        assert table.num_rows == 4000
+
+
+class TestAuth:
+    def test_token_required(self):
+        srv = InMemoryFlightServer(auth_token="s3cret").serve_tcp()
+        srv.add_dataset("ds", make_batches(1))
+        try:
+            bad = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            with pytest.raises(FlightError):
+                bad.list_flights()
+            good = FlightClient(f"tcp://127.0.0.1:{srv.port}", token="s3cret")
+            assert len(good.list_flights()) == 1
+        finally:
+            srv.shutdown()
+
+
+class TestStragglerMitigation:
+    def test_hedge_beats_slow_primary(self, server):
+        """A slow server answer loses to the hedged replica read."""
+        slow_first = {"n": 0}
+        orig = server.do_get_impl
+
+        def sometimes_slow(ticket):
+            r = ticket.range()
+            if r["start"] == 0 and slow_first["n"] == 0:
+                slow_first["n"] += 1
+                time.sleep(1.5)
+            return orig(ticket)
+
+        server.do_get_impl = sometimes_slow
+        client = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        t0 = time.perf_counter()
+        table, _ = client.read_all_parallel(
+            info, max_streams=4, hedge_after=0.15,
+            client_factory=lambda loc: FlightClient(f"tcp://127.0.0.1:{server.port}"))
+        dt = time.perf_counter() - t0
+        assert table.num_rows == 4000
+        assert dt < 1.4  # hedge fired instead of waiting out the straggler

@@ -1,0 +1,117 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps + property tests.
+
+All kernels run in interpret mode on CPU (the TPU lowering path is the same
+kernel body; interpret executes it in Python per the assignment).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- varlen --
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+@pytest.mark.parametrize("n,max_len", [(8, 8), (32, 16), (64, 33), (16, 128)])
+def test_varlen_unpack_sweep(n, max_len, dtype):
+    rng = np.random.default_rng(n * max_len)
+    lens = rng.integers(0, 2 * max_len, n)
+    offs = np.zeros(n + 1, np.int32)
+    np.cumsum(lens, out=offs[1:])
+    vals = (rng.standard_normal(max(offs[-1], 1)) * 100).astype(dtype)
+    got, glens = ops.varlen_unpack(jnp.asarray(offs), jnp.asarray(vals), max_len,
+                                   use_pallas=True)
+    want, wlens = ref.varlen_unpack_ref(jnp.asarray(offs), jnp.asarray(vals), max_len)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(glens), np.asarray(wlens))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=8, max_size=8),
+       st.integers(1, 24))
+def test_prop_varlen_unpack(lens, max_len):
+    offs = np.zeros(9, np.int32)
+    np.cumsum(lens, out=offs[1:])
+    vals = np.arange(max(offs[-1], 1), dtype=np.int32)
+    got, gl = ops.varlen_unpack(jnp.asarray(offs), jnp.asarray(vals), max_len,
+                                use_pallas=True)
+    want, wl = ref.varlen_unpack_ref(jnp.asarray(offs), jnp.asarray(vals), max_len)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # invariant: row i reproduces values[offs[i]:offs[i]+len]
+    for i in range(8):
+        L = min(lens[i], max_len)
+        assert np.array_equal(np.asarray(got)[i, :L], vals[offs[i]:offs[i] + L])
+
+
+# -------------------------------------------------------------- quantize --
+@pytest.mark.parametrize("m,k", [(8, 128), (64, 256), (256, 384), (16, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_sweep(m, k, dtype):
+    rng = np.random.default_rng(m + k)
+    x = jnp.asarray(rng.standard_normal((m, k)) * 10, dtype)
+    q1, s1 = ops.quantize(x, use_pallas=True)
+    q2, s2 = ref.quantize_ref(x)
+    # bf16 inputs can land exactly on .5 ties; kernel/ref may round either way
+    dq = np.abs(np.asarray(q1, np.int32) - np.asarray(q2, np.int32))
+    assert dq.max() <= 1 and (dq > 0).mean() < 1e-3, (dq.max(), (dq > 0).mean())
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    # round-trip error bounded by scale/2 per element
+    back = ops.dequantize(q1, s1, use_pallas=True)
+    err = np.abs(np.asarray(back, np.float32) - np.asarray(x, np.float32))
+    # scale/2 + ulp slack: bf16 inputs can tie exactly at the rounding boundary
+    bound = np.repeat(np.asarray(s1), 128, axis=-1) * 0.505 + 1e-5
+    assert (err <= bound).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_prop_quantize_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 128)) * rng.uniform(0.01, 100))
+    q, s = ops.quantize(x, use_pallas=True)
+    back = np.asarray(ops.dequantize(q, s, use_pallas=True))
+    amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    assert (np.abs(back - np.asarray(x)) <= amax / 127.0 * 0.5 + 1e-7).all()
+
+
+# ------------------------------------------------------ selection gather --
+@pytest.mark.parametrize("n,d,m", [(64, 32, 16), (128, 128, 64), (100, 7, 8)])
+def test_selection_gather_sweep(n, d, m):
+    rng = np.random.default_rng(n * d)
+    vals = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, n, m), jnp.int32)
+    got = ops.selection_gather(vals, idx, use_pallas=True)
+    want = ref.selection_gather_ref(vals, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------- flash decode --
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 128, 32), (2, 4, 512, 64), (4, 1, 1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(b, h, s, d, dtype):
+    rng = np.random.default_rng(b * s)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    length = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    got = ops.flash_decode(q, k, v, length, use_pallas=True)
+    want = ref.flash_decode_ref(q, k, v, length)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_decode_masks_beyond_length():
+    """Values past `length` must not affect the output."""
+    b, h, s, d = 1, 1, 256, 32
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    out1 = ops.flash_decode(q, k, v, jnp.asarray([100]), use_pallas=True)
+    k2 = k.at[:, 100:].set(1e6)
+    v2 = v.at[:, 100:].set(-1e6)
+    out2 = ops.flash_decode(q, k2, v2, jnp.asarray([100]), use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)

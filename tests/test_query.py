@@ -1,0 +1,123 @@
+"""Query engine vs numpy oracle + Flight query service + protocol baselines."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RecordBatch
+from repro.core.flight import Action, FlightClient, FlightDescriptor
+from repro.query import FlightQueryService, QueryPlan, aggregate, col, execute
+from repro.query.odbc_sim import FlightColumnarProtocol, OdbcProtocol, TurbodbcProtocol
+
+
+def taxi(n=5000, seed=0):
+    rng = np.random.default_rng(seed)
+    return RecordBatch.from_pydict({
+        "passenger_count": rng.integers(1, 7, n).astype(np.int32),
+        "trip_distance": rng.gamma(2.0, 1.5, n).astype(np.float32),
+        "fare_amount": rng.gamma(3.0, 5.0, n).astype(np.float64),
+    })
+
+
+class TestEngine:
+    def test_predicate_matches_numpy(self):
+        b = taxi()
+        plan = QueryPlan("t", predicate=(col("trip_distance") > 3.0) &
+                                        (col("passenger_count") == 2))
+        out = list(execute(plan, [b]))[0]
+        d = b.column("trip_distance").to_numpy()
+        p = b.column("passenger_count").to_numpy()
+        want = int(((d > 3.0) & (p == 2)).sum())
+        assert out.num_rows == want
+
+    def test_projection_pushdown_only_ships_columns(self):
+        b = taxi()
+        plan = QueryPlan("t", projection=["fare_amount"],
+                         predicate=col("trip_distance") > 1.0)
+        out = list(execute(plan, [b]))[0]
+        assert out.schema.names == ["fare_amount"]
+
+    def test_limit(self):
+        plan = QueryPlan("t", limit=7)
+        outs = list(execute(plan, [taxi(), taxi(seed=1)]))
+        assert sum(o.num_rows for o in outs) == 7
+
+    def test_aggregate_matches_numpy(self):
+        b = taxi()
+        plan = QueryPlan("t", predicate=col("trip_distance") > 2.0,
+                         aggregations=[("mean", "fare_amount"), ("count", "fare_amount")])
+        out = aggregate(plan, [b])
+        mask = b.column("trip_distance").to_numpy() > 2.0
+        np.testing.assert_allclose(out["mean(fare_amount)"],
+                                   b.column("fare_amount").to_numpy()[mask].mean())
+        assert out["count(fare_amount)"] == mask.sum()
+
+    def test_plan_serialization_roundtrip(self):
+        plan = QueryPlan("t", projection=["a"], predicate=col("x") > 1,
+                         aggregations=[("sum", "a")], limit=5)
+        plan2 = QueryPlan.deserialize(plan.serialize())
+        assert plan2.dataset == "t" and plan2.projection == ["a"]
+        assert plan2.limit == 5 and plan2.aggregations == [("sum", "a")]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.1, 10.0), st.integers(1, 6))
+def test_prop_filter_count_invariant(threshold, pc):
+    b = taxi(800, seed=42)
+    plan = QueryPlan("t", predicate=(col("trip_distance") > threshold) &
+                                    (col("passenger_count") == pc))
+    outs = list(execute(plan, [b]))
+    got = sum(o.num_rows for o in outs)
+    d = b.column("trip_distance").to_numpy()
+    p = b.column("passenger_count").to_numpy()
+    assert got == int(((d > threshold) & (p == pc)).sum())
+
+
+class TestService:
+    def test_query_over_flight(self):
+        svc = FlightQueryService().serve_tcp()
+        try:
+            svc.add_dataset("taxi", [taxi(seed=s) for s in range(4)])
+            c = FlightClient(f"tcp://127.0.0.1:{svc.port}")
+            plan = QueryPlan("taxi", projection=["fare_amount"],
+                             predicate=col("trip_distance") > 2.0)
+            info = c.get_flight_info(FlightDescriptor.for_command(plan.serialize()))
+            table, _ = c.read_all_parallel(info, max_streams=4)
+            assert table.schema.names == ["fare_amount"]
+            want = sum(int((t.column("trip_distance").to_numpy() > 2.0).sum())
+                       for t in (taxi(seed=s) for s in range(4)))
+            assert table.num_rows == want
+        finally:
+            svc.shutdown()
+
+    def test_aggregate_action(self):
+        svc = FlightQueryService()
+        svc.add_dataset("taxi", [taxi()])
+        c = FlightClient(svc)
+        plan = QueryPlan("taxi", aggregations=[("max", "fare_amount")])
+        out = json.loads(c.do_action(Action("aggregate", plan.serialize()))[0].body)
+        assert out["max(fare_amount)"] == pytest.approx(
+            float(taxi().column("fare_amount").to_numpy().max()))
+
+
+class TestProtocolBaselines:
+    def test_all_protocols_agree(self):
+        b = [taxi(2000)]
+        plan = QueryPlan("t", projection=["fare_amount", "trip_distance"],
+                         predicate=col("passenger_count") >= 3)
+        rows, _ = OdbcProtocol().transfer(plan, b)
+        tb, _ = TurbodbcProtocol(500).transfer(plan, b)
+        fb, _ = FlightColumnarProtocol().transfer(plan, b)
+        n = len(rows)
+        assert n == sum(x.num_rows for x in tb) == sum(x.num_rows for x in fb)
+        fare_odbc = np.array([r[0] for r in rows])
+        fare_flight = np.concatenate([x.column("fare_amount").to_numpy() for x in fb])
+        np.testing.assert_allclose(np.sort(fare_odbc), np.sort(fare_flight))
+
+    def test_flight_serialization_cheaper_than_odbc(self):
+        b = [taxi(20000)]
+        plan = QueryPlan("t")
+        _, st_o = OdbcProtocol().transfer(plan, b)
+        _, st_f = FlightColumnarProtocol().transfer(plan, b)
+        assert st_f.total_s < st_o.total_s  # the paper's entire point
