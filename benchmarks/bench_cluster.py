@@ -1,0 +1,116 @@
+"""Shard-scaling: aggregate DoGet/DoPut throughput × shard count × batch size.
+
+Reproduces the paper's cores-vs-throughput curve (§3, Fig 2: parallel streams
+up to ~half the system cores keep adding bandwidth) over the cluster layer:
+
+* ``inproc`` — shards serve through ``netsim.paced_stream`` at the modeled
+  per-stream Flight-over-IB rate.  Pacing sleeps release the GIL, so the
+  measured aggregate over N parallel shard streams shows the real scaling
+  shape this container's core count cannot produce from loopback CPU work.
+* ``tcp`` — unpaced loopback sockets, measured as-is (saturates immediately
+  on a small-core box; recorded for the trajectory anyway).
+
+``run.py`` emits the timings to BENCH_cluster.json so the shard-scaling
+trajectory is recorded per-commit.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.flight import FlightClusterClient, FlightClusterServer, InMemoryFlightServer
+from repro.core.flight.netsim import FLIGHT_O_IB_GET, paced_stream
+
+from .common import Timing, records_batch
+
+
+class PacedShardServer(InMemoryFlightServer):
+    """Shard whose DoGet streams at the modeled per-stream wire rate."""
+
+    link = FLIGHT_O_IB_GET
+
+    def do_get_impl(self, ticket):
+        schema, batches = super().do_get_impl(ticket)
+        return schema, paced_stream(batches, self.link)
+
+
+def _paced_factory(i: int, loc_name: str) -> PacedShardServer:
+    # one endpoint (= one stream) per shard: the paper's topology, and the
+    # thing under test — shard count alone sets the parallelism
+    return PacedShardServer(location_name=loc_name, batches_per_endpoint=0, shard_id=i)
+
+
+def _best_of(fn, repeats: int = 3):
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn()
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, out = dt, r
+    return best, out
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    shard_counts = (1, 2, 4) if quick else (1, 2, 4, 8)
+    # paper shape: fixed-width 32 B records; sweep records-per-batch
+    batch_rows = (20_000, 80_000) if quick else (20_000, 80_000, 320_000)
+    n_batches = 8
+
+    for rows in batch_rows:
+        batches = [records_batch(rows, seed=s) for s in range(n_batches)]
+        nbytes = sum(b.nbytes() for b in batches)
+
+        base_inproc = None
+        for n in shard_counts:
+            # -- in-proc, wire-paced shards: the shard-scaling curve -------- #
+            cl = FlightClusterServer(num_shards=n, shard_factory=_paced_factory)
+            cl.add_dataset("bench", batches)
+            cc = FlightClusterClient(cl, max_streams=max(shard_counts))
+            secs, table = _best_of(lambda: cc.read("bench")[0])
+            assert table.num_rows == rows * n_batches
+            if n == 1:
+                base_inproc = secs
+            out.append(Timing(
+                f"cluster_doget_inproc_shards{n}_rows{rows}", secs, nbytes,
+                extra={"shards": n, "transport": "inproc", "batch_rows": rows,
+                       "speedup_vs_1shard": round(base_inproc / secs, 2)}))
+
+            # -- sharded parallel DoPut (reference-move, unpaced) ----------- #
+            wsecs, _ = _best_of(lambda: cc.write("up", batches), repeats=1)
+            out.append(Timing(
+                f"cluster_doput_inproc_shards{n}_rows{rows}", wsecs, nbytes,
+                extra={"shards": n, "transport": "inproc", "batch_rows": rows}))
+
+        # -- TCP loopback, measured (unpaced) ------------------------------- #
+        for n in shard_counts:
+            cl = FlightClusterServer(num_shards=n).serve_tcp()
+            try:
+                cl.add_dataset("bench", batches)
+                cc = FlightClusterClient(
+                    f"tcp://127.0.0.1:{cl.port}", max_streams=max(shard_counts))
+                secs, table = _best_of(lambda: cc.read("bench")[0])
+                assert table.num_rows == rows * n_batches
+                out.append(Timing(
+                    f"cluster_doget_tcp_shards{n}_rows{rows}", secs, nbytes,
+                    extra={"shards": n, "transport": "tcp", "batch_rows": rows}))
+            finally:
+                cl.shutdown()
+
+    # modeled endpoint-parallel bulk curve for reference (paper Fig 6 regime)
+    payload = 8 * 320_000 * 32
+    from repro.core.flight.netsim import FLIGHT_O_IB_BULK
+    for n in (1, 2, 4, 8, 16):
+        t = FLIGHT_O_IB_BULK.transfer_seconds(payload, n)
+        out.append(Timing(f"cluster_model_bulk_ib_shards{n}", t, payload,
+                          extra={"shards": n, "transport": "model"}))
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_bench_json
+
+    timings = run()
+    for t in timings:
+        print(t.csv() + (f" {t.extra}" if t.extra else ""))
+    print(f"# wrote {emit_bench_json('cluster', timings)}")

@@ -1,8 +1,10 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
@@ -55,6 +57,29 @@ class Timing:
     def csv(self, derived: str = "") -> str:
         us = self.seconds * 1e6
         return f"{self.name},{us:.1f},{derived or f'{self.mb_per_s:.1f}MB/s'}"
+
+
+def emit_bench_json(suite: str, timings: list[Timing], path: str | Path | None = None) -> Path:
+    """Write ``BENCH_<suite>.json`` — the per-commit perf-trajectory record.
+
+    CI uploads these as artifacts; diffing two commits' files shows where a
+    suite's throughput moved."""
+    path = Path(path) if path is not None else Path(f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "results": [
+            {
+                "name": t.name,
+                "seconds": t.seconds,
+                "nbytes": t.nbytes,
+                "mb_per_s": round(t.mb_per_s, 3),
+                "extra": t.extra or {},
+            }
+            for t in timings
+        ],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def timeit(fn, repeats: int = 3, warmup: int = 1):

@@ -17,17 +17,20 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (bench_endpoints, bench_export, bench_kernels, bench_protocols,
-                   bench_query, bench_serde, bench_transfer)
+    from . import (bench_cluster, bench_endpoints, bench_export, bench_kernels,
+                   bench_protocols, bench_query, bench_serde, bench_transfer)
+    from .common import emit_bench_json
     suites = {
         "transfer": bench_transfer,    # Fig 2/3
         "export": bench_export,        # Fig 4
         "protocols": bench_protocols,  # Fig 5/6
         "query": bench_query,          # Fig 8/9
         "endpoints": bench_endpoints,  # Fig 10
+        "cluster": bench_cluster,      # shard scaling (Fig 2 over N servers)
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
+    json_suites = {"cluster"}  # suites recorded to BENCH_<name>.json
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
@@ -36,9 +39,12 @@ def main() -> None:
         if only and name not in only:
             continue
         try:
-            for t in mod.run(quick=quick):
+            timings = list(mod.run(quick=quick))
+            for t in timings:
                 extra = f" {t.extra}" if t.extra else ""
                 print(t.csv() + extra, flush=True)
+            if name in json_suites:
+                print(f"# wrote {emit_bench_json(name, timings)}", file=sys.stderr)
         except Exception as e:
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -1,5 +1,14 @@
-"""Arrow-Flight-style RPC: protocol, transports, server, client, netsim."""
-from .client import FlightClient, FlightExchange, FlightStreamReader, TransferStats  # noqa: F401
+"""Arrow-Flight-style RPC: protocol, transports, server, client, scheduler,
+cluster, netsim."""
+from .client import FlightClient, FlightExchange, FlightStreamReader  # noqa: F401
+from .cluster import (  # noqa: F401
+    FlightClusterClient,
+    FlightClusterServer,
+    HashPlacement,
+    Placement,
+    RoundRobinPlacement,
+    make_placement,
+)
 from .protocol import (  # noqa: F401
     Action,
     ActionResult,
@@ -9,6 +18,8 @@ from .protocol import (  # noqa: F401
     FlightInfo,
     FlightUnavailableError,
     Location,
+    ShardSpec,
     Ticket,
 )
+from .scheduler import ParallelStreamScheduler, TransferStats  # noqa: F401
 from .server import FlightServerBase, InMemoryFlightServer  # noqa: F401

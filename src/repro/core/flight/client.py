@@ -8,18 +8,15 @@ Two connection modes, chosen by ``Location``:
 
 ``read_all_parallel`` implements the paper's throughput recipe: one worker
 per endpoint, ``max_streams`` concurrent connections (paper Fig 2: scale
-streams up to ~half the cores).  Because tickets are idempotent range reads,
-the same worker loop also provides **straggler mitigation**: a configurable
-hedge timer re-issues a slow endpoint's ticket against a replica location and
-takes whichever stream finishes first.
+streams up to ~half the cores).  It is a thin wrapper over
+``scheduler.ParallelStreamScheduler``, which also provides backpressure,
+ordered/unordered reassembly, location failover, and hedged (straggler-
+mitigating) re-reads — see scheduler.py; multi-endpoint *cluster* topologies
+live in cluster.py.
 """
 from __future__ import annotations
 
 import queue
-import threading
-import time
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
 from typing import Iterator
 
 from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
@@ -29,15 +26,15 @@ from .protocol import (
     Action,
     ActionResult,
     FlightDescriptor,
-    FlightEndpoint,
     FlightError,
     FlightInfo,
     FlightUnavailableError,
     Location,
     Ticket,
 )
+from .scheduler import ParallelStreamScheduler, TransferStats
 from .server import FlightServerBase
-from .transport import KIND_CTRL, KIND_DATA, FrameConnection, dial
+from .transport import FrameConnection, dial
 
 
 # --------------------------------------------------------------------------
@@ -97,18 +94,6 @@ class FlightStreamWriter:
 # --------------------------------------------------------------------------
 
 
-@dataclass
-class TransferStats:
-    rows: int = 0
-    bytes: int = 0
-    seconds: float = 0.0
-    streams: int = 1
-
-    @property
-    def mb_per_s(self) -> float:
-        return self.bytes / max(self.seconds, 1e-12) / 1e6
-
-
 class FlightClient:
     def __init__(self, target: FlightServerBase | Location | str, token: str | None = None):
         self._server: FlightServerBase | None = None
@@ -149,6 +134,10 @@ class FlightClient:
         try:
             conn.send_ctrl(payload)
             resp = conn.recv_ctrl()
+        except FlightError:
+            # server declined at the RPC boundary: the channel is still clean
+            self._checkin(conn)
+            raise
         except (ConnectionError, OSError) as e:
             conn.close()
             raise FlightUnavailableError(str(e)) from e
@@ -183,10 +172,15 @@ class FlightClient:
         conn = self._checkout()
         try:
             conn.send_ctrl({"method": "DoGet", "ticket": ticket.to_json(), "token": self.token})
-            conn.recv_ctrl()  # ok / error
+            try:
+                conn.recv_ctrl()  # ok / error
+            except FlightError:
+                self._checkin(conn)  # refused before the stream: channel clean
+                raise
             kind, meta, body = conn.recv_frame()
             msg = decode_message(meta, body)
             if msg.kind != "schema":
+                conn.close()  # mid-stream protocol mismatch: channel dirty
                 raise FlightError("DoGet: expected schema message")
         except (ConnectionError, OSError) as e:
             conn.close()
@@ -207,73 +201,63 @@ class FlightClient:
         if self._server is not None:
             return FlightStreamWriter(schema, None, self._server, descriptor)
         conn = self._checkout()
-        conn.send_ctrl({"method": "DoPut", "descriptor": descriptor.to_json(), "token": self.token})
-        conn.recv_ctrl()
+        try:
+            conn.send_ctrl(
+                {"method": "DoPut", "descriptor": descriptor.to_json(), "token": self.token})
+            conn.recv_ctrl()
+        except FlightError:
+            self._checkin(conn)
+            raise
+        except (ConnectionError, OSError) as e:
+            conn.close()
+            raise FlightUnavailableError(str(e)) from e
         return FlightStreamWriter(schema, conn, None, descriptor)
 
     def do_exchange(self, descriptor: FlightDescriptor, schema: Schema) -> "FlightExchange":
         return FlightExchange(self, descriptor, schema)
 
     # -- parallel stream manager (the paper's Fig 2/3 engine) ---------------- #
+    def scheduler(
+        self,
+        max_streams: int = 8,
+        hedge_after: float | None = None,
+        client_factory=None,
+        ordered: bool = True,
+        window: int = 4,
+    ) -> ParallelStreamScheduler:
+        """A ParallelStreamScheduler whose primary connection is this client.
+
+        ``client_factory(location) -> FlightClient`` lets hedges *and*
+        location failovers cross hosts (the scheduler routes every attempt
+        after the first through it); without it every attempt re-uses this
+        client (retry the same server).
+        """
+        return ParallelStreamScheduler(
+            client_factory=lambda loc: self,
+            hedge_factory=client_factory,
+            max_streams=max_streams,
+            hedge_after=hedge_after,
+            ordered=ordered,
+            window=window,
+        )
+
     def read_all_parallel(
         self,
         info: FlightInfo,
         max_streams: int = 8,
         hedge_after: float | None = None,
         client_factory=None,
+        ordered: bool = True,
     ) -> tuple[Table, TransferStats]:
         """Pull every endpoint of ``info`` with up to ``max_streams`` parallel
         DoGet streams.  ``hedge_after`` seconds without completion re-issues
         the ticket on a replica location (straggler mitigation).
         ``client_factory(location) -> FlightClient`` lets hedges cross hosts.
         """
-        endpoints = list(info.endpoints)
-        results: list[list[RecordBatch] | None] = [None] * len(endpoints)
-        t0 = time.perf_counter()
-
-        def fetch(i: int, ep: FlightEndpoint) -> None:
-            def attempt(client: "FlightClient") -> list[RecordBatch]:
-                return list(client.do_get(ep.ticket))
-
-            if hedge_after is None:
-                results[i] = attempt(self)
-                return
-            done = threading.Event()
-            winner: list[list[RecordBatch]] = []
-
-            def primary():
-                try:
-                    out = attempt(self)
-                    if not done.is_set():
-                        winner.append(out)
-                        done.set()
-                except FlightError:
-                    pass
-
-            pt = threading.Thread(target=primary, daemon=True)
-            pt.start()
-            if not done.wait(hedge_after):
-                # hedge on a replica (or retry same server if no factory)
-                for loc in ep.locations:
-                    try:
-                        client = client_factory(loc) if client_factory else self
-                        out = attempt(client)
-                        if not done.is_set():
-                            winner.append(out)
-                            done.set()
-                        break
-                    except FlightError:
-                        continue
-                done.wait()
-            results[i] = winner[0]
-
-        with ThreadPoolExecutor(max_workers=max_streams) as pool:
-            list(pool.map(lambda args: fetch(*args), enumerate(endpoints)))
-
-        batches = [b for r in results for b in (r or [])]
-        dt = time.perf_counter() - t0
-        table = Table(batches)
-        return table, TransferStats(table.num_rows, table.nbytes(), dt, min(max_streams, len(endpoints)))
+        return self.scheduler(
+            max_streams=max_streams, hedge_after=hedge_after,
+            client_factory=client_factory, ordered=ordered,
+        ).fetch(info)
 
     def write_parallel(
         self,
@@ -284,20 +268,8 @@ class FlightClient:
         """DoPut the batches over N parallel streams (round-robin)."""
         schema = batches[0].schema
         shards = [batches[i::max_streams] for i in range(max_streams)]
-        shards = [s for s in shards if s]
-        t0 = time.perf_counter()
-
-        def put(shard: list[RecordBatch]) -> None:
-            w = self.do_put(descriptor, schema)
-            for b in shard:
-                w.write_batch(b)
-            w.close()
-
-        with ThreadPoolExecutor(max_workers=len(shards)) as pool:
-            list(pool.map(put, shards))
-        dt = time.perf_counter() - t0
-        return TransferStats(
-            sum(b.num_rows for b in batches), sum(b.nbytes() for b in batches), dt, len(shards)
+        return self.scheduler(max_streams=max_streams).put(
+            descriptor, schema, [(None, s) for s in shards]
         )
 
 

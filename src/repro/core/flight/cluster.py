@@ -1,0 +1,465 @@
+"""Sharded Flight cluster — the paper's multi-endpoint topology (§3, Fig 2).
+
+The paper's headline DoGet rates come from *parallel* RecordBatch streams:
+``GetFlightInfo`` returns a ``FlightInfo`` whose endpoints live on different
+server processes, and the client pulls them concurrently.  This module
+supplies the server side of that topology:
+
+* ``FlightClusterServer`` — a head node that partitions each dataset across
+  N ``InMemoryFlightServer`` shard endpoints.  ``GetFlightInfo`` answers with
+  one ``(Location, Ticket)`` endpoint per shard slice, so any scheduler-aware
+  client saturates all shards at once.  The head itself still serves every
+  verb (DoGet proxies/gathers, DoPut re-partitions), so legacy single-stream
+  clients keep working.
+* placements — ``RoundRobinPlacement`` (batch-granular, balanced bytes) and
+  ``HashPlacement`` (row-granular, hash-by-column; co-locates equal keys on
+  one shard, the layout a distributed join/aggregate wants).  Hashes are
+  salt-free and stable across processes, so two clusters loaded with the
+  same data place rows identically.
+* ``FlightClusterClient`` — convenience wrapper bundling a head connection
+  with a ``ParallelStreamScheduler``: ``read()`` fans in all shard endpoints,
+  ``write()`` partitions client-side and DoPuts straight to the shards in
+  parallel (never funneling bytes through the head).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import zlib
+
+import numpy as np
+
+from ..recordbatch import RecordBatch, Table
+from ..schema import Schema
+from .client import FlightClient
+from .protocol import (
+    Action,
+    ActionResult,
+    FlightDescriptor,
+    FlightError,
+    FlightInfo,
+    Location,
+    ShardSpec,
+    Ticket,
+)
+from .scheduler import ParallelStreamScheduler, TransferStats
+from .server import FlightServerBase, InMemoryFlightServer
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing constant
+
+
+# --------------------------------------------------------------------------
+# placement policies
+# --------------------------------------------------------------------------
+
+
+class Placement:
+    """Maps a list of RecordBatches onto ``num_shards`` buckets."""
+
+    scheme = "?"
+
+    def assign(self, batches: list[RecordBatch], num_shards: int) -> list[list[RecordBatch]]:
+        raise NotImplementedError
+
+    def spec(self, num_shards: int) -> ShardSpec:
+        return ShardSpec(self.scheme, num_shards)
+
+
+class RoundRobinPlacement(Placement):
+    """Batch ``i`` goes to shard ``i % N`` — balanced, zero-copy."""
+
+    scheme = "round_robin"
+
+    def assign(self, batches, num_shards):
+        shards: list[list[RecordBatch]] = [[] for _ in range(num_shards)]
+        for i, b in enumerate(batches):
+            shards[i % num_shards].append(b)
+        return shards
+
+
+class HashPlacement(Placement):
+    """Row-granular placement by a stable hash of one column.
+
+    Equal key values always land on the same shard (and the same shard id
+    across runs/processes — no PYTHONHASHSEED dependence), which is what
+    shard-local joins and aggregations require."""
+
+    scheme = "hash"
+
+    def __init__(self, key: str):
+        self.key = key
+
+    def spec(self, num_shards: int) -> ShardSpec:
+        return ShardSpec(self.scheme, num_shards, key=self.key)
+
+    def row_shards(self, batch: RecordBatch, num_shards: int) -> np.ndarray:
+        col = batch.column(self.key)
+        try:
+            vals = col.to_numpy()
+        except TypeError:
+            vals = None
+        n = np.uint64(num_shards)
+        if vals is not None and np.issubdtype(vals.dtype, np.integer):
+            h = vals.astype(np.uint64) * _MIX
+            return ((h >> np.uint64(33)) % n).astype(np.int64)
+        if vals is not None and np.issubdtype(vals.dtype, np.floating):
+            f = vals.astype(np.float64)
+            f = np.where(f == 0.0, 0.0, f)            # -0.0 == 0.0 → same shard
+            f = np.where(np.isnan(f), np.nan, f)      # canonical NaN payload
+            bits = f.view(np.uint64) * _MIX
+            return ((bits >> np.uint64(33)) % n).astype(np.int64)
+        return np.array(
+            [zlib.crc32(repr(v).encode()) % num_shards for v in col.to_pylist()],
+            dtype=np.int64,
+        )
+
+    def assign(self, batches, num_shards):
+        shards: list[list[RecordBatch]] = [[] for _ in range(num_shards)]
+        for b in batches:
+            ids = self.row_shards(b, num_shards)
+            for s in range(num_shards):
+                sub = b.filter(ids == s)
+                if sub.num_rows:
+                    shards[s].append(sub)
+        return shards
+
+
+def make_placement(placement: str | Placement, key: str | None = None) -> Placement:
+    if isinstance(placement, Placement):
+        return placement
+    if placement == "round_robin":
+        return RoundRobinPlacement()
+    if placement == "hash":
+        if not key:
+            raise ValueError("hash placement needs a key column")
+        return HashPlacement(key)
+    raise ValueError(f"unknown placement {placement!r}")
+
+
+# --------------------------------------------------------------------------
+# head node
+# --------------------------------------------------------------------------
+
+
+class FlightClusterServer(FlightServerBase):
+    """Head node of an N-shard Flight cluster.
+
+    ``add_dataset``/``DoPut`` partition via the placement policy;
+    ``GetFlightInfo`` exposes per-shard endpoints whose tickets carry the
+    owning shard id, so hedged re-reads and head-side proxying both route
+    without a lookup."""
+
+    def __init__(
+        self,
+        num_shards: int = 2,
+        placement: str | Placement = "round_robin",
+        hash_key: str | None = None,
+        location_name: str = "cluster",
+        auth_token: str | None = None,
+        batches_per_endpoint: int = 0,
+        shard_factory=None,
+    ):
+        super().__init__(location_name, auth_token)
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.placement = make_placement(placement, hash_key)
+        # shard_factory(shard_id, location_name) -> InMemoryFlightServer lets
+        # benchmarks/tests substitute instrumented or wire-paced shards
+        if shard_factory is None:
+            def shard_factory(i: int, loc_name: str) -> InMemoryFlightServer:
+                return InMemoryFlightServer(
+                    location_name=loc_name,
+                    auth_token=auth_token,
+                    batches_per_endpoint=batches_per_endpoint,
+                    shard_id=i,
+                )
+        self.shards = [
+            shard_factory(i, f"{location_name}-shard{i}") for i in range(num_shards)
+        ]
+        for i, s in enumerate(self.shards):
+            s.shard_id = i
+        self._datasets: dict[str, Schema] = {}
+        self._dlock = threading.Lock()
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    # -- lifecycle --------------------------------------------------------- #
+    def serve_tcp(self, host: str = "127.0.0.1", port: int = 0) -> "FlightClusterServer":
+        super().serve_tcp(host, port)
+        for s in self.shards:
+            s.serve_tcp(host, 0)
+        return self
+
+    def shutdown(self) -> None:
+        super().shutdown()
+        for s in self.shards:
+            s.shutdown()
+
+    # -- loading ----------------------------------------------------------- #
+    def add_dataset(self, name: str, batches: list[RecordBatch]) -> None:
+        schema = batches[0].schema
+        parts = self.placement.assign(batches, self.num_shards)
+        for shard, part in zip(self.shards, parts):
+            shard.add_dataset(name, part, schema=schema)
+        with self._dlock:
+            self._datasets[name] = schema
+
+    def dataset(self, name: str) -> list[RecordBatch]:
+        """All shards' batches in shard order (the head DoGet gather order)."""
+        return [b for s in self.shards if name in s._store for b in s.dataset(name)]
+
+    # -- handlers ----------------------------------------------------------- #
+    def _info_for(self, name: str) -> FlightInfo:
+        with self._dlock:
+            if name not in self._datasets:
+                raise FlightError(f"no such flight: {name}")
+            schema = self._datasets[name]
+        endpoints, records, nbytes = [], 0, 0
+        for shard in self.shards:
+            try:
+                info = shard.get_flight_info_impl(FlightDescriptor.for_path(name))
+            except FlightError:
+                continue
+            if info.total_records <= 0 and not any(
+                e.ticket.range()["stop"] > e.ticket.range()["start"] for e in info.endpoints
+            ):
+                continue  # empty shard: nothing to stream
+            endpoints += info.endpoints
+            records += max(info.total_records, 0)
+            nbytes += max(info.total_bytes, 0)
+        return FlightInfo(
+            schema,
+            FlightDescriptor.for_path(name),
+            endpoints,
+            total_records=records,
+            total_bytes=nbytes,
+            shard_spec=self.placement.spec(self.num_shards),
+        )
+
+    def list_flights_impl(self) -> list[FlightInfo]:
+        with self._dlock:
+            names = list(self._datasets)
+        return [self._info_for(n) for n in names]
+
+    def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
+        if descriptor.path is None:
+            raise FlightError("cluster resolves path descriptors only")
+        return self._info_for(descriptor.path[0])
+
+    def do_get_impl(self, ticket: Ticket):
+        r = ticket.range()
+        sid = r.get("shard")
+        if sid is not None:
+            if not 0 <= sid < self.num_shards:
+                raise FlightError(f"no such shard: {sid}")
+            return self.shards[sid].do_get_impl(ticket)
+        # shard-less ticket: gather — a range over the shard-ordered concat,
+        # so single-connection legacy clients still read the whole dataset
+        name = r["dataset"]
+        with self._dlock:
+            if name not in self._datasets:
+                raise FlightError(f"no such flight: {name}")
+            schema = self._datasets[name]
+        batches = self.dataset(name)[r["start"]: r["stop"] if r["stop"] >= 0 else None]
+        return schema, iter(batches)
+
+    def do_put_impl(self, descriptor, schema, batches) -> dict:
+        name = descriptor.path[0] if descriptor.path else descriptor.key
+        received = list(batches)
+        parts = self.placement.assign(received, self.num_shards)
+        per_shard = []
+        for shard, part in zip(self.shards, parts):
+            per_shard.append(shard.do_put_impl(descriptor, schema, iter(part)))
+        with self._dlock:
+            self._datasets.setdefault(name, schema)
+        return {
+            "batches": sum(s["batches"] for s in per_shard),
+            "rows": sum(s["rows"] for s in per_shard),
+            "bytes": sum(s["bytes"] for s in per_shard),
+            "per_shard": per_shard,
+        }
+
+    def do_action_impl(self, action: Action) -> list[ActionResult]:
+        if action.type == "health":
+            return [ActionResult(b"ok")]
+        if action.type == "list-names":
+            with self._dlock:
+                return [ActionResult(",".join(self._datasets).encode())]
+        if action.type == "drop":
+            name = action.body.decode()
+            for s in self.shards:
+                s.do_action_impl(action)
+            with self._dlock:
+                self._datasets.pop(name, None)
+            return [ActionResult(b"dropped")]
+        if action.type == "stats":
+            out = {
+                "num_shards": self.num_shards,
+                "scheme": self.placement.scheme,
+                "shards": [
+                    json.loads(s.do_action_impl(Action("stats"))[0].body)
+                    for s in self.shards
+                ],
+            }
+            return [ActionResult(json.dumps(out).encode())]
+        if action.type == "register-dataset":
+            # announces a dataset written straight to the shards (the
+            # client-side parallel DoPut path never funnels through the head)
+            o = json.loads(action.body)
+            with self._dlock:
+                self._datasets.setdefault(o["name"], Schema.from_json(o["schema"]))
+            return [ActionResult(b"registered")]
+        if action.type == "shard-locations":
+            spec = self.placement.spec(self.num_shards)
+            out = {
+                **spec.to_json(),
+                "shards": [
+                    {"shard": i, "locations": [l.uri for l in s.locations()]}
+                    for i, s in enumerate(self.shards)
+                ],
+            }
+            return [ActionResult(json.dumps(out).encode())]
+        raise FlightError(f"unknown action {action.type!r}")
+
+    def do_exchange_impl(self, descriptor, schema, batch) -> RecordBatch:
+        return batch
+
+    # -- client plumbing ----------------------------------------------------- #
+    def client_factory(self):
+        """Location resolver for in-proc schedulers: maps each shard's
+        ``inproc://`` location to a client holding that shard object."""
+        by_name = {s.location_name: s for s in self.shards}
+        by_name[self.location_name] = self
+
+        def factory(loc: Location | None) -> FlightClient:
+            if loc is None:
+                return FlightClient(self)
+            uri = loc.uri
+            if uri.startswith("inproc://"):
+                name = uri[len("inproc://"):]
+                if name in by_name:
+                    return FlightClient(by_name[name], token=self.auth_token)
+                raise FlightError(f"unknown in-proc location {uri!r}")
+            return FlightClient(uri, token=self.auth_token)
+
+        return factory
+
+
+# --------------------------------------------------------------------------
+# cluster-aware client
+# --------------------------------------------------------------------------
+
+
+class FlightClusterClient:
+    """Head connection + parallel scheduler, for both directions.
+
+    ``target`` is a ``FlightClusterServer`` (in-proc) or a ``tcp://`` uri of
+    one.  Reads fan in every shard endpoint; writes partition locally with
+    the cluster's placement policy and DoPut directly to the shards."""
+
+    def __init__(
+        self,
+        target: FlightClusterServer | Location | str,
+        token: str | None = None,
+        max_streams: int = 8,
+        ordered: bool = True,
+        window: int = 4,
+        hedge_after: float | None = None,
+    ):
+        self.token = token
+        self._cluster = target if isinstance(target, FlightClusterServer) else None
+        self.head = FlightClient(target, token=token)
+        self.max_streams = max_streams
+        self.ordered = ordered
+        self.window = window
+        self.hedge_after = hedge_after
+        self._inproc_factory = self._cluster.client_factory() if self._cluster else None
+        self._sched: ParallelStreamScheduler | None = None
+
+    # -- location resolution ---------------------------------------------- #
+    def _factory(self, loc: Location | None) -> FlightClient:
+        if loc is None:
+            return self.head
+        if loc.uri.startswith("inproc://"):
+            if self._inproc_factory is None:
+                raise FlightError(f"cannot resolve {loc.uri!r} without the server object")
+            return self._inproc_factory(loc)
+        return FlightClient(loc, token=self.token)
+
+    def scheduler(self, **overrides) -> ParallelStreamScheduler:
+        # the default scheduler is cached so its per-location client (and
+        # connection) cache survives across read/write calls
+        if not overrides:
+            if self._sched is None:
+                self._sched = self._make_scheduler()
+            return self._sched
+        return self._make_scheduler(**overrides)
+
+    def _make_scheduler(self, **overrides) -> ParallelStreamScheduler:
+        opts = dict(
+            max_streams=self.max_streams,
+            ordered=self.ordered,
+            window=self.window,
+            hedge_after=self.hedge_after,
+        )
+        opts.update(overrides)
+        # _factory already resolves every location, so it serves as its own
+        # hedge/failover tier — no separate hedge_factory needed
+        return ParallelStreamScheduler(self._factory, **opts)
+
+    # -- data plane --------------------------------------------------------- #
+    def info(self, name: str) -> FlightInfo:
+        return self.head.get_flight_info(FlightDescriptor.for_path(name))
+
+    def read(self, name: str, **sched_overrides) -> tuple[Table, TransferStats]:
+        return self.scheduler(**sched_overrides).fetch(self.info(name))
+
+    def stream(self, name: str, **sched_overrides):
+        return self.scheduler(**sched_overrides).stream(self.info(name))
+
+    def write(
+        self,
+        name: str,
+        batches: list[RecordBatch],
+        placement: Placement | None = None,
+    ) -> TransferStats:
+        """Partition client-side and DoPut each shard's slice in parallel.
+
+        DoPut *appends* (matching ``InMemoryFlightServer``), and the N shard
+        streams commit independently — there is no cross-shard transaction.
+        If one stream fails this raises after the others committed, and
+        retrying re-appends their rows.  For retry-safe ingestion write to a
+        fresh dataset name and swap (or ``drop`` first); transactional DoPut
+        is an open roadmap item."""
+        layout = json.loads(self.head.do_action(Action("shard-locations"))[0].body)
+        if placement is None:
+            placement = make_placement(layout["scheme"], layout.get("key"))
+        parts = placement.assign(batches, layout["num_shards"])
+        assignments = []
+        for entry, part in zip(layout["shards"], parts):
+            if not part:
+                continue
+            loc = self._pick_location(entry["locations"])
+            assignments.append((loc, part))
+        schema = batches[0].schema
+        stats = self.scheduler().put(FlightDescriptor.for_path(name), schema, assignments)
+        self.head.do_action(
+            Action("register-dataset",
+                   json.dumps({"name": name, "schema": schema.to_json()}).encode())
+        )
+        return stats
+
+    def _pick_location(self, uris: list[str]) -> Location:
+        """Prefer in-proc when we hold the server objects, else TCP."""
+        if self._inproc_factory is not None:
+            for u in uris:
+                if u.startswith("inproc://"):
+                    return Location(u)
+        for u in uris:
+            if u.startswith("tcp://"):
+                return Location(u)
+        if not uris:
+            raise FlightError("shard exposes no locations")
+        return Location(uris[0])

@@ -15,7 +15,9 @@ EXPERIMENTS.md labels which is which.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass
+from typing import Iterable, Iterator
 
 
 @dataclass(frozen=True)
@@ -101,3 +103,16 @@ DCN_LINK = LinkModel(
 ALL_LINKS = {m.name: m for m in
              [RDMA_O_IB, TCP_O_IB, FLIGHT_O_IB_GET, FLIGHT_O_IB_PUT, FLIGHT_O_IB_BULK,
               ICI_LINK, DCN_LINK]}
+
+
+def paced_stream(batches: Iterable, link: LinkModel) -> Iterator:
+    """Re-yield a RecordBatch stream at the modeled per-stream wire rate.
+
+    Each batch is delayed by its modeled transfer time on ``link``.  The delay
+    is a sleep, which releases the GIL — so N shard streams paced this way
+    genuinely overlap, and a parallel client measures the paper's
+    stream-scaling curve even on a small-core container where CPU-bound
+    loopback streams would serialize (see bench_cluster.py)."""
+    for b in batches:
+        time.sleep(link.transfer_seconds(b.nbytes(), 1))
+        yield b

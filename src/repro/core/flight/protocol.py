@@ -96,13 +96,46 @@ class Location:
 class FlightEndpoint:
     ticket: Ticket
     locations: tuple[Location, ...] = ()
+    app_metadata: dict | None = None  # e.g. {"shard": 2} on cluster endpoints
+
+    def __hash__(self):  # dict field breaks the generated hash
+        return hash(
+            (self.ticket, self.locations, tuple(sorted((self.app_metadata or {}).items())))
+        )
 
     def to_json(self) -> dict:
-        return {"ticket": self.ticket.to_json(), "locations": [l.uri for l in self.locations]}
+        o = {"ticket": self.ticket.to_json(), "locations": [l.uri for l in self.locations]}
+        if self.app_metadata:
+            o["app_metadata"] = self.app_metadata
+        return o
 
     @classmethod
     def from_json(cls, o: dict) -> "FlightEndpoint":
-        return cls(Ticket.from_json(o["ticket"]), tuple(Location(u) for u in o["locations"]))
+        return cls(
+            Ticket.from_json(o["ticket"]),
+            tuple(Location(u) for u in o["locations"]),
+            o.get("app_metadata"),
+        )
+
+    @property
+    def shard(self) -> int | None:
+        return (self.app_metadata or {}).get("shard")
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """How a dataset is laid out across a cluster's shard endpoints."""
+
+    scheme: str  # "round_robin" | "hash"
+    num_shards: int
+    key: str | None = None  # partition column for scheme == "hash"
+
+    def to_json(self) -> dict:
+        return {"scheme": self.scheme, "num_shards": self.num_shards, "key": self.key}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "ShardSpec":
+        return cls(o["scheme"], o["num_shards"], o.get("key"))
 
 
 @dataclass
@@ -112,15 +145,19 @@ class FlightInfo:
     endpoints: list[FlightEndpoint]
     total_records: int = -1
     total_bytes: int = -1
+    shard_spec: ShardSpec | None = None  # present when served by a cluster
 
     def to_json(self) -> dict:
-        return {
+        o = {
             "schema": self.schema.to_json(),
             "descriptor": self.descriptor.to_json(),
             "endpoints": [e.to_json() for e in self.endpoints],
             "total_records": self.total_records,
             "total_bytes": self.total_bytes,
         }
+        if self.shard_spec is not None:
+            o["shard_spec"] = self.shard_spec.to_json()
+        return o
 
     @classmethod
     def from_json(cls, o: dict) -> "FlightInfo":
@@ -130,6 +167,7 @@ class FlightInfo:
             [FlightEndpoint.from_json(e) for e in o["endpoints"]],
             o["total_records"],
             o["total_bytes"],
+            ShardSpec.from_json(o["shard_spec"]) if o.get("shard_spec") else None,
         )
 
 

@@ -1,0 +1,337 @@
+"""Parallel stream scheduler — the client-side engine behind the paper's
+``GetFlightInfo → parallel DoGet`` topology (Figs 2/3) and its DoPut dual.
+
+One ``FlightInfo`` names N endpoints; the scheduler opens one connection per
+endpoint ``Location`` (clients are cached per location), pulls the streams
+concurrently on a thread pool capped at ``max_streams``, and reassembles
+RecordBatches either in endpoint order (``ordered=True``, deterministic) or
+as they arrive (lowest latency).  A bounded per-stream window provides
+backpressure: a fast producer blocks after ``window`` undrained batches
+instead of buffering the dataset.
+
+Fault handling exploits tickets being idempotent range reads:
+
+* **failover** — a location that cannot be resolved or dies mid-stream is
+  retried on the endpoint's next location, skipping already-emitted batches
+  (resume, not duplicate);
+* **hedging** — with ``hedge_after`` seconds and no completion, the same
+  ticket is re-issued against replica locations and the first finisher wins
+  (straggler mitigation, paper §4.2.2's InMemoryStore re-reads).  Note:
+  racing two streams requires buffering each contender per endpoint, so
+  hedged mode trades the bounded window for whole-endpoint buffers — size
+  endpoints accordingly when enabling it.
+
+The scheduler never imports the client module: anything with
+``do_get(ticket) -> iterable`` / ``do_put(descriptor, schema) -> writer``
+works, supplied through ``client_factory(location) -> client``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Iterator
+
+from ..recordbatch import RecordBatch, Table
+from ..schema import Schema
+from .protocol import (
+    FlightDescriptor,
+    FlightEndpoint,
+    FlightError,
+    FlightInfo,
+    FlightUnavailableError,
+    Location,
+)
+
+
+@dataclass
+class TransferStats:
+    rows: int = 0
+    bytes: int = 0
+    seconds: float = 0.0
+    streams: int = 1
+    retries: int = 0  # location failovers taken
+    hedges: int = 0   # hedge timers that fired
+
+    @property
+    def mb_per_s(self) -> float:
+        return self.bytes / max(self.seconds, 1e-12) / 1e6
+
+
+_EOS = object()
+
+
+def _empty_batch(schema: Schema) -> RecordBatch:
+    from ..array import Array
+
+    return RecordBatch(schema, [Array.from_pylist([], f.type) for f in schema.fields])
+
+
+class _Cancelled(Exception):
+    pass
+
+
+class ParallelStreamScheduler:
+    def __init__(
+        self,
+        client_factory: Callable[[Location | None], object],
+        max_streams: int = 8,
+        ordered: bool = True,
+        window: int = 4,
+        hedge_after: float | None = None,
+        hedge_factory: Callable[[Location], object] | None = None,
+    ):
+        self._factory = client_factory
+        self._hedge_factory = hedge_factory
+        self.max_streams = max(1, max_streams)
+        self.ordered = ordered
+        self.window = max(1, window)
+        self.hedge_after = hedge_after
+        self._clients: dict[str, object] = {}
+        self._client_lock = threading.Lock()
+        self._stat_lock = threading.Lock()
+        self.retries = 0
+        self.hedges = 0
+
+    def _bump(self, counter: str, n: int = 1) -> None:
+        with self._stat_lock:
+            setattr(self, counter, getattr(self, counter) + n)
+
+    # -- connection cache -------------------------------------------------- #
+    def _client(self, loc: Location | None, factory=None):
+        key = loc.uri if loc is not None else "@default"
+        factory = factory or self._factory
+        if factory is not self._factory:
+            key = "hedge:" + key
+        with self._client_lock:
+            if key not in self._clients:
+                self._clients[key] = factory(loc)
+            return self._clients[key]
+
+    # -- one endpoint ------------------------------------------------------ #
+    def _stream_endpoint(self, ep: FlightEndpoint, emit) -> None:
+        """Emit the endpoint's batches once, failing over across locations.
+
+        On a mid-stream failure the ticket is re-issued on the next location
+        and the first ``emitted`` batches are skipped — range tickets make the
+        re-read idempotent, so this is a resume."""
+        locs: list[Location | None] = list(ep.locations) or [None]
+        emitted = 0
+        attempted = False
+        last_err: Exception | None = None
+        # attempt plan: every location through the primary factory, then —
+        # when a separate factory exists — every location again through it,
+        # so a failover can cross hosts even off a single-location endpoint
+        plan: list[tuple[Location | None, object]] = [(loc, None) for loc in locs]
+        if self._hedge_factory is not None and self._hedge_factory != self._factory:
+            plan += [(loc, self._hedge_factory) for loc in locs]
+        for loc, factory in plan:
+            try:
+                client = self._client(loc, factory=factory)
+            except (FlightError, ConnectionError, OSError) as e:
+                last_err = e  # unresolvable location (e.g. inproc seen remotely)
+                continue
+            if attempted:
+                self._bump("retries")
+            attempted = True
+            try:
+                reader = client.do_get(ep.ticket)
+                seen = 0
+                for b in reader:
+                    seen += 1
+                    if seen > emitted:
+                        emit(b)
+                        emitted += 1
+                return
+            except (FlightError, ConnectionError, OSError) as e:
+                last_err = e
+                continue
+        raise FlightUnavailableError(
+            f"endpoint exhausted {len(plan)} attempt(s) over "
+            f"{len(locs)} location(s): {last_err}"
+        )
+
+    def _hedged_fetch(self, ep: FlightEndpoint) -> list[RecordBatch]:
+        """Buffered endpoint read racing a primary against replica hedges."""
+        locs: list[Location | None] = list(ep.locations) or [None]
+        done = threading.Event()
+        winner: list[list[RecordBatch]] = []
+
+        def attempt(client) -> list[RecordBatch]:
+            return list(client.do_get(ep.ticket))
+
+        primary_client = None
+        primary_loc: Location | None = None
+        for loc in locs:  # first constructible location is the primary
+            try:
+                primary_client = self._client(loc)
+                primary_loc = loc
+                break
+            except (FlightError, ConnectionError, OSError):
+                continue
+
+        def primary() -> None:
+            if primary_client is None:
+                return
+            try:
+                out = attempt(primary_client)
+                if not done.is_set():
+                    winner.append(out)
+                    done.set()
+            except (FlightError, ConnectionError, OSError):
+                pass
+
+        pt = threading.Thread(target=primary, daemon=True)
+        pt.start()
+        if not done.wait(self.hedge_after):
+            self._bump("hedges")
+            # replicas first — hedging exists to escape the primary's server;
+            # its own location is only a last resort (fresh connection, same
+            # host) when no replica is reachable
+            hedge_order = [l for l in locs if l is not primary_loc]
+            if primary_loc is not None:
+                hedge_order.append(primary_loc)
+            for loc in hedge_order:
+                try:
+                    client = self._client(loc, factory=self._hedge_factory)
+                    out = attempt(client)
+                    if not done.is_set():
+                        winner.append(out)
+                        done.set()
+                    break
+                except (FlightError, ConnectionError, OSError):
+                    continue
+            if not winner:
+                # every hedge failed: the still-running primary is the only
+                # remaining hope — wait for it to finish, not forever
+                pt.join()
+        if not winner:
+            raise FlightUnavailableError("endpoint failed on primary and all hedges")
+        return winner[0]
+
+    # -- DoGet fan-in ------------------------------------------------------ #
+    def stream(self, info: FlightInfo) -> Iterator[RecordBatch]:
+        """Backpressured iterator over all endpoints' batches."""
+        endpoints = list(info.endpoints)
+        if not endpoints:
+            return
+        cancel = threading.Event()
+        if self.ordered:
+            queues = [queue.Queue(self.window) for _ in endpoints]
+        else:
+            shared: queue.Queue = queue.Queue(self.window * len(endpoints))
+        errors: list[Exception] = []
+
+        def emit_to(q):
+            def emit(item):
+                while True:
+                    if cancel.is_set():
+                        raise _Cancelled
+                    try:
+                        q.put(item, timeout=0.05)
+                        return
+                    except queue.Full:
+                        continue
+
+            return emit
+
+        def worker(i: int, ep: FlightEndpoint) -> None:
+            q = queues[i] if self.ordered else shared
+            emit = emit_to(q)
+            try:
+                if self.hedge_after is None:
+                    self._stream_endpoint(ep, emit)
+                else:
+                    for b in self._hedged_fetch(ep):
+                        emit(b)
+            except _Cancelled:
+                return
+            except Exception as e:  # surfaced to the consumer after drain
+                errors.append(e)
+            finally:
+                try:
+                    emit(_EOS)
+                except _Cancelled:
+                    pass
+
+        pool = ThreadPoolExecutor(
+            max_workers=min(self.max_streams, len(endpoints)),
+            thread_name_prefix="flight-stream",
+        )
+        try:
+            for i, ep in enumerate(endpoints):
+                pool.submit(worker, i, ep)
+            if self.ordered:
+                for q in queues:
+                    while True:
+                        item = q.get()
+                        if item is _EOS:
+                            break
+                        yield item
+            else:
+                open_streams = len(endpoints)
+                while open_streams:
+                    item = shared.get()
+                    if item is _EOS:
+                        open_streams -= 1
+                    else:
+                        yield item
+            if errors:
+                raise errors[0]
+        finally:
+            cancel.set()
+            pool.shutdown(wait=False)
+
+    def fetch(self, info: FlightInfo) -> tuple[Table, TransferStats]:
+        r0, h0 = self.retries, self.hedges  # report this fetch's deltas only
+        t0 = time.perf_counter()
+        batches = list(self.stream(info))
+        dt = time.perf_counter() - t0
+        if not batches:
+            batches = [_empty_batch(info.schema)]  # empty dataset, not an error
+        table = Table(batches)
+        return table, TransferStats(
+            table.num_rows,
+            table.nbytes(),
+            dt,
+            streams=min(self.max_streams, max(len(info.endpoints), 1)),
+            retries=self.retries - r0,
+            hedges=self.hedges - h0,
+        )
+
+    # -- DoPut fan-out ------------------------------------------------------ #
+    def put(
+        self,
+        descriptor: FlightDescriptor,
+        schema: Schema,
+        assignments: list[tuple[Location | None, list[RecordBatch]]],
+    ) -> TransferStats:
+        """Write each (location, batches) shard on its own DoPut stream."""
+        assignments = [(loc, bs) for loc, bs in assignments if bs]
+        if not assignments:
+            return TransferStats(streams=0)
+        t0 = time.perf_counter()
+
+        def write(loc: Location | None, shard: list[RecordBatch]) -> None:
+            w = self._client(loc).do_put(descriptor, schema)
+            for b in shard:
+                w.write_batch(b)
+            w.close()
+
+        with ThreadPoolExecutor(
+            max_workers=min(self.max_streams, len(assignments)),
+            thread_name_prefix="flight-put",
+        ) as pool:
+            futs = [pool.submit(write, loc, bs) for loc, bs in assignments]
+            for f in futs:
+                f.result()
+        dt = time.perf_counter() - t0
+        all_batches = [b for _, bs in assignments for b in bs]
+        return TransferStats(
+            sum(b.num_rows for b in all_batches),
+            sum(b.nbytes() for b in all_batches),
+            dt,
+            streams=len(assignments),
+        )

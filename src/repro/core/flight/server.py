@@ -12,6 +12,7 @@ so any batch range can be re-fetched (hedged reads / resume).
 """
 from __future__ import annotations
 
+import json
 import threading
 from typing import Callable, Iterable, Iterator
 
@@ -188,18 +189,25 @@ class InMemoryFlightServer(FlightServerBase):
         location_name: str = "local",
         auth_token: str | None = None,
         batches_per_endpoint: int = 0,
+        shard_id: int | None = None,
     ):
         super().__init__(location_name, auth_token)
         self._store: dict[str, list[RecordBatch]] = {}
         self._schemas: dict[str, Schema] = {}
         self._lock = threading.Lock()
         self.batches_per_endpoint = batches_per_endpoint  # 0 = single endpoint
+        self.shard_id = shard_id  # set by cluster.py: stamped into tickets
 
     # -- direct (in-proc) API ------------------------------------------- #
-    def add_dataset(self, name: str, batches: list[RecordBatch]) -> None:
+    def add_dataset(
+        self, name: str, batches: list[RecordBatch], schema: Schema | None = None
+    ) -> None:
+        """``schema`` allows registering an empty shard of a known dataset."""
+        if schema is None:
+            schema = batches[0].schema
         with self._lock:
             self._store[name] = list(batches)
-            self._schemas[name] = batches[0].schema
+            self._schemas[name] = schema
 
     def dataset(self, name: str) -> list[RecordBatch]:
         return self._store[name]
@@ -209,8 +217,13 @@ class InMemoryFlightServer(FlightServerBase):
         batches = self._store[name]
         n = len(batches)
         per = self.batches_per_endpoint or n or 1
+        extra = {} if self.shard_id is None else {"shard": self.shard_id}
         endpoints = [
-            FlightEndpoint(Ticket.for_range(name, i, min(i + per, n)), self.locations())
+            FlightEndpoint(
+                Ticket.for_range(name, i, min(i + per, n), **extra),
+                self.locations(),
+                app_metadata=extra or None,
+            )
             for i in range(0, max(n, 1), per)
         ]
         return FlightInfo(
@@ -268,6 +281,17 @@ class InMemoryFlightServer(FlightServerBase):
             return [ActionResult(names.encode())]
         if action.type == "health":
             return [ActionResult(b"ok")]
+        if action.type == "stats":
+            with self._lock:
+                stats = {
+                    name: {
+                        "batches": len(bs),
+                        "rows": sum(b.num_rows for b in bs),
+                        "bytes": sum(b.nbytes() for b in bs),
+                    }
+                    for name, bs in self._store.items()
+                }
+            return [ActionResult(json.dumps(stats).encode())]
         raise FlightError(f"unknown action {action.type!r}")
 
     def do_exchange_impl(self, descriptor, schema, batch) -> RecordBatch:

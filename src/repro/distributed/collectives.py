@@ -29,6 +29,17 @@ from jax.sharding import PartitionSpec as P
 from .sharding import ShardingCtx
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static mapped-axis size, portable across jax versions.
+
+    ``jax.lax.axis_size`` only exists in newer jax; on 0.4.x the axis frame
+    carries the size (as the frame itself, an int, on 0.4.37)."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_name))
+    frame = jax.core.axis_frame(axis_name)
+    return int(getattr(frame, "size", frame))
+
+
 def _quant_chunk(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Symmetric int8 quantization over flat chunks of 256 (jnp path; the
     Pallas kernel in kernels/quantize.py is the TPU version)."""
@@ -51,7 +62,7 @@ def compressed_psum_ring(x_local: jax.Array, axis_name: str) -> jax.Array:
     Runs INSIDE shard_map.  x_local: (n,) per-device partial sum, n divisible
     by axis size.  Returns the summed (n,) on every device.
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = _axis_size(axis_name)
     if n_dev == 1:
         return x_local
     n = x_local.shape[0]

@@ -378,6 +378,16 @@ class HloAnalyzer:
                 else:
                     total.bytes += 2 * _shape_bytes(op.result_type)
                 continue
+            if oc == "call":
+                # XLA:CPU wraps thread-partitioned ops in `call`s of
+                # `parallel_*` computations.  The call is transparent — cost
+                # the callee (whose fusions apply slice-charging) instead of
+                # boundary-charging full operands, which would re-charge a
+                # scan's stacked weights every iteration.
+                target = op.attr("to_apply")
+                if target and target in self.comps:
+                    total.add(self.cost(target, in_loop=in_loop))
+                    continue
             if oc in ("call", "conditional", "sort", "reduce", "reduce-window",
                       "scatter", "map", "select-and-scatter", "custom-call",
                       "async-start"):
@@ -393,12 +403,12 @@ class HloAnalyzer:
                 total.bytes += _shape_bytes(op.result_type) + sum(
                     _shape_bytes(comp.symbols.get(o, "")) for o in op.operands())
                 continue
-            # generic elementwise-ish op: write-once/read-once model — charge
-            # 2× the result (one write + one downstream read); operands were
-            # already charged as their producers' results.  On TPU these
-            # chains fuse; this keeps the memory term from double-counting
-            # every consumer edge.
-            total.bytes += 2 * _shape_bytes(op.result_type)
+            # generic elementwise-ish op: boundary model — write the result,
+            # read each operand once.  Matches the fusion boundary charge, so
+            # a module where XLA fused the op and one where it stayed bare
+            # score the same bytes (the scale-with-shapes invariant).
+            total.bytes += _shape_bytes(op.result_type) + sum(
+                _shape_bytes(comp.symbols.get(o, "")) for o in op.operands())
         return total
 
 

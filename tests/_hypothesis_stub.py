@@ -1,0 +1,139 @@
+"""Minimal fallback for the slice of the `hypothesis` API this suite uses.
+
+The real hypothesis (installed from requirements-dev.txt in CI) is always
+preferred — conftest.py only wires this module in when the import fails, so
+offline containers can still collect and run every test module.  Examples are
+drawn from a `random.Random` seeded per-test (by qualname), so runs are
+deterministic and failures reproducible, just without shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def none() -> _Strategy:
+    return _Strategy(lambda rng: None)
+
+
+def integers(min_value: int = -(2**63), max_value: int = 2**63 - 1) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+# A compact alphabet that still exercises multibyte UTF-8, whitespace and
+# quoting edge cases in the string-column round-trips.
+_ALPHABET = "abcXYZ 0189_'\"\\\n\téß中\U0001f600"
+
+
+def text(alphabet: str = _ALPHABET, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(alphabet) for _ in range(n))
+
+    return _Strategy(draw)
+
+
+def one_of(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: rng.choice(strategies).example(rng))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+class DataObject:
+    """Interactive draws inside the test body (``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy.example(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(DataObject)
+
+
+class settings:
+    """Decorator form only — records max_examples on the decorated callable."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", DEFAULT_MAX_EXAMPLES
+            )
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **kw)
+
+        wrapper.is_hypothesis_test = True
+        # Hide the strategy-filled parameters from pytest's fixture resolution
+        # (hypothesis fills positional params from the right, kwargs by name).
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: len(params) - len(arg_strategies)]
+        keep = [p for p in keep if p.name not in kw_strategies]
+        del wrapper.__wrapped__  # stop inspect following back to fn
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("none", "integers", "floats", "text", "one_of", "lists",
+                 "sampled_from", "booleans", "data"):
+        setattr(st, name, globals()[name])
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

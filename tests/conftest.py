@@ -2,6 +2,36 @@
 import sys
 from pathlib import Path
 
-SRC = Path(__file__).resolve().parents[1] / "src"
-if str(SRC) not in sys.path:
-    sys.path.insert(0, str(SRC))
+import pytest
+
+HERE = Path(__file__).resolve().parent
+SRC = HERE.parent / "src"
+for p in (str(SRC), str(HERE)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+# hypothesis is a dev-only dependency (requirements-dev.txt, installed in CI).
+# Offline containers fall back to a deterministic in-tree stub so the suite
+# still collects and the property tests run with random examples.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked @pytest.mark.slow",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: use --runslow to enable")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -1,0 +1,340 @@
+"""Cluster layer: shard placement, parallel DoGet/DoPut, failover, hedging."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    Action,
+    FlightClient,
+    FlightClusterClient,
+    FlightClusterServer,
+    FlightDescriptor,
+    FlightEndpoint,
+    FlightInfo,
+    HashPlacement,
+    Location,
+    ParallelStreamScheduler,
+    RoundRobinPlacement,
+    Ticket,
+)
+
+
+def make_batches(n=8, rows=500, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "k": rng.integers(0, 40, rows).astype(np.int64),
+        "v": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+def sorted_rows(table_or_batches):
+    batches = getattr(table_or_batches, "batches", table_or_batches)
+    rows = [r for b in batches for r in b.to_rows()]
+    return sorted(rows)
+
+
+# --------------------------------------------------------------------------
+# placement
+# --------------------------------------------------------------------------
+
+
+class TestPlacement:
+    def test_round_robin_is_deterministic_and_balanced(self):
+        batches = make_batches(8)
+        a = RoundRobinPlacement().assign(batches, 4)
+        b = RoundRobinPlacement().assign(batches, 4)
+        assert [len(s) for s in a] == [2, 2, 2, 2]
+        for sa, sb in zip(a, b):
+            assert all(x == y for x, y in zip(sa, sb))
+
+    def test_hash_placement_deterministic_across_instances(self):
+        batches = make_batches(4)
+        p1, p2 = HashPlacement("k"), HashPlacement("k")
+        a = p1.assign(batches, 4)
+        b = p2.assign(batches, 4)
+        for sa, sb in zip(a, b):
+            assert sorted_rows(sa) == sorted_rows(sb)
+
+    def test_hash_placement_colocates_keys(self):
+        batches = make_batches(4)
+        shards = HashPlacement("k").assign(batches, 4)
+        seen = {}
+        for sid, part in enumerate(shards):
+            for b in part:
+                for k in b.column("k").to_pylist():
+                    assert seen.setdefault(k, sid) == sid, f"key {k} split across shards"
+        assert sum(b.num_rows for part in shards for b in part) == 2000
+
+    def test_cluster_add_dataset_matches_freestanding_placement(self):
+        batches = make_batches(6)
+        cl1 = FlightClusterServer(num_shards=3, placement="hash", hash_key="k")
+        cl2 = FlightClusterServer(num_shards=3, placement="hash", hash_key="k")
+        cl1.add_dataset("ds", batches)
+        cl2.add_dataset("ds", batches)
+        for s1, s2 in zip(cl1.shards, cl2.shards):
+            assert sorted_rows(s1.dataset("ds")) == sorted_rows(s2.dataset("ds"))
+
+
+# --------------------------------------------------------------------------
+# parallel DoGet
+# --------------------------------------------------------------------------
+
+
+class TestParallelDoGet:
+    @pytest.fixture(params=["inproc", "tcp"])
+    def cluster(self, request):
+        cl = FlightClusterServer(num_shards=4, batches_per_endpoint=1)
+        cl.add_dataset("ds", make_batches())
+        if request.param == "tcp":
+            cl.serve_tcp()
+            yield cl, FlightClusterClient(f"tcp://127.0.0.1:{cl.port}", max_streams=4)
+            cl.shutdown()
+        else:
+            yield cl, FlightClusterClient(cl, max_streams=4)
+
+    def test_parallel_equals_serial_bytes_and_rows(self, cluster):
+        cl, cc = cluster
+        table, stats = cc.read("ds")
+        serial = cl.dataset("ds")  # shard-ordered gather
+        assert table.num_rows == sum(b.num_rows for b in serial) == 4000
+        assert table.nbytes() == sum(b.nbytes() for b in serial)
+        # ordered mode reproduces the exact shard-ordered stream
+        assert all(a == b for a, b in zip(table.batches, serial))
+        assert stats.streams == 4
+
+    def test_unordered_mode_same_multiset(self, cluster):
+        cl, cc = cluster
+        table, _ = cc.read("ds", ordered=False)
+        assert sorted_rows(table) == sorted_rows(cl.dataset("ds"))
+
+    def test_info_carries_shard_metadata(self, cluster):
+        _, cc = cluster
+        info = cc.info("ds")
+        assert info.shard_spec is not None
+        assert info.shard_spec.scheme == "round_robin"
+        assert info.shard_spec.num_shards == 4
+        shards = {ep.shard for ep in info.endpoints}
+        assert shards == {0, 1, 2, 3}
+
+    def test_head_gather_doget_serves_whole_dataset(self, cluster):
+        cl, _ = cluster
+        head = FlightClient(cl)
+        got = list(head.do_get(Ticket.for_range("ds", 0, 10**9)))
+        assert sum(b.num_rows for b in got) == 4000
+
+
+# --------------------------------------------------------------------------
+# parallel DoPut
+# --------------------------------------------------------------------------
+
+
+class TestParallelDoPut:
+    @pytest.mark.parametrize("transport", ["inproc", "tcp"])
+    def test_sharded_write_roundtrip(self, transport):
+        cl = FlightClusterServer(num_shards=3)
+        batches = make_batches(6, rows=200, seed=7)
+        try:
+            if transport == "tcp":
+                cl.serve_tcp()
+                cc = FlightClusterClient(f"tcp://127.0.0.1:{cl.port}")
+            else:
+                cc = FlightClusterClient(cl)
+            stats = cc.write("up", batches)
+            assert stats.rows == 1200
+            assert stats.streams == 3  # one DoPut stream per shard
+            table, _ = cc.read("up")
+            assert sorted_rows(table) == sorted_rows(batches)
+        finally:
+            cl.shutdown()
+
+    def test_hash_write_respects_placement(self):
+        cl = FlightClusterServer(num_shards=4, placement="hash", hash_key="k")
+        cc = FlightClusterClient(cl)
+        cc.write("up", make_batches(4, rows=300, seed=3))
+        seen = {}
+        for sid, shard in enumerate(cl.shards):
+            for b in shard.dataset("up"):
+                for k in b.column("k").to_pylist():
+                    assert seen.setdefault(k, sid) == sid
+        st = json.loads(cc.head.do_action(Action("stats"))[0].body)
+        assert sum(s["up"]["rows"] for s in st["shards"] if "up" in s) == 1200
+
+    def test_head_doput_repartitions(self):
+        cl = FlightClusterServer(num_shards=2)
+        head = FlightClient(cl)
+        batches = make_batches(4, rows=100)
+        w = head.do_put(FlightDescriptor.for_path("h"), batches[0].schema)
+        for b in batches:
+            w.write_batch(b)
+        stats = w.close()
+        assert stats["rows"] == 400
+        assert [len(s.dataset("h")) for s in cl.shards] == [2, 2]
+
+
+# --------------------------------------------------------------------------
+# failure handling
+# --------------------------------------------------------------------------
+
+
+class TestFailover:
+    def test_dead_location_fails_over_to_replica(self):
+        """First location refuses connections; the scheduler resumes the
+        idempotent range ticket on the live replica."""
+        cl = FlightClusterServer(num_shards=2, batches_per_endpoint=1).serve_tcp()
+        cl.add_dataset("ds", make_batches(4))
+        try:
+            info = FlightClient(f"tcp://127.0.0.1:{cl.port}").get_flight_info(
+                FlightDescriptor.for_path("ds"))
+            dead = Location.for_tcp("127.0.0.1", 1)  # nothing listens here
+            wounded = FlightInfo(
+                info.schema, info.descriptor,
+                [FlightEndpoint(ep.ticket, (dead, *ep.locations), ep.app_metadata)
+                 for ep in info.endpoints],
+                info.total_records, info.total_bytes, info.shard_spec)
+            sched = ParallelStreamScheduler(
+                lambda loc: FlightClient(loc), max_streams=4)
+            table, stats = sched.fetch(wounded)
+            assert table.num_rows == 2000
+            assert stats.retries >= len(wounded.endpoints)
+        finally:
+            cl.shutdown()
+
+    def test_hedged_read_beats_slow_shard(self):
+        """A straggling shard's ticket is re-issued after hedge_after and the
+        replica's answer wins."""
+        cl = FlightClusterServer(num_shards=2, batches_per_endpoint=1).serve_tcp()
+        cl.add_dataset("ds", make_batches(4))
+        slow = {"n": 0}
+        shard0 = cl.shards[0]
+        orig = shard0.do_get_impl
+
+        def sometimes_slow(ticket):
+            if slow["n"] == 0:
+                slow["n"] += 1
+                time.sleep(1.5)
+            return orig(ticket)
+
+        shard0.do_get_impl = sometimes_slow
+        try:
+            cc = FlightClusterClient(
+                f"tcp://127.0.0.1:{cl.port}", max_streams=4, hedge_after=0.15)
+            t0 = time.perf_counter()
+            table, stats = cc.read("ds")
+            dt = time.perf_counter() - t0
+            assert table.num_rows == 2000
+            assert stats.hedges >= 1
+            assert dt < 1.4  # did not wait out the straggler
+        finally:
+            cl.shutdown()
+
+    def test_hedged_read_with_all_replicas_dead_raises(self):
+        """All attempts failing must raise, not hang the fetch forever."""
+        cl = FlightClusterServer(num_shards=1)
+        cl.add_dataset("ds", make_batches(1))
+        info = FlightClusterClient(cl).info("ds")
+        dead = Location.for_tcp("127.0.0.1", 1)
+        doomed = FlightInfo(
+            info.schema, info.descriptor,
+            [FlightEndpoint(ep.ticket, (dead,), ep.app_metadata)
+             for ep in info.endpoints],
+            info.total_records, info.total_bytes, info.shard_spec)
+        sched = ParallelStreamScheduler(
+            lambda loc: FlightClient(loc or dead), hedge_after=0.05)
+        from repro.core.flight import FlightUnavailableError
+        t0 = time.perf_counter()
+        with pytest.raises(FlightUnavailableError):
+            sched.fetch(doomed)
+        assert time.perf_counter() - t0 < 10
+
+    def test_non_hedged_failover_crosses_hosts_via_client_factory(self):
+        """read_all_parallel with a dead primary client reaches the replica
+        through client_factory even without a hedge timer."""
+        from repro.core.flight import InMemoryFlightServer
+        srv = InMemoryFlightServer(batches_per_endpoint=1).serve_tcp()
+        srv.add_dataset("ds", make_batches(2))
+        try:
+            live = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = live.get_flight_info(FlightDescriptor.for_path("ds"))
+            dead_primary = FlightClient("tcp://127.0.0.1:1")
+            tcp_only = FlightInfo(
+                info.schema, info.descriptor,
+                [FlightEndpoint(
+                    ep.ticket,
+                    tuple(l for l in ep.locations if l.uri.startswith("tcp://")),
+                    ep.app_metadata) for ep in info.endpoints],
+                info.total_records, info.total_bytes)
+            table, stats = dead_primary.read_all_parallel(
+                tcp_only, client_factory=lambda loc: FlightClient(loc))
+            assert table.num_rows == 1000
+            assert stats.retries >= 1
+        finally:
+            srv.shutdown()
+
+    def test_empty_dataset_reads_as_zero_rows(self):
+        """Hash-writing only zero-row batches yields a readable empty table."""
+        cl = FlightClusterServer(num_shards=2, placement="hash", hash_key="k")
+        cc = FlightClusterClient(cl)
+        empty = RecordBatch.from_numpy({
+            "k": np.array([], dtype=np.int64), "v": np.array([], dtype=np.float64)})
+        stats = cc.write("void", [empty])
+        assert stats.rows == 0
+        table, rstats = cc.read("void")
+        assert table.num_rows == 0
+        assert table.schema == empty.schema
+
+    def test_failed_shard_ticket_is_idempotent(self):
+        """Re-reading the same shard ticket after a failure returns identical
+        batches (the property hedged reads rely on)."""
+        cl = FlightClusterServer(num_shards=2, batches_per_endpoint=1)
+        cl.add_dataset("ds", make_batches(4))
+        cc = FlightClusterClient(cl)
+        info = cc.info("ds")
+        ep = info.endpoints[0]
+        client = cl.client_factory()(ep.locations[0])
+        a = list(client.do_get(ep.ticket))
+        b = list(client.do_get(ep.ticket))
+        assert all(x == y for x, y in zip(a, b)) and len(a) == len(b)
+
+
+class TestConnectionHygiene:
+    def test_server_error_returns_connection_to_pool(self):
+        """A Flight-level refusal leaves the channel clean and pooled —
+        scheduler failover loops must not leak a socket per attempt."""
+        from repro.core.flight import InMemoryFlightServer
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", make_batches(1))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            from repro.core.flight import FlightError
+            for _ in range(3):
+                with pytest.raises(FlightError):
+                    list(c.do_get(Ticket.for_range("nope", 0, 1)))
+            assert c._conn_pool.qsize() == 1  # same conn reused, none leaked
+            assert len(c.list_flights()) == 1  # channel still healthy
+        finally:
+            srv.shutdown()
+
+
+class TestClusterActions:
+    def test_shard_locations_action_over_tcp(self):
+        cl = FlightClusterServer(num_shards=3, placement="hash", hash_key="k").serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{cl.port}")
+            layout = json.loads(c.do_action(Action("shard-locations"))[0].body)
+            assert layout["scheme"] == "hash" and layout["key"] == "k"
+            assert len(layout["shards"]) == 3
+            for entry in layout["shards"]:
+                assert any(u.startswith("tcp://") for u in entry["locations"])
+        finally:
+            cl.shutdown()
+
+    def test_drop_removes_from_all_shards(self):
+        cl = FlightClusterServer(num_shards=2)
+        cl.add_dataset("ds", make_batches(2))
+        FlightClient(cl).do_action(Action("drop", b"ds"))
+        assert all("ds" not in s._store for s in cl.shards)
+        names = FlightClient(cl).do_action(Action("list-names"))[0].body.decode()
+        assert "ds" not in names
