@@ -1,0 +1,123 @@
+"""Wire data plane: batch size × metadata codec × coalescing over TCP DoGet.
+
+The paper's claim is that Flight reaches wire speed because serialization is
+engineered away; the Analytical-DBMS formats study (PAPERS.md) shows
+*metadata handling* dominates at small batch sizes.  This suite measures
+that regime directly on the loopback TCP transport:
+
+* ``seed``      — the pre-PR data plane: JSON batch metadata, one sendmsg
+                  per frame, re-encode on every DoGet (cache off).
+* ``binary``    — binary struct metadata alone (no coalescing, no cache).
+* ``bin+cache`` — binary metadata + encode-once cache.
+* ``full``      — binary metadata + cache + coalesced sendmsg: the shipped
+                  default configuration.
+
+Reported per config × batch size: seconds, MB/s and msgs/s (data frames per
+second — the small-batch figure of merit).  ``full`` rows also carry
+``speedup_msgs_vs_seed`` and ``encode_calls_timed`` (must stay 0: a cached
+DoGet performs zero encode_batch calls).  ``run.py`` emits BENCH_wire.json;
+``check_wire_regression.py`` gates CI on the normalized msgs/s.
+
+Two caveats when reading the numbers:
+
+* the ``seed`` config reproduces the pre-PR *send/encode* path only — the
+  receive-side improvements (buffered header+meta reads, pooled bodies) are
+  transparent connection properties shared by every config, so in-run
+  ``seed`` is faster than the true pre-PR plane (measured on the prior
+  commit: ~2.5k msgs/s at 1 KiB and ~750 MB/s at 1 MiB on this container,
+  vs ~4k msgs/s / ~1.1 GB/s for in-run ``seed``).
+* at ≥1 MiB batches every config degenerates to one sendmsg per frame
+  (frames exceed the coalescing budget) and loopback memcpy dominates, so
+  the configs are syscall-identical there and differences are scheduler
+  noise; the interesting signal at 1 MiB is MB/s versus the previous
+  commit's BENCH_wire.json, not config-vs-config.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core.flight import FlightClient, FlightDescriptor, InMemoryFlightServer
+
+from .common import Timing, records_batch
+
+RECORD_BYTES = 32  # the paper's fixed-width record microbenchmark shape
+
+CONFIGS = (
+    # (label, wire_codec, coalesce, cache_encoded)
+    ("seed", "json", False, False),
+    ("binary", "binary", False, False),
+    ("bin+cache", "binary", False, True),
+    ("full", "binary", True, True),
+)
+
+
+def _best_of(fn, repeats: int = 3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _server_stats(client: FlightClient) -> dict:
+    return json.loads(client.do_action("server-stats")[0].body)
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    # batch payload sizes; ≤4 KiB is the metadata/syscall-bound regime the
+    # tentpole targets, 1 MiB checks the bulk path kept its throughput
+    batch_bytes = (1 << 10, 4 << 10, 64 << 10, 1 << 20)
+    for size in batch_bytes:
+        rows = max(1, size // RECORD_BYTES)
+        n_batches = 16 if size >= (1 << 20) else (64 if size >= (64 << 10) else 256)
+        if not quick:
+            n_batches *= 4
+        batches = [records_batch(rows, seed=s) for s in range(n_batches)]
+        nbytes = sum(b.nbytes() for b in batches)
+        seed_msgs_s = None
+        for label, codec, coalesce, cache in CONFIGS:
+            srv = InMemoryFlightServer(
+                batches_per_endpoint=0, wire_codec=codec, coalesce=coalesce,
+                cache_encoded=cache,
+            ).serve_tcp()
+            try:
+                srv.add_dataset("w", batches)
+                client = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+                ticket = client.get_flight_info(
+                    FlightDescriptor.for_path("w")).endpoints[0].ticket
+
+                def fetch():
+                    n = sum(1 for _ in client.do_get(ticket))
+                    assert n == n_batches
+
+                fetch()  # warm connections (and the encode cache when on)
+                encode_before = _server_stats(client)["encode_calls"]
+                secs = _best_of(fetch, repeats=2 if size >= (1 << 20) else 3)
+                encode_timed = _server_stats(client)["encode_calls"] - encode_before
+                msgs_s = n_batches / secs
+                if label == "seed":
+                    seed_msgs_s = msgs_s
+                extra = {
+                    "config": label, "codec": codec, "coalesce": coalesce,
+                    "cache": cache, "batch_bytes": size, "n_batches": n_batches,
+                    "msgs_per_s": round(msgs_s, 1),
+                    "encode_calls_timed": encode_timed,
+                }
+                if seed_msgs_s and label != "seed":
+                    extra["speedup_msgs_vs_seed"] = round(msgs_s / seed_msgs_s, 2)
+                out.append(Timing(f"wire_doget_tcp_{label}_b{size}", secs, nbytes, extra=extra))
+            finally:
+                srv.shutdown()
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_bench_json
+
+    timings = run()
+    for t in timings:
+        print(t.csv() + (f" {t.extra}" if t.extra else ""))
+    print(f"# wrote {emit_bench_json('wire', timings)}")

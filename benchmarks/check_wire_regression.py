@@ -1,0 +1,102 @@
+"""CI gate: fail when wire-plane msgs/s regresses >20% vs the committed baseline.
+
+Raw msgs/s scales with runner hardware, so by default the guard compares
+**normalized** msgs/s: each non-seed config's msgs/s divided by the same-run
+``seed`` config's msgs/s at the same batch size (the seed config reproduces
+the pre-binary-metadata data plane, so the ratio isolates the optimization
+and cancels machine speed).  A normalized value below ``(1 - tolerance)`` of
+the committed ``benchmarks/wire_baseline.json`` fails the build.
+
+``--absolute`` compares raw msgs/s instead — useful for same-machine
+trajectories, too flaky across heterogeneous CI runners.
+
+Refresh the baseline after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.run --only wire
+    PYTHONPATH=src python -m benchmarks.check_wire_regression --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).parent / "wire_baseline.json"
+TOLERANCE = 0.20
+
+
+def load_results(path: Path) -> dict[tuple[str, int], float]:
+    """(config, batch_bytes) -> msgs_per_s from a BENCH_wire.json."""
+    payload = json.loads(path.read_text())
+    out: dict[tuple[str, int], float] = {}
+    for r in payload["results"]:
+        extra = r.get("extra", {})
+        if "config" in extra and "msgs_per_s" in extra:
+            out[(extra["config"], extra["batch_bytes"])] = extra["msgs_per_s"]
+    return out
+
+
+def normalize(results: dict[tuple[str, int], float]) -> dict[str, float]:
+    """msgs/s of each config relative to the same-size seed config."""
+    out: dict[str, float] = {}
+    for (config, size), msgs in results.items():
+        if config == "seed":
+            continue
+        seed = results.get(("seed", size))
+        if seed:
+            out[f"{config}_b{size}"] = round(msgs / seed, 3)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="?", default="BENCH_wire.json",
+                    help="BENCH_wire.json produced by benchmarks.run")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw msgs/s instead of seed-normalized")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed baseline from this run")
+    args = ap.parse_args()
+
+    results = load_results(Path(args.bench))
+    if not results:
+        print(f"no wire results in {args.bench}", file=sys.stderr)
+        return 2
+    current = {
+        "normalized": normalize(results),
+        "absolute": {f"{c}_b{s}": m for (c, s), m in results.items()},
+    }
+    if args.update:
+        BASELINE.write_text(json.dumps(current, indent=2, sort_keys=True) + "\n")
+        print(f"baseline updated: {BASELINE}")
+        return 0
+    if not BASELINE.exists():
+        print(f"no baseline at {BASELINE}; run with --update to create one",
+              file=sys.stderr)
+        return 2
+
+    baseline = json.loads(BASELINE.read_text())
+    mode = "absolute" if args.absolute else "normalized"
+    old, new = baseline[mode], current[mode]
+    failures = []
+    for key, prev in sorted(old.items()):
+        got = new.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from this run (baseline {prev})")
+            continue
+        floor = prev * (1 - args.tolerance)
+        status = "FAIL" if got < floor else "ok"
+        print(f"{key}: {got:.3f} vs baseline {prev:.3f} (floor {floor:.3f}) {status}")
+        if got < floor:
+            failures.append(f"{key}: {got:.3f} < {floor:.3f} (-{args.tolerance:.0%} of {prev:.3f})")
+    if failures:
+        print("\nwire msgs/s regression:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    print(f"\nall {len(old)} wire {mode} msgs/s within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

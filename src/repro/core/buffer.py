@@ -8,6 +8,9 @@ semantics (LSB-first, like Arrow).
 """
 from __future__ import annotations
 
+import sys
+import threading
+
 import numpy as np
 
 ALIGNMENT = 64  # bytes; Arrow IPC pads every buffer to 64B boundaries
@@ -95,6 +98,72 @@ class Buffer:
 
     def __repr__(self) -> str:
         return f"Buffer({self.nbytes}B @0x{self.address:x}{' aligned' if self.is_aligned else ''})"
+
+
+class BufferPool:
+    """Recycling bump allocator of aligned slabs for receive bodies.
+
+    ``Buffer.allocate`` per frame makes the small-message regime allocation
+    bound; the pool instead bump-carves aligned views out of a bounded set
+    of power-of-two slabs: consecutive small bodies pack side by side in the
+    current slab (so a retained 1 KiB batch pins its share of one shared
+    slab, not a whole private slab), and a new slab is opened only when the
+    current one is exhausted.
+
+    Safety without an explicit ``release``: every view of a slab (decoded
+    Array buffers, Bitmap bytes, sub-slices) keeps a numpy ``.base``
+    reference to the slab's backing array, so a slab is demonstrably free
+    exactly when its refcount is back to the pool-only baseline — checked
+    with ``sys.getrefcount`` under the pool lock.  A slab with any live
+    carve is never reused (new carves from it are disjoint by construction).
+    When every tracked slab is pinned, the eldest slot is evicted (its
+    consumers keep it alive) so the pool keeps recycling recent slabs
+    instead of degrading to always-miss.
+    """
+
+    MIN_SLAB = 64 << 10  # slab floor: many small bodies share one slab
+
+    def __init__(self, max_slabs: int = 32):
+        self._slabs: list[np.ndarray] = []
+        self._cur: np.ndarray | None = None  # slab currently being bump-carved
+        self._cur_end = 0  # next free byte in _cur
+        self._lock = threading.Lock()
+        self.max_slabs = max_slabs
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _aligned_start(raw: np.ndarray, pos: int) -> int:
+        return pos + (-(raw.ctypes.data + pos)) % ALIGNMENT
+
+    def _open_slab(self, raw: np.ndarray, nbytes: int) -> "Buffer":
+        self._cur = raw
+        start = self._aligned_start(raw, 0)
+        self._cur_end = start + nbytes
+        return Buffer(raw[start : start + nbytes])
+
+    def acquire(self, nbytes: int) -> "Buffer":
+        """An aligned ``Buffer`` of ``nbytes``, recycled when possible."""
+        with self._lock:
+            if self._cur is not None:
+                start = self._aligned_start(self._cur, self._cur_end)
+                if start + nbytes <= self._cur.nbytes:
+                    self._cur_end = start + nbytes
+                    self.hits += 1
+                    return Buffer(self._cur[start : start + nbytes])
+                self._cur = None  # exhausted; drop our pin so it can free
+            want = nbytes + ALIGNMENT  # headroom for the alignment shift
+            for raw in self._slabs:
+                # refs while free: pool list + loop binding + getrefcount arg
+                if raw.nbytes >= want and sys.getrefcount(raw) == 3:
+                    self.hits += 1
+                    return self._open_slab(raw, nbytes)
+            self.misses += 1
+            raw = np.empty(max(self.MIN_SLAB, 1 << (want - 1).bit_length()), dtype=np.uint8)
+            if len(self._slabs) >= self.max_slabs:
+                self._slabs.pop(0)  # evict eldest; live carves keep it alive
+            self._slabs.append(raw)
+            return self._open_slab(raw, nbytes)
 
 
 class Bitmap:

@@ -81,6 +81,21 @@ class FlightStreamWriter:
         else:
             self._queue.append(batch)
 
+    def write_batches(self, batches: "Iterator[RecordBatch] | list[RecordBatch]") -> None:
+        """Write many batches with coalesced frames (one sendmsg per ~MiB)."""
+        if self._conn is None:
+            for b in batches:
+                self.write_batch(b)
+            return
+
+        def frames():
+            for b in batches:
+                if b.schema != self._schema:
+                    raise FlightError("batch schema mismatch on DoPut stream")
+                yield encode_batch(b)
+
+        self._conn.send_data_many(frames())
+
     def close(self) -> dict:
         if self._conn is not None:
             self._conn.send_data(encode_eos())

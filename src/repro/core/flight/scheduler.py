@@ -316,8 +316,15 @@ class ParallelStreamScheduler:
 
         def write(loc: Location | None, shard: list[RecordBatch]) -> None:
             w = self._client(loc).do_put(descriptor, schema)
-            for b in shard:
-                w.write_batch(b)
+            # the scheduler's writer contract is write_batch/close (see module
+            # docstring: any client works); write_batches is an optional
+            # extension for coalesced frames
+            write_many = getattr(w, "write_batches", None)
+            if write_many is not None:
+                write_many(shard)
+            else:
+                for b in shard:
+                    w.write_batch(b)
             w.close()
 
         with ThreadPoolExecutor(

@@ -9,14 +9,30 @@ used in-process (zero-copy object handoff) or served over TCP via
 InMemoryStore" (§4.2.2) — datasets are lists of RecordBatches keyed by
 descriptor path; tickets are idempotent (dataset, start, stop) range reads,
 so any batch range can be re-fetched (hedged reads / resume).
+
+Data-plane fast paths (the wire-speed work):
+
+* **encode-once cache** — ``InMemoryFlightServer`` pre-encodes each stored
+  dataset to ``EncodedMessage``s on first DoGet and serves every later DoGet
+  from the cache (zero ``encode_batch`` calls — asserted via the
+  ``server-stats`` action counters).  The cache is invalidated on DoPut /
+  ``add_dataset`` / ``drop``, and bypassed whenever ``do_get_impl`` is
+  overridden (query pushdown, paced shards, test monkeypatches) so
+  behavior-modifying subclasses keep their semantics.
+* **frame coalescing** — DoGet streams go out via
+  ``FrameConnection.send_data_many`` (many frames per ``sendmsg``) unless
+  ``coalesce=False``.
+* ``wire_codec`` selects the IPC metadata codec (binary default; json kept
+  for comparison benchmarks).
 """
 from __future__ import annotations
 
 import json
 import threading
+from itertools import chain
 from typing import Callable, Iterable, Iterator
 
-from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
+from ..ipc import DEFAULT_CODEC, EncodedMessage, decode_message, encode_batch, encode_eos, encode_schema
 from ..recordbatch import RecordBatch
 from ..schema import Schema
 from .protocol import (
@@ -35,9 +51,19 @@ from .transport import KIND_CTRL, KIND_DATA, FrameConnection, SocketListener
 class FlightServerBase:
     """Override the ``*_impl`` handlers to build a service."""
 
-    def __init__(self, location_name: str = "local", auth_token: str | None = None):
+    def __init__(
+        self,
+        location_name: str = "local",
+        auth_token: str | None = None,
+        *,
+        wire_codec: str = DEFAULT_CODEC,
+        coalesce: bool = True,
+    ):
         self.location_name = location_name
         self.auth_token = auth_token
+        self.wire_codec = wire_codec
+        self.coalesce = coalesce
+        self.encode_calls = 0  # encode_batch invocations on the DoGet path
         self._listener: SocketListener | None = None
 
     # -- handlers to override ------------------------------------------- #
@@ -49,6 +75,15 @@ class FlightServerBase:
 
     def do_get_impl(self, ticket: Ticket) -> tuple[Schema, Iterator[RecordBatch]]:
         raise NotImplementedError
+
+    def do_get_encoded(
+        self, ticket: Ticket
+    ) -> tuple[EncodedMessage, list[EncodedMessage]] | None:
+        """Optional fast path: pre-encoded ``(schema msg, batch msgs)``.
+
+        Return ``None`` (the default) to serve through ``do_get_impl`` +
+        per-request encoding."""
+        return None
 
     def do_put_impl(
         self, descriptor: FlightDescriptor, schema: Schema, batches: Iterator[RecordBatch]
@@ -125,13 +160,33 @@ class FlightServerBase:
             except FlightError as e:
                 conn.send_ctrl({"error": str(e)})
 
+    def _send_stream(self, conn: FrameConnection, msgs: Iterable[EncodedMessage]) -> None:
+        if self.coalesce:
+            conn.send_data_many(msgs)
+        else:
+            for m in msgs:
+                conn.send_data(m)
+
     def _serve_do_get(self, conn: FrameConnection, ticket: Ticket) -> None:
+        pre = self.do_get_encoded(ticket)
+        if pre is not None:  # encode-once cache: no per-request encoding
+            schema_msg, batch_msgs = pre
+            conn.send_ctrl({"ok": True})
+            self._send_stream(
+                conn, chain((schema_msg,), batch_msgs, (encode_eos(self.wire_codec),))
+            )
+            return
         schema, batches = self.do_get_impl(ticket)
         conn.send_ctrl({"ok": True})
-        conn.send_data(encode_schema(schema))
-        for b in batches:
-            conn.send_data(encode_batch(b))
-        conn.send_data(encode_eos())
+
+        def frames() -> Iterator[EncodedMessage]:
+            yield encode_schema(schema)
+            for b in batches:
+                self.encode_calls += 1
+                yield encode_batch(b, self.wire_codec)
+            yield encode_eos(self.wire_codec)
+
+        self._send_stream(conn, frames())
 
     def _recv_stream(self, conn: FrameConnection) -> tuple[Schema, Iterator[RecordBatch]]:
         kind, meta, body = conn.recv_frame()
@@ -172,13 +227,13 @@ class FlightServerBase:
             k, m, b = conn.recv_frame()
             dm = decode_message(m, b)
             if dm.kind == "eos":
-                conn.send_data(encode_eos())
+                conn.send_data(encode_eos(self.wire_codec))
                 return
             out = self.do_exchange_impl(descriptor, in_schema, dm.batch(in_schema))
             if not out_schema_sent:
                 conn.send_data(encode_schema(out.schema))
                 out_schema_sent = True
-            conn.send_data(encode_batch(out))
+            conn.send_data(encode_batch(out, self.wire_codec))
 
 
 class InMemoryFlightServer(FlightServerBase):
@@ -190,13 +245,24 @@ class InMemoryFlightServer(FlightServerBase):
         auth_token: str | None = None,
         batches_per_endpoint: int = 0,
         shard_id: int | None = None,
+        *,
+        wire_codec: str = DEFAULT_CODEC,
+        coalesce: bool = True,
+        cache_encoded: bool = True,
     ):
-        super().__init__(location_name, auth_token)
+        super().__init__(location_name, auth_token, wire_codec=wire_codec, coalesce=coalesce)
         self._store: dict[str, list[RecordBatch]] = {}
         self._schemas: dict[str, Schema] = {}
         self._lock = threading.Lock()
         self.batches_per_endpoint = batches_per_endpoint  # 0 = single endpoint
         self.shard_id = shard_id  # set by cluster.py: stamped into tickets
+        # encode-once cache: dataset -> (schema msg, per-batch msgs), built on
+        # first DoGet, invalidated whenever the dataset changes
+        self.cache_encoded = cache_encoded
+        self._encoded: dict[str, tuple[EncodedMessage, tuple[EncodedMessage, ...]]] = {}
+        self._versions: dict[str, int] = {}  # bumped on every dataset mutation
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     # -- direct (in-proc) API ------------------------------------------- #
     def add_dataset(
@@ -208,6 +274,8 @@ class InMemoryFlightServer(FlightServerBase):
         with self._lock:
             self._store[name] = list(batches)
             self._schemas[name] = schema
+            self._encoded.pop(name, None)
+            self._versions[name] = self._versions.get(name, 0) + 1
 
     def dataset(self, name: str) -> list[RecordBatch]:
         return self._store[name]
@@ -257,6 +325,45 @@ class InMemoryFlightServer(FlightServerBase):
             schema = self._schemas[name]
         return schema, iter(batches)
 
+    def do_get_encoded(
+        self, ticket: Ticket
+    ) -> tuple[EncodedMessage, list[EncodedMessage]] | None:
+        # A subclass or monkeypatch that changes do_get_impl (query pushdown,
+        # paced streams, fault injection) must keep serving through it.
+        if (
+            not self.cache_encoded
+            or type(self).do_get_impl is not InMemoryFlightServer.do_get_impl
+            or "do_get_impl" in self.__dict__
+        ):
+            return None
+        r = ticket.range()
+        name = r["dataset"]
+        with self._lock:
+            if name not in self._store:
+                raise FlightError(f"no such flight: {name}")
+            entry = self._encoded.get(name)
+            if entry is not None:
+                self.cache_hits += 1
+                return entry[0], list(entry[1][r["start"] : r["stop"]])
+            self.cache_misses += 1
+            batches = list(self._store[name])
+            schema = self._schemas[name]
+            version = self._versions.get(name, 0)
+        # encode outside the lock: a multi-GB first build must not stall
+        # every other RPC on this server
+        schema_msg = encode_schema(schema)
+        msgs = []
+        for b in batches:
+            self.encode_calls += 1
+            msgs.append(encode_batch(b, self.wire_codec))
+        entry = (schema_msg, tuple(msgs))
+        with self._lock:
+            # cache only if the dataset didn't change while we encoded; the
+            # stale-but-consistent snapshot still serves this request
+            if self._versions.get(name, 0) == version and name in self._store:
+                self._encoded[name] = entry
+        return entry[0], list(entry[1][r["start"] : r["stop"]])
+
     def do_put_impl(self, descriptor, schema, batches) -> dict:
         name = descriptor.path[0] if descriptor.path else descriptor.key
         received = list(batches)
@@ -264,6 +371,8 @@ class InMemoryFlightServer(FlightServerBase):
             self._store.setdefault(name, [])
             self._store[name].extend(received)
             self._schemas.setdefault(name, schema)
+            self._encoded.pop(name, None)
+            self._versions[name] = self._versions.get(name, 0) + 1
         return {
             "batches": len(received),
             "rows": sum(b.num_rows for b in received),
@@ -272,8 +381,11 @@ class InMemoryFlightServer(FlightServerBase):
 
     def do_action_impl(self, action: Action) -> list[ActionResult]:
         if action.type == "drop":
+            name = action.body.decode()
             with self._lock:
-                self._store.pop(action.body.decode(), None)
+                self._store.pop(name, None)
+                self._encoded.pop(name, None)
+                self._versions[name] = self._versions.get(name, 0) + 1
             return [ActionResult(b"dropped")]
         if action.type == "list-names":
             with self._lock:
@@ -281,6 +393,17 @@ class InMemoryFlightServer(FlightServerBase):
             return [ActionResult(names.encode())]
         if action.type == "health":
             return [ActionResult(b"ok")]
+        if action.type == "server-stats":
+            with self._lock:
+                stats = {
+                    "encode_calls": self.encode_calls,
+                    "encode_cache_hits": self.cache_hits,
+                    "encode_cache_misses": self.cache_misses,
+                    "encode_cache_datasets": len(self._encoded),
+                    "wire_codec": self.wire_codec,
+                    "coalesce": self.coalesce,
+                }
+            return [ActionResult(json.dumps(stats).encode())]
         if action.type == "stats":
             with self._lock:
                 stats = {

@@ -13,12 +13,30 @@ Frame layout::
 
     <I magic><B kind><I meta_len><Q body_len> | meta | body
 
-``kind``: 0 = control (JSON), 1 = data (IPC message).  gRPC's HTTP/2 framing
-is replaced by this minimal equivalent (see DESIGN.md §2 non-transferable).
+``kind``: 0 = control (JSON), 1 = data (IPC message; metadata is the binary
+codec of ipc.py by default, JSON-compatible by first byte).  gRPC's HTTP/2
+framing is replaced by this minimal equivalent (see DESIGN.md §2
+non-transferable).
+
+Syscall discipline — the small-message regime is syscall bound, so:
+
+* **coalesced send** — ``send_data_many`` packs multiple data frames into
+  single ``sendmsg`` calls under a byte budget (``COALESCE_BYTES``) and the
+  platform ``IOV_MAX``; a DoGet of 1 KiB batches goes from one syscall per
+  frame to one per ~megabyte.  ``_sendall_vectored`` additionally chunks any
+  part list to ``IOV_MAX`` iovecs (wide batches + pad views can exceed it —
+  the kernel would fail with EMSGSIZE).
+* **buffered receive** — frame header + metadata (and any small bodies
+  already in flight) are consumed from one buffered ``recv`` instead of one
+  syscall each; large bodies are still received directly into their
+  destination (zero copies past the socket buffer).
+* **pooled bodies** — receive bodies come from a ``BufferPool`` recycling
+  aligned slabs across frames instead of a fresh allocation per body.
 """
 from __future__ import annotations
 
 import json
+import os
 import socket
 import struct
 import threading
@@ -26,7 +44,7 @@ from typing import Callable, Iterable
 
 import numpy as np
 
-from ..buffer import Buffer
+from ..buffer import Buffer, BufferPool
 from ..ipc import EncodedMessage, parse_metadata
 from .protocol import FlightError
 
@@ -37,22 +55,42 @@ KIND_CTRL, KIND_DATA = 0, 1
 # Default socket options tuned for bulk transfer (paper §3: Flight wins on
 # large messages; we keep buffers big and Nagle off for the small control frames).
 SOCK_BUF = 4 << 20
+COALESCE_BYTES = 1 << 20  # coalesced-send flush budget
+RECV_CHUNK = 256 << 10  # buffered-receive read size (small-frame streams)
+RECV_CHUNK_BULK = 4 << 10  # read size once bodies are large (see _fill)
+LARGE_BODY = 16 << 10  # body size that flips the connection to bulk reads
+
+try:
+    IOV_MAX = os.sysconf("SC_IOV_MAX")
+except (AttributeError, OSError, ValueError):  # pragma: no cover
+    IOV_MAX = 1024
+if IOV_MAX <= 0:  # sysconf may report "indeterminate"
+    IOV_MAX = 1024
 
 
 class FrameConnection:
     """A framed, bidirectional byte-stream connection over a socket."""
 
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket, pool: BufferPool | None = None):
         self.sock = sock
-        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:  # e.g. AF_UNIX socketpair in tests
+            pass
         for opt in (socket.SO_SNDBUF, socket.SO_RCVBUF):
             try:
                 self.sock.setsockopt(socket.SOL_SOCKET, opt, SOCK_BUF)
             except OSError:
                 pass
         self._send_lock = threading.Lock()
+        self.pool = pool or BufferPool()
+        self._rbuf = bytearray()  # buffered-receive leftover bytes
+        self._rpos = 0
+        self._fill_chunk = RECV_CHUNK  # adapted per observed body sizes
         self.bytes_sent = 0
         self.bytes_received = 0
+        self.sendmsg_calls = 0
+        self.recv_calls = 0
 
     # ------------------------------------------------------------- send --
     def send_ctrl(self, obj: dict) -> None:
@@ -62,56 +100,117 @@ class FrameConnection:
     def send_data(self, msg: EncodedMessage) -> None:
         self._sendv(KIND_DATA, msg.metadata, msg.body_parts, msg.body_len)
 
-    def _sendv(self, kind: int, meta: bytes, body_parts: list[np.ndarray], body_len: int) -> None:
+    def send_data_many(self, msgs: Iterable[EncodedMessage], budget: int = COALESCE_BYTES) -> None:
+        """Send data frames coalesced: many frames per ``sendmsg``.
+
+        Frames are appended to one iovec list and flushed when the byte
+        budget or ``IOV_MAX`` would be exceeded — the syscall count scales
+        with bytes, not with frame count."""
+        parts: list[memoryview] = []
+        total = 0
+        for msg in msgs:
+            fparts, flen = self._frame_parts(KIND_DATA, msg.metadata, msg.body_parts, msg.body_len)
+            if parts and (total + flen > budget or len(parts) + len(fparts) > IOV_MAX):
+                self._flush(parts, total)
+                parts, total = [], 0
+            parts += fparts
+            total += flen
+        if parts:
+            self._flush(parts, total)
+
+    @staticmethod
+    def _frame_parts(
+        kind: int, meta: bytes, body_parts: list[np.ndarray], body_len: int
+    ) -> tuple[list[memoryview], int]:
         header = FRAME.pack(FRAME_MAGIC, kind, len(meta), body_len)
-        parts: list[memoryview | bytes] = [header, meta]
-        parts += [memoryview(p).cast("B") if isinstance(p, np.ndarray) else p for p in body_parts]
-        total = len(header) + len(meta) + body_len
+        parts = [memoryview(header), memoryview(meta)]
+        for p in body_parts:
+            parts.append(memoryview(p).cast("B") if isinstance(p, np.ndarray) else memoryview(p))
+        return parts, len(header) + len(meta) + body_len
+
+    def _sendv(self, kind: int, meta: bytes, body_parts: list[np.ndarray], body_len: int) -> None:
+        parts, total = self._frame_parts(kind, meta, body_parts, body_len)
+        self._flush(parts, total)
+
+    def _flush(self, parts: list[memoryview], total: int) -> None:
         with self._send_lock:
             self._sendall_vectored(parts, total)
         self.bytes_sent += total
 
-    def _sendall_vectored(self, parts: list, total: int) -> None:
-        """sendmsg with continuation — zero-copy gather from columnar buffers."""
-        sent = self.sock.sendmsg(parts)
-        while sent < total:
-            # find resume point
-            remaining: list[memoryview] = []
-            acc = 0
-            for p in parts:
-                mv = memoryview(p).cast("B") if not isinstance(p, memoryview) else p
-                if acc + len(mv) <= sent:
-                    acc += len(mv)
-                    continue
-                start = max(0, sent - acc)
-                remaining.append(mv[start:])
-                acc += len(mv)
-            parts = remaining
-            sent += self.sock.sendmsg(parts)
+    def _sendall_vectored(self, parts: list[memoryview], total: int) -> None:
+        """sendmsg with continuation — zero-copy gather from columnar buffers.
+
+        Consumes ``parts`` in windows of ``IOV_MAX`` iovecs (the kernel limit)
+        and resumes after short writes.  Mutates the list in place."""
+        i, n = 0, len(parts)
+        while i < n:
+            window = parts[i : i + IOV_MAX]
+            sent = self.sock.sendmsg(window)
+            self.sendmsg_calls += 1
+            for mv in window:
+                if sent >= len(mv):
+                    sent -= len(mv)
+                    i += 1
+                else:
+                    parts[i] = mv[sent:]
+                    break
 
     # ------------------------------------------------------------- recv --
     def _recv_exact_into(self, view: memoryview) -> None:
         got = 0
         while got < len(view):
             n = self.sock.recv_into(view[got:], len(view) - got)
+            self.recv_calls += 1
             if n == 0:
                 raise ConnectionError("peer closed")
             got += n
 
+    def _buffered(self) -> int:
+        return len(self._rbuf) - self._rpos
+
+    def _fill(self, n: int) -> None:
+        """Ensure ≥ n unread buffered bytes; one recv drains many small frames.
+
+        The read size adapts: small-frame streams use wide reads so one
+        syscall covers dozens of header+metadata(+body) sequences; once a
+        large body is seen the reads shrink so bodies stay on the direct
+        ``recv_into``-the-slab path instead of being double-copied through
+        this buffer."""
+        if self._rpos and (self._rpos == len(self._rbuf) or self._rpos > RECV_CHUNK):
+            del self._rbuf[: self._rpos]
+            self._rpos = 0
+        while self._buffered() < n:
+            chunk = self.sock.recv(max(self._fill_chunk, n - self._buffered()))
+            self.recv_calls += 1
+            if not chunk:
+                raise ConnectionError("peer closed")
+            self._rbuf += chunk
+
+    def _take(self, n: int) -> bytes:
+        self._fill(n)
+        out = bytes(self._rbuf[self._rpos : self._rpos + n])
+        self._rpos += n
+        return out
+
     def recv_frame(self) -> tuple[int, dict, Buffer | None]:
-        head = bytearray(FRAME.size)
-        self._recv_exact_into(memoryview(head))
+        head = self._take(FRAME.size)
         magic, kind, meta_len, body_len = FRAME.unpack(head)
         if magic != FRAME_MAGIC:
             raise FlightError(f"bad frame magic {magic:#x}")
-        meta_raw = bytearray(meta_len)
-        self._recv_exact_into(memoryview(meta_raw))
+        meta_raw = self._take(meta_len)
+        self._fill_chunk = RECV_CHUNK_BULK if body_len >= LARGE_BODY else RECV_CHUNK
         body = None
         if body_len:
-            body = Buffer.allocate(body_len)
-            self._recv_exact_into(memoryview(body.data))
+            body = self.pool.acquire(body_len)
+            view = memoryview(body.data)
+            have = min(self._buffered(), body_len)
+            if have:  # body head over-read by the buffered metadata recv
+                view[:have] = memoryview(self._rbuf)[self._rpos : self._rpos + have]
+                self._rpos += have
+            if have < body_len:
+                self._recv_exact_into(view[have:])
         self.bytes_received += FRAME.size + meta_len + body_len
-        meta = parse_metadata(bytes(meta_raw)) if kind == KIND_DATA else json.loads(meta_raw)
+        meta = parse_metadata(meta_raw) if kind == KIND_DATA else json.loads(meta_raw)
         return kind, meta, body
 
     def recv_ctrl(self) -> dict:
@@ -164,6 +263,9 @@ class SocketListener:
             conn = FrameConnection(sock)
             t = threading.Thread(target=self._safe_handle, args=(conn,), daemon=True)
             t.start()
+            # reap finished handlers so long-lived servers don't accrete one
+            # Thread object per connection ever accepted
+            self._threads = [x for x in self._threads if x.is_alive()]
             self._threads.append(t)
 
     def _safe_handle(self, conn: FrameConnection) -> None:

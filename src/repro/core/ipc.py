@@ -5,8 +5,29 @@ A stream is::
     SCHEMA message | RECORDBATCH message * | EOS
 
 Each message = 8-byte header (magic ``0xA77C0DE1`` + metadata length) +
-metadata (compact JSON) + 64-byte-aligned body holding every buffer of the
-batch back-to-back at aligned offsets.
+metadata + 64-byte-aligned body holding every buffer of the batch
+back-to-back at aligned offsets.
+
+Metadata comes in two codecs, discriminated by the first byte:
+
+* **binary** (default, ``0xB1`` first byte) — a struct-packed fixed header
+  followed by flat node/buffer placement tables::
+
+      <BBHIIQQ>  magic=0xB1, msg kind, reserved, n_nodes, n_buffers,
+                 rows, body_len                                  (28 B)
+      n_nodes   × <QB>  node: logical length, flags (bit0 = has validity)
+      n_buffers × <QQ>  buffer placement: body offset, byte length
+
+  Nodes and buffers are laid out in column-major preorder (a node, its
+  buffers — validity first, then offsets, then values — then its children);
+  the decoder recovers the nesting by walking the schema's type tree, so no
+  per-message structure is serialized.  ``json.dumps``/``loads`` never run
+  on the data path.
+* **json** — ``{"msg": ..., ...}``, kept for the schema message (per-stream,
+  off the hot path), for control frames one level down in transport.py, and
+  as the comparison codec in ``benchmarks/bench_wire.py``.  JSON always
+  starts with ``{`` (0x7B), so the 0xB1 first byte is an unambiguous kind
+  bit and old JSON frames keep decoding.
 
 The performance-critical properties (the whole point of the paper):
 
@@ -42,6 +63,17 @@ MAGIC = 0xA77C0DE1
 HEADER = struct.Struct("<II")  # magic, metadata length
 MSG_SCHEMA, MSG_BATCH, MSG_EOS = "schema", "batch", "eos"
 
+CODEC_JSON, CODEC_BINARY = "json", "binary"
+DEFAULT_CODEC = CODEC_BINARY
+
+# binary metadata layout (see module docstring)
+META_MAGIC = 0xB1  # never a JSON first byte ('{' == 0x7B)
+BIN_BATCH, BIN_EOS = 1, 2
+BIN_HEADER = struct.Struct("<BBHIIQQ")  # magic, kind, reserved, n_nodes, n_buffers, rows, body_len
+BIN_NODE = struct.Struct("<QB")  # length, flags (bit0 = has validity)
+BIN_BUF = struct.Struct("<QQ")  # body offset, byte length
+NODE_HAS_VALIDITY = 1
+
 
 # --------------------------------------------------------------------------
 # encode
@@ -76,6 +108,18 @@ class EncodedMessage:
         return b"".join(self.frame_parts())
 
 
+@dataclass
+class BatchMeta:
+    """Parsed RECORDBATCH metadata: flat placement tables, either codec."""
+
+    __slots__ = ("rows", "body_len", "nodes", "buffers")
+
+    rows: int
+    body_len: int
+    nodes: list[tuple[int, int]]  # (length, flags) preorder
+    buffers: list[tuple[int, int]]  # (offset, nbytes) preorder
+
+
 _PAD = np.zeros(ALIGNMENT, dtype=np.uint8)
 
 
@@ -95,41 +139,39 @@ class _BodyBuilder:
         return off, n
 
 
-def _flatten_array(arr: Array, body: _BodyBuilder) -> dict:
-    """Depth-first walk emitting buffer placements; compacts logical offsets."""
+def _flatten_array(arr: Array, body: _BodyBuilder, nodes: list, bufs: list) -> None:
+    """Depth-first walk emitting flat placement tables; compacts offsets."""
     t = arr.type
-    node: dict = {"len": arr.length, "buffers": [], "children": []}
+    flags = NODE_HAS_VALIDITY if arr.validity is not None else 0
+    nodes.append((arr.length, flags))
 
     if arr.validity is not None:
         v = arr.validity.slice(arr.offset, arr.length) if arr.offset else arr.validity
-        node["validity"] = body.add(v.buffer.data[: (arr.length + 7) // 8])
-    else:
-        node["validity"] = None
+        bufs.append(body.add(v.buffer.data[: (arr.length + 7) // 8]))
 
     if isinstance(t, PrimitiveType):
-        node["buffers"].append(body.add(np.ascontiguousarray(arr._values())))
+        bufs.append(body.add(np.ascontiguousarray(arr._values())))
     elif isinstance(t, (Utf8Type, BinaryType)):
         offs = arr._offsets()
         base = int(offs[0])
         if base:
             offs = offs - base  # rebase (copies n+1 int32 — metadata-sized)
-        node["buffers"].append(body.add(np.ascontiguousarray(offs)))
+        bufs.append(body.add(np.ascontiguousarray(offs)))
         values = arr.buffers[1].view(np.uint8)[base : base + int(offs[-1])]
-        node["buffers"].append(body.add(values))
+        bufs.append(body.add(values))
     elif isinstance(t, ListType):
         offs = arr._offsets()
         base = int(offs[0])
         if base:
             offs = offs - base
-        node["buffers"].append(body.add(np.ascontiguousarray(offs)))
+        bufs.append(body.add(np.ascontiguousarray(offs)))
         child = arr.children[0].slice(base, int(offs[-1]))
-        node["children"].append(_flatten_array(child, body))
+        _flatten_array(child, body, nodes, bufs)
     elif isinstance(t, FixedSizeListType):
         child = arr.children[0].slice(arr.offset * t.list_size, arr.length * t.list_size)
-        node["children"].append(_flatten_array(child, body))
+        _flatten_array(child, body, nodes, bufs)
     else:
         raise TypeError(f"IPC: unsupported type {t!r}")
-    return node
 
 
 def encode_schema(s: Schema) -> EncodedMessage:
@@ -137,16 +179,35 @@ def encode_schema(s: Schema) -> EncodedMessage:
     return EncodedMessage(meta, [], 0)
 
 
-def encode_batch(batch: RecordBatch) -> EncodedMessage:
+def encode_batch(batch: RecordBatch, codec: str = DEFAULT_CODEC) -> EncodedMessage:
     body = _BodyBuilder()
-    nodes = [_flatten_array(c, body) for c in batch.columns]
-    meta = json.dumps(
-        {"msg": MSG_BATCH, "rows": batch.num_rows, "nodes": nodes, "body_len": body.pos}
-    ).encode()
+    nodes: list[tuple[int, int]] = []
+    bufs: list[tuple[int, int]] = []
+    for c in batch.columns:
+        _flatten_array(c, body, nodes, bufs)
+    if codec == CODEC_BINARY:
+        meta = bytearray(
+            BIN_HEADER.pack(META_MAGIC, BIN_BATCH, 0, len(nodes), len(bufs),
+                            batch.num_rows, body.pos)
+        )
+        for node in nodes:
+            meta += BIN_NODE.pack(*node)
+        for buf in bufs:
+            meta += BIN_BUF.pack(*buf)
+        meta = bytes(meta)
+    elif codec == CODEC_JSON:
+        meta = json.dumps(
+            {"msg": MSG_BATCH, "rows": batch.num_rows, "body_len": body.pos,
+             "nodes": nodes, "buffers": bufs}
+        ).encode()
+    else:
+        raise ValueError(f"unknown metadata codec {codec!r}")
     return EncodedMessage(meta, body.parts, body.pos)
 
 
-def encode_eos() -> EncodedMessage:
+def encode_eos(codec: str = DEFAULT_CODEC) -> EncodedMessage:
+    if codec == CODEC_BINARY:
+        return EncodedMessage(BIN_HEADER.pack(META_MAGIC, BIN_EOS, 0, 0, 0, 0, 0), [], 0)
     return EncodedMessage(json.dumps({"msg": MSG_EOS}).encode(), [], 0)
 
 
@@ -155,27 +216,33 @@ def encode_eos() -> EncodedMessage:
 # --------------------------------------------------------------------------
 
 
-def _rebuild_array(node: dict, typ: DataType, body: Buffer) -> Array:
-    def view(placement) -> Buffer:
-        off, n = placement
-        return body.slice(off, n)
-
+def _rebuild_node(meta: BatchMeta, typ: DataType, body: Buffer, pos: list[int]) -> Array:
+    """Rebuild one array by advancing the (node, buffer) cursors in ``pos``."""
+    length, flags = meta.nodes[pos[0]]
+    pos[0] += 1
     validity = None
-    if node["validity"] is not None:
-        validity = Bitmap(view(node["validity"]), node["len"])
+    if flags & NODE_HAS_VALIDITY:
+        off, n = meta.buffers[pos[1]]
+        pos[1] += 1
+        validity = Bitmap(body.slice(off, n), length)
 
     if isinstance(typ, PrimitiveType):
-        return Array(typ, node["len"], validity, [view(node["buffers"][0])])
+        off, n = meta.buffers[pos[1]]
+        pos[1] += 1
+        return Array(typ, length, validity, [body.slice(off, n)])
     if isinstance(typ, (Utf8Type, BinaryType)):
-        return Array(
-            typ, node["len"], validity, [view(node["buffers"][0]), view(node["buffers"][1])]
-        )
+        o_off, o_n = meta.buffers[pos[1]]
+        v_off, v_n = meta.buffers[pos[1] + 1]
+        pos[1] += 2
+        return Array(typ, length, validity, [body.slice(o_off, o_n), body.slice(v_off, v_n)])
     if isinstance(typ, ListType):
-        child = _rebuild_array(node["children"][0], typ.value_type, body)
-        return Array(typ, node["len"], validity, [view(node["buffers"][0])], [child])
+        off, n = meta.buffers[pos[1]]
+        pos[1] += 1
+        child = _rebuild_node(meta, typ.value_type, body, pos)
+        return Array(typ, length, validity, [body.slice(off, n)], [child])
     if isinstance(typ, FixedSizeListType):
-        child = _rebuild_array(node["children"][0], typ.value_type, body)
-        return Array(typ, node["len"], validity, [], [child])
+        child = _rebuild_node(meta, typ.value_type, body, pos)
+        return Array(typ, length, validity, [], [child])
     raise TypeError(typ)
 
 
@@ -183,28 +250,50 @@ def _rebuild_array(node: dict, typ: DataType, body: Buffer) -> Array:
 class DecodedMessage:
     kind: str
     schema: Schema | None = None
-    batch_meta: dict | None = None
+    batch_meta: BatchMeta | None = None
     body: Buffer | None = None
 
     def batch(self, schema: Schema) -> RecordBatch:
         assert self.kind == MSG_BATCH and self.batch_meta is not None
-        cols = [
-            _rebuild_array(node, f.type, self.body)
-            for node, f in zip(self.batch_meta["nodes"], schema.fields)
-        ]
+        pos = [0, 0]  # (node cursor, buffer cursor)
+        cols = [_rebuild_node(self.batch_meta, f.type, self.body, pos) for f in schema.fields]
         return RecordBatch(schema, cols)
 
 
-def parse_metadata(meta_bytes: bytes) -> dict:
-    return json.loads(meta_bytes.rstrip(b"\0").decode())
+def _parse_binary(data: bytes) -> dict | BatchMeta:
+    magic, kind, _res, n_nodes, n_bufs, rows, body_len = BIN_HEADER.unpack_from(data, 0)
+    if kind == BIN_EOS:
+        return {"msg": MSG_EOS}
+    if kind != BIN_BATCH:
+        raise ValueError(f"bad binary metadata kind {kind}")
+    off = BIN_HEADER.size
+    nodes = list(BIN_NODE.iter_unpack(data[off : off + n_nodes * BIN_NODE.size]))
+    off += n_nodes * BIN_NODE.size
+    buffers = list(BIN_BUF.iter_unpack(data[off : off + n_bufs * BIN_BUF.size]))
+    return BatchMeta(rows, body_len, nodes, buffers)
 
 
-def decode_message(meta: dict, body: Buffer | None) -> DecodedMessage:
+def parse_metadata(meta_bytes: bytes) -> dict | BatchMeta:
+    """Parse message metadata of either codec (first byte discriminates)."""
+    if meta_bytes and meta_bytes[0] == META_MAGIC:
+        return _parse_binary(meta_bytes)
+    obj = json.loads(meta_bytes.rstrip(b"\0").decode())
+    if obj.get("msg") == MSG_BATCH:
+        return BatchMeta(
+            obj["rows"],
+            obj["body_len"],
+            [tuple(n) for n in obj["nodes"]],
+            [tuple(b) for b in obj["buffers"]],
+        )
+    return obj
+
+
+def decode_message(meta: dict | BatchMeta, body: Buffer | None) -> DecodedMessage:
+    if isinstance(meta, BatchMeta):
+        return DecodedMessage(MSG_BATCH, batch_meta=meta, body=body)
     kind = meta["msg"]
     if kind == MSG_SCHEMA:
         return DecodedMessage(MSG_SCHEMA, schema=Schema.from_json(meta["schema"]))
-    if kind == MSG_BATCH:
-        return DecodedMessage(MSG_BATCH, batch_meta=meta, body=body)
     if kind == MSG_EOS:
         return DecodedMessage(MSG_EOS)
     raise ValueError(f"bad message kind {kind!r}")
@@ -215,11 +304,13 @@ def decode_message(meta: dict, body: Buffer | None) -> DecodedMessage:
 # --------------------------------------------------------------------------
 
 
-def write_stream(batches: list[RecordBatch], schema: Schema | None = None) -> bytes:
+def write_stream(
+    batches: list[RecordBatch], schema: Schema | None = None, codec: str = DEFAULT_CODEC
+) -> bytes:
     schema = schema or batches[0].schema
     out = [encode_schema(schema).to_bytes()]
-    out += [encode_batch(b).to_bytes() for b in batches]
-    out.append(encode_eos().to_bytes())
+    out += [encode_batch(b, codec).to_bytes() for b in batches]
+    out.append(encode_eos(codec).to_bytes())
     return b"".join(out)
 
 
@@ -234,9 +325,9 @@ def read_stream(data: bytes | Buffer) -> list[RecordBatch]:
         meta = parse_metadata(buf.data[pos : pos + meta_len].tobytes())
         pos += meta_len
         body = None
-        if meta["msg"] == MSG_BATCH:
-            body = buf.slice(pos, meta["body_len"])
-            pos += meta["body_len"]
+        if isinstance(meta, BatchMeta):
+            body = buf.slice(pos, meta.body_len)
+            pos += meta.body_len
         msg = decode_message(meta, body)
         if msg.kind == MSG_SCHEMA:
             schema = msg.schema

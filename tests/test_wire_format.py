@@ -1,0 +1,399 @@
+"""Wire data plane: binary IPC metadata, encode cache, coalescing, pooling.
+
+Covers PR 2's hot-path overhaul: golden bytes pin the binary metadata
+layout; property tests sweep nested/sliced/nullable columns through both
+metadata codecs; transport tests assert the syscall-shape (coalesced
+sendmsg, IOV_MAX chunking, pooled receive slabs) and the server's
+encode-once cache counters.
+"""
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RecordBatch, read_stream, write_stream
+from repro.core.buffer import BufferPool
+from repro.core.ipc import (
+    BIN_HEADER,
+    CODEC_BINARY,
+    CODEC_JSON,
+    META_MAGIC,
+    BatchMeta,
+    decode_message,
+    encode_batch,
+    encode_eos,
+    encode_schema,
+    parse_metadata,
+)
+from repro.core.flight import FlightClient, FlightDescriptor, InMemoryFlightServer
+from repro.core.flight import transport as transport_mod
+from repro.core.flight.transport import FrameConnection, KIND_DATA, SocketListener
+
+
+def conn_pair() -> tuple[FrameConnection, FrameConnection]:
+    a, b = socket.socketpair()
+    return FrameConnection(a), FrameConnection(b)
+
+
+# ---------------------------------------------------------------------------
+# binary metadata layout
+# ---------------------------------------------------------------------------
+
+
+class TestBinaryMetadata:
+    def test_golden_bytes(self):
+        """Pin the binary metadata layout for {"x": [1, None, 3]} (int64).
+
+        header <BBHIIQQ>: magic=0xB1, kind=1(batch), reserved, n_nodes=1,
+        n_buffers=2, rows=3, body_len=128; one node <QB> (len=3, flags=1:
+        validity present); two buffer placements <QQ>: validity (0, 1) and
+        values (64, 24).  Changing any of this is a wire-format break."""
+        meta = encode_batch(RecordBatch.from_pydict({"x": [1, None, 3]}), CODEC_BINARY).metadata
+        golden = (
+            "b1010000"          # magic, kind, reserved
+            "01000000" "02000000"  # n_nodes, n_buffers
+            "0300000000000000"  # rows
+            "8000000000000000"  # body_len = 128
+            "0300000000000000" "01"  # node: length=3, flags=validity
+            "0000000000000000" "0100000000000000"  # validity @0, 1 B
+            "4000000000000000" "1800000000000000"  # values @64, 24 B
+        )
+        assert meta.hex() == golden
+
+    def test_first_byte_discriminates_codecs(self):
+        b = RecordBatch.from_pydict({"x": [1.0, 2.0]})
+        assert encode_batch(b, CODEC_BINARY).metadata[0] == META_MAGIC
+        assert encode_batch(b, CODEC_JSON).metadata[0:1] == b"{"
+        assert encode_schema(b.schema).metadata[0:1] == b"{"  # schema stays JSON
+
+    def test_parse_roundtrip_both_codecs(self):
+        b = RecordBatch.from_pydict({"s": ["aa", None, "c"], "v": [[1], [2, 3], None]})
+        for codec in (CODEC_BINARY, CODEC_JSON):
+            meta = parse_metadata(encode_batch(b, codec).metadata)
+            assert isinstance(meta, BatchMeta)
+            assert meta.rows == 3
+        bin_meta = parse_metadata(encode_batch(b, CODEC_BINARY).metadata)
+        json_meta = parse_metadata(encode_batch(b, CODEC_JSON).metadata)
+        assert bin_meta.nodes == json_meta.nodes
+        assert bin_meta.buffers == json_meta.buffers
+        assert bin_meta.body_len == json_meta.body_len
+
+    def test_eos_both_codecs(self):
+        for codec in (CODEC_BINARY, CODEC_JSON):
+            msg = decode_message(parse_metadata(encode_eos(codec).metadata), None)
+            assert msg.kind == "eos"
+        assert len(encode_eos(CODEC_BINARY).metadata) == BIN_HEADER.size
+
+    def test_binary_metadata_is_padding_tolerant(self):
+        # frame_parts zero-pads metadata to 8B; the parser must ignore the tail
+        b = RecordBatch.from_pydict({"x": [1, 2]})
+        meta = encode_batch(b, CODEC_BINARY).metadata + b"\0" * 7
+        parsed = parse_metadata(meta)
+        assert parsed.rows == 2
+
+
+# ---------------------------------------------------------------------------
+# property tests: IPC round-trips over both codecs
+# ---------------------------------------------------------------------------
+
+pyint = st.one_of(st.none(), st.integers(-(2**40), 2**40))
+pystr = st.one_of(st.none(), st.text(max_size=8))
+pylist = st.one_of(st.none(), st.lists(st.integers(-100, 100), max_size=4))
+codecs = st.sampled_from([CODEC_BINARY, CODEC_JSON])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(pyint, min_size=1, max_size=40), codecs)
+def test_prop_int_nulls_roundtrip(values, codec):
+    b = RecordBatch.from_pydict({"c": values})
+    assert read_stream(write_stream([b], codec=codec))[0].to_pydict()["c"] == values
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(pystr, min_size=1, max_size=40), codecs)
+def test_prop_utf8_nulls_roundtrip(values, codec):
+    b = RecordBatch.from_pydict({"c": values})
+    assert read_stream(write_stream([b], codec=codec))[0].to_pydict()["c"] == values
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(pylist, min_size=1, max_size=20), codecs)
+def test_prop_list_nulls_roundtrip(values, codec):
+    b = RecordBatch.from_pydict({"c": values})
+    assert read_stream(write_stream([b], codec=codec))[0].to_pydict()["c"] == values
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.one_of(pyint, st.none()), min_size=2, max_size=40),
+    st.lists(pystr, min_size=2, max_size=40),
+    codecs,
+    st.data(),
+)
+def test_prop_sliced_batch_roundtrip(ints, strs, codec, data):
+    n = min(len(ints), len(strs))
+    b = RecordBatch.from_pydict({"i": ints[:n], "s": strs[:n]})
+    lo = data.draw(st.integers(0, n - 1))
+    hi = data.draw(st.integers(lo + 1, n))
+    out = read_stream(write_stream([b.slice(lo, hi - lo)], codec=codec))[0]
+    assert out.to_pydict() == {"i": ints[:n][lo:hi], "s": strs[:n][lo:hi]}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.one_of(st.none(), st.lists(pystr, max_size=3)), min_size=1, max_size=12), codecs)
+def test_prop_nested_list_of_utf8_roundtrip(values, codec):
+    from repro.core import Array, Schema
+    from repro.core.schema import Field, list_, utf8
+
+    # type inference can't see list<utf8> in all-None/empty shells: pin it
+    arr = Array.from_pylist(values, list_(utf8))
+    batch = RecordBatch(Schema((Field("c", list_(utf8)),)), [arr])
+    out = read_stream(write_stream([batch], codec=codec))[0]
+    assert out.to_pydict()["c"] == values
+
+
+# ---------------------------------------------------------------------------
+# pooled receive allocator
+# ---------------------------------------------------------------------------
+
+
+class TestBufferPool:
+    def test_recycles_released_slab(self):
+        pool = BufferPool()
+        n = 48 << 10  # more than half the min slab: no two fit side by side
+        b1 = pool.acquire(n)
+        base1 = b1.data.base.ctypes.data
+        del b1
+        b2 = pool.acquire(n)  # can't bump-carve: must scan and recycle
+        assert b2.data.base.ctypes.data == base1
+        assert pool.hits == 1 and pool.misses == 1
+
+    def test_live_carves_never_overlap(self):
+        pool = BufferPool()
+        b1 = pool.acquire(100)
+        b1.data[:] = 7
+        b2 = pool.acquire(100)  # bump-carved beside b1, never over it
+        b2.data[:] = 9
+        assert (b1.data == 7).all()
+        assert (b2.data == 9).all()
+        assert pool.hits == 1 and pool.misses == 1  # shared slab, no new alloc
+
+    def test_never_restarts_pinned_slab(self):
+        pool = BufferPool()
+        b1 = pool.acquire(256)
+        b1.data[:] = 42
+        view = b1.slice(10, 20)  # survives the parent Buffer
+        del b1
+        # too big to bump-carve: must scan — and the pinned slab is not free
+        b3 = pool.acquire(BufferPool.MIN_SLAB)
+        assert pool.misses == 2
+        assert b3.data.base is not view.data.base
+        assert (view.data == 42).all()
+
+    def test_alignment(self):
+        pool = BufferPool()
+        for n in (1, 63, 4096, 1 << 20):
+            assert pool.acquire(n).is_aligned
+
+    def test_decoded_batch_survives_pool_pressure(self):
+        # decode a frame from a pooled body, hammer the pool, re-check data
+        server, client = conn_pair()
+        batch = RecordBatch.from_numpy({"x": np.arange(4096, dtype=np.int64)})
+        server.send_data(encode_schema(batch.schema))
+        server.send_data(encode_batch(batch))
+        _, meta, _ = client.recv_frame()
+        schema = decode_message(meta, None).schema
+        _, meta, body = client.recv_frame()
+        decoded = decode_message(meta, body).batch(schema)
+        del body
+        for _ in range(8):
+            client.pool.acquire(64 << 10)
+        assert decoded == batch
+        server.close(), client.close()
+
+
+# ---------------------------------------------------------------------------
+# transport: coalescing + IOV chunking + buffered receive
+# ---------------------------------------------------------------------------
+
+
+class TestCoalescing:
+    def test_many_small_frames_one_sendmsg(self):
+        server, client = conn_pair()
+        batches = [RecordBatch.from_numpy({"x": np.arange(8, dtype=np.int64) + i})
+                   for i in range(64)]
+        msgs = [encode_batch(b) for b in batches]
+        server.send_data_many(msgs)
+        assert server.sendmsg_calls < len(msgs) / 4  # coalesced, not per-frame
+        schema = batches[0].schema
+        for want in batches:
+            kind, meta, body = client.recv_frame()
+            assert kind == KIND_DATA
+            assert decode_message(meta, body).batch(schema) == want
+        server.close(), client.close()
+
+    def test_budget_flushes(self):
+        server, client = conn_pair()
+        rows = 64 << 10  # 512 KiB per batch → budget forces multiple flushes
+        msgs = [encode_batch(RecordBatch.from_numpy({"x": np.arange(rows, dtype=np.int64)}))
+                for _ in range(8)]
+        got = []
+
+        def drain():
+            for _ in range(len(msgs)):
+                got.append(client.recv_frame()[2].nbytes)
+
+        t = threading.Thread(target=drain)
+        t.start()
+        server.send_data_many(msgs, budget=1 << 20)
+        t.join(10)
+        assert got == [rows * 8] * 8
+        assert server.sendmsg_calls >= 4  # not one giant flush
+        server.close(), client.close()
+
+    def test_iov_max_chunking(self, monkeypatch):
+        # wide batch: every column is two iovecs (values + pad) — with a tiny
+        # IOV_MAX the single frame must be split across sendmsg calls
+        monkeypatch.setattr(transport_mod, "IOV_MAX", 4)
+        server, client = conn_pair()
+        wide = RecordBatch.from_numpy(
+            {f"c{i}": np.arange(3, dtype=np.int64) for i in range(40)})
+        server.send_data(encode_batch(wide))
+        assert server.sendmsg_calls > 1
+        kind, meta, body = client.recv_frame()
+        assert decode_message(meta, body).batch(wide.schema) == wide
+        server.close(), client.close()
+
+    def test_interleaved_ctrl_and_data(self):
+        server, client = conn_pair()
+        b = RecordBatch.from_pydict({"x": [1, 2, 3]})
+        server.send_ctrl({"ok": True})
+        server.send_data_many([encode_batch(b)] * 3)
+        server.send_ctrl({"done": True})
+        assert client.recv_ctrl() == {"ok": True}
+        for _ in range(3):
+            kind, meta, body = client.recv_frame()
+            assert decode_message(meta, body).batch(b.schema) == b
+        assert client.recv_ctrl() == {"done": True}
+        server.close(), client.close()
+
+
+# ---------------------------------------------------------------------------
+# server encode-once cache
+# ---------------------------------------------------------------------------
+
+
+def make_batches(n=4, rows=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({"a": rng.integers(0, 100, rows).astype(np.int64)})
+            for _ in range(n)]
+
+
+class TestEncodeCache:
+    def server_stats(self, client):
+        return json.loads(client.do_action("server-stats")[0].body)
+
+    def test_cached_do_get_encodes_zero_times(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            srv.add_dataset("ds", make_batches(4))
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            c.do_get(info.endpoints[0].ticket).read_all()  # warm: builds cache
+            warm = self.server_stats(c)["encode_calls"]
+            assert warm == 4
+            for _ in range(3):
+                c.do_get(info.endpoints[0].ticket).read_all()
+            stats = self.server_stats(c)
+            assert stats["encode_calls"] == warm  # zero encode_batch since warm
+            assert stats["encode_cache_hits"] == 3
+        finally:
+            srv.shutdown()
+
+    def test_do_put_invalidates(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            srv.add_dataset("ds", make_batches(2))
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            t = info.endpoints[0].ticket
+            first = c.do_get(t).read_all().combine()
+            extra = make_batches(1, seed=9)
+            w = c.do_put(FlightDescriptor.for_path("ds"), extra[0].schema)
+            w.write_batches(extra)
+            w.close()
+            got = c.do_get(FlightClient(srv).get_flight_info(
+                FlightDescriptor.for_path("ds")).endpoints[0].ticket).read_all()
+            assert got.num_rows == first.num_rows + 64  # fresh bytes, not stale cache
+            assert self.server_stats(c)["encode_calls"] == 2 + 3
+        finally:
+            srv.shutdown()
+
+    def test_override_bypasses_cache(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            srv.add_dataset("ds", make_batches(2))
+            seen = {"n": 0}
+            orig = srv.do_get_impl
+
+            def counting(ticket):
+                seen["n"] += 1
+                return orig(ticket)
+
+            srv.do_get_impl = counting  # instance patch must keep being served
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            c.do_get(info.endpoints[0].ticket).read_all()
+            c.do_get(info.endpoints[0].ticket).read_all()
+            assert seen["n"] == 2
+            assert self.server_stats(c)["encode_cache_misses"] == 0
+        finally:
+            srv.shutdown()
+
+    def test_uncoalesced_json_server_still_serves(self):
+        srv = InMemoryFlightServer(wire_codec=CODEC_JSON, coalesce=False,
+                                   cache_encoded=False).serve_tcp()
+        try:
+            batches = make_batches(3)
+            srv.add_dataset("ds", batches)
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            got = c.do_get(info.endpoints[0].ticket).read_all()
+            assert got.num_rows == sum(b.num_rows for b in batches)
+            assert self.server_stats(c)["encode_cache_misses"] == 0
+        finally:
+            srv.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# listener thread reaping
+# ---------------------------------------------------------------------------
+
+
+class TestListenerReap:
+    def test_finished_handlers_are_reaped(self):
+        done = threading.Event()
+
+        def handler(conn):
+            conn.recv_frame()
+
+        lst = SocketListener(handler).start()
+        try:
+            for _ in range(12):
+                s = socket.create_connection((lst.host, lst.port))
+                s.close()
+            # one more connection triggers the reap of the dead dozen
+            deadline = time.time() + 5
+            while time.time() < deadline:
+                s = socket.create_connection((lst.host, lst.port))
+                s.close()
+                time.sleep(0.05)
+                if len(lst._threads) <= 3:
+                    break
+            assert len(lst._threads) <= 3  # not one Thread per connection ever
+        finally:
+            lst.stop()
