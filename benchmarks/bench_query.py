@@ -1,18 +1,27 @@
-"""Fig 8/9: query-to-client time — ODBC vs turbodbc vs Flight columnar.
+"""Fig 8/9: query-to-client time — ODBC vs turbodbc vs Flight columnar,
+plus typed-command pushdown vs full-scan+client-filter over loopback TCP.
 
-NYC-taxi-like table (ints/floats + datetime strings, faithfully painful for
-row protocols), single select query, varying result set size.  Reproduces
-the paper's 20×/30× turbodbc/ODBC gaps.
+Two experiments, both recorded to ``BENCH_query.json`` by run.py:
+
+* **protocol sims** — NYC-taxi-like table (ints/floats + datetime strings,
+  faithfully painful for row protocols), single select query, varying result
+  set size.  Reproduces the paper's 20×/30× turbodbc/ODBC gaps.
+* **pushdown vs full scan** — the same predicated+projected ``QueryPlan``
+  against a 4-shard ``FlightClusterServer`` over real loopback TCP, executed
+  (a) shard-side via ``GetFlightInfo(QueryCommand)`` per-shard endpoints
+  and (b) as a full parallel scan with client-side filtering.  Pushdown
+  ships only surviving columns/rows, so the wire-bytes ratio is the win.
 """
 from __future__ import annotations
 
-from repro.query import QueryPlan, col
+from repro.core.flight import FlightClusterClient, FlightClusterServer
+from repro.query import QueryPlan, col, execute
 from repro.query.odbc_sim import FlightColumnarProtocol, OdbcProtocol, TurbodbcProtocol
 
 from .common import Timing, taxi_batch
 
 
-def run(quick: bool = True) -> list[Timing]:
+def _protocol_sims(quick: bool) -> list[Timing]:
     out: list[Timing] = []
     row_counts = [100_000, 400_000] if quick else [100_000, 1_000_000, 4_000_000]
     plan = QueryPlan("taxi",
@@ -40,6 +49,54 @@ def run(quick: bool = True) -> list[Timing]:
                           last["turbodbc"] / last["flight"] / 1e6, 0,
                           extra={"x": last["turbodbc"] / last["flight"]}))
     return out
+
+
+def _pushdown_vs_fullscan(quick: bool) -> list[Timing]:
+    rows = 50_000 if quick else 250_000
+    n_batches, n_shards = 8, 4
+    batches = [taxi_batch(rows // n_batches, seed=s, with_strings=False)
+               for s in range(n_batches)]
+    plan = QueryPlan("taxi", projection=["fare_amount", "trip_distance"],
+                     predicate=col("trip_distance") > 3.0)
+    cluster = FlightClusterServer(num_shards=n_shards).serve_tcp()
+    out: list[Timing] = []
+    try:
+        cluster.add_dataset("taxi", batches)
+        cc = FlightClusterClient(f"tcp://127.0.0.1:{cluster.port}",
+                                 max_streams=n_shards)
+        # warm both paths (connection setup, encode-once cache build)
+        cc.query(plan)
+        cc.read("taxi")
+
+        best_push, push_stats = float("inf"), None
+        best_scan, scan_rows = float("inf"), 0
+        for _ in range(3):
+            table, st = cc.query(plan)
+            if st.seconds < best_push:
+                best_push, push_stats = st.seconds, (table.num_rows, st.bytes)
+            import time as _time
+            t0 = _time.perf_counter()
+            full, fst = cc.read("taxi")
+            filtered = list(execute(plan, full.batches))
+            dt = _time.perf_counter() - t0
+            if dt < best_scan:
+                best_scan, scan_rows = dt, sum(b.num_rows for b in filtered)
+                scan_bytes = fst.bytes
+        assert push_stats[0] == scan_rows, "pushdown and client filter disagree"
+        out.append(Timing(f"pushdown_{n_shards}shard_{rows}rows", best_push,
+                          push_stats[1], extra={"rows_out": push_stats[0]}))
+        out.append(Timing(f"fullscan_clientfilter_{n_shards}shard_{rows}rows",
+                          best_scan, scan_bytes, extra={"rows_out": scan_rows}))
+        out.append(Timing("pushdown_speedup_vs_fullscan", best_scan / best_push / 1e6, 0,
+                          extra={"x": best_scan / best_push,
+                                 "wire_bytes_ratio": scan_bytes / max(push_stats[1], 1)}))
+    finally:
+        cluster.shutdown()
+    return out
+
+
+def run(quick: bool = True) -> list[Timing]:
+    return _protocol_sims(quick) + _pushdown_vs_fullscan(quick)
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ def main() -> None:
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
-    json_suites = {"cluster", "wire"}  # suites recorded to BENCH_<name>.json
+    json_suites = {"cluster", "wire", "query"}  # suites recorded to BENCH_<name>.json
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

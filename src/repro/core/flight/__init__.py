@@ -1,5 +1,5 @@
 """Arrow-Flight-style RPC: protocol, transports, server, client, scheduler,
-cluster, netsim."""
+cluster, middleware, typed errors, netsim."""
 from .client import FlightClient, FlightExchange, FlightStreamReader  # noqa: F401
 from .cluster import (  # noqa: F401
     FlightClusterClient,
@@ -9,17 +9,39 @@ from .cluster import (  # noqa: F401
     RoundRobinPlacement,
     make_placement,
 )
+from .errors import (  # noqa: F401
+    FlightError,
+    FlightInvalidArgument,
+    FlightNotFound,
+    FlightTimedOut,
+    FlightUnauthenticated,
+    FlightUnavailable,
+    FlightUnavailableError,
+    error_from_wire,
+)
+from .middleware import (  # noqa: F401
+    AuthTokenMiddleware,
+    CallContext,
+    LoggingMiddleware,
+    MetricsMiddleware,
+    MiddlewareStack,
+    ServerMiddleware,
+)
 from .protocol import (  # noqa: F401
     Action,
     ActionResult,
+    CallOptions,
+    Command,
     FlightDescriptor,
     FlightEndpoint,
-    FlightError,
     FlightInfo,
-    FlightUnavailableError,
     Location,
+    QueryCommand,
+    RangeReadCommand,
     ShardSpec,
+    StagedPutCommand,
     Ticket,
+    parse_command,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats  # noqa: F401
 from .server import FlightServerBase, InMemoryFlightServer  # noqa: F401

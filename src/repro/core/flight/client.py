@@ -6,6 +6,14 @@ Two connection modes, chosen by ``Location``:
   ``RecordBatch`` references (zero-copy, models shared memory on one host).
 * ``tcp://host:port`` — framed IPC over a socket (see transport.py).
 
+Every verb accepts a ``CallOptions`` (protocol.py): ``timeout`` turns a
+stalled RPC into a typed ``FlightTimedOut`` (the connection is discarded,
+not pooled — a late reply must never bleed into the next call);
+``wire_codec``/``coalesce`` ask the server to reshape this call's data
+stream; ``headers`` surface to server middleware.  Failures arrive as the
+typed ``FlightError`` hierarchy (``FlightNotFound``, ``FlightUnauthenticated``,
+``FlightUnavailable``, ...) rebuilt from structured error frames.
+
 ``read_all_parallel`` implements the paper's throughput recipe: one worker
 per endpoint, ``max_streams`` concurrent connections (paper Fig 2: scale
 streams up to ~half the cores).  It is a thin wrapper over
@@ -25,11 +33,14 @@ from ..schema import Schema
 from .protocol import (
     Action,
     ActionResult,
+    CallOptions,
     FlightDescriptor,
     FlightError,
     FlightInfo,
-    FlightUnavailableError,
+    FlightTimedOut,
+    FlightUnavailable,
     Location,
+    QueryCommand,
     Ticket,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats
@@ -110,10 +121,12 @@ class FlightStreamWriter:
 
 
 class FlightClient:
-    def __init__(self, target: FlightServerBase | Location | str, token: str | None = None):
+    def __init__(self, target: FlightServerBase | Location | str, token: str | None = None,
+                 options: CallOptions | None = None):
         self._server: FlightServerBase | None = None
         self._addr: tuple[str, int] | None = None
         self.token = token
+        self.options = options  # default CallOptions; per-call ones override
         if isinstance(target, FlightServerBase):
             self._server = target
         else:
@@ -138,58 +151,97 @@ class FlightClient:
             try:
                 return dial(*self._addr)
             except OSError as e:
-                raise FlightUnavailableError(f"dial {self._addr}: {e}") from e
+                raise FlightUnavailable(f"dial {self._addr}: {e}") from e
 
     def _checkin(self, conn: FrameConnection) -> None:
         self._conn_pool.put(conn)
 
-    def _request(self, payload: dict) -> dict:
+    def _options(self, options: CallOptions | None) -> CallOptions | None:
+        return options if options is not None else self.options
+
+    def _prepare(self, payload: dict, conn: FrameConnection,
+                 options: CallOptions | None) -> None:
         payload.setdefault("token", self.token)
+        if options is not None:
+            opt_json = options.to_json()
+            if opt_json:
+                payload["options"] = opt_json
+            if options.timeout is not None:
+                conn.sock.settimeout(options.timeout)
+
+    def _reset_deadline(self, conn: FrameConnection, options: CallOptions | None) -> None:
+        if options is not None and options.timeout is not None:
+            try:
+                conn.sock.settimeout(None)
+            except OSError:
+                pass
+
+    def _timed_out(self, conn: FrameConnection, options: CallOptions | None,
+                   exc: Exception) -> FlightTimedOut:
+        conn.close()  # a late reply must not bleed into the next RPC
+        t = options.timeout if options is not None else None
+        return FlightTimedOut(f"call exceeded {t}s", detail={"timeout": t})
+
+    def _request(self, payload: dict, options: CallOptions | None = None) -> dict:
+        options = self._options(options)
         conn = self._checkout()
         try:
+            self._prepare(payload, conn, options)
             conn.send_ctrl(payload)
             resp = conn.recv_ctrl()
         except FlightError:
             # server declined at the RPC boundary: the channel is still clean
+            self._reset_deadline(conn, options)
             self._checkin(conn)
             raise
+        except TimeoutError as e:
+            raise self._timed_out(conn, options, e) from e
         except (ConnectionError, OSError) as e:
             conn.close()
-            raise FlightUnavailableError(str(e)) from e
+            raise FlightUnavailable(str(e)) from e
+        self._reset_deadline(conn, options)
         self._checkin(conn)
         return resp
 
     # -- control plane ------------------------------------------------------ #
-    def get_flight_info(self, descriptor: FlightDescriptor) -> FlightInfo:
+    def get_flight_info(self, descriptor: FlightDescriptor,
+                        options: CallOptions | None = None) -> FlightInfo:
         if self._server is not None:
             return self._server.get_flight_info_impl(descriptor)
         return FlightInfo.from_json(self._request(
-            {"method": "GetFlightInfo", "descriptor": descriptor.to_json()})["info"])
+            {"method": "GetFlightInfo", "descriptor": descriptor.to_json()}, options)["info"])
 
-    def list_flights(self) -> list[FlightInfo]:
+    def list_flights(self, options: CallOptions | None = None) -> list[FlightInfo]:
         if self._server is not None:
             return self._server.list_flights_impl()
-        return [FlightInfo.from_json(o) for o in self._request({"method": "ListFlights"})["infos"]]
+        return [FlightInfo.from_json(o)
+                for o in self._request({"method": "ListFlights"}, options)["infos"]]
 
-    def do_action(self, action: Action | str) -> list[ActionResult]:
+    def do_action(self, action: Action | str,
+                  options: CallOptions | None = None) -> list[ActionResult]:
         if isinstance(action, str):
             action = Action(action)
         if self._server is not None:
             return self._server.do_action_impl(action)
         return [ActionResult.from_json(o)
-                for o in self._request({"method": "DoAction", "action": action.to_json()})["results"]]
+                for o in self._request(
+                    {"method": "DoAction", "action": action.to_json()}, options)["results"]]
 
     # -- data plane ----------------------------------------------------------- #
-    def do_get(self, ticket: Ticket) -> FlightStreamReader:
+    def do_get(self, ticket: Ticket, options: CallOptions | None = None) -> FlightStreamReader:
+        options = self._options(options)
         if self._server is not None:
             schema, batches = self._server.do_get_impl(ticket)
             return FlightStreamReader(schema, batches)
         conn = self._checkout()
         try:
-            conn.send_ctrl({"method": "DoGet", "ticket": ticket.to_json(), "token": self.token})
+            payload = {"method": "DoGet", "ticket": ticket.to_json()}
+            self._prepare(payload, conn, options)
+            conn.send_ctrl(payload)
             try:
                 conn.recv_ctrl()  # ok / error
             except FlightError:
+                self._reset_deadline(conn, options)
                 self._checkin(conn)  # refused before the stream: channel clean
                 raise
             kind, meta, body = conn.recv_frame()
@@ -197,35 +249,57 @@ class FlightClient:
             if msg.kind != "schema":
                 conn.close()  # mid-stream protocol mismatch: channel dirty
                 raise FlightError("DoGet: expected schema message")
+        except TimeoutError as e:
+            raise self._timed_out(conn, options, e) from e
         except (ConnectionError, OSError) as e:
             conn.close()
-            raise FlightUnavailableError(str(e)) from e
+            raise FlightUnavailable(str(e)) from e
         schema = msg.schema
 
         def gen() -> Iterator[RecordBatch]:
-            while True:
-                k, m, b = conn.recv_frame()
-                dm = decode_message(m, b)
-                if dm.kind == "eos":
-                    return
-                yield dm.batch(schema)
+            try:
+                while True:
+                    k, m, b = conn.recv_frame()
+                    dm = decode_message(m, b)
+                    if dm.kind == "eos":
+                        return
+                    yield dm.batch(schema)
+            except TimeoutError as e:
+                raise self._timed_out(conn, options, e) from e
+            except (ConnectionError, OSError) as e:
+                conn.close()
+                raise FlightUnavailable(str(e)) from e
 
-        return FlightStreamReader(schema, gen(), on_done=lambda: self._checkin(conn))
+        def done() -> None:
+            self._reset_deadline(conn, options)
+            self._checkin(conn)
 
-    def do_put(self, descriptor: FlightDescriptor, schema: Schema) -> FlightStreamWriter:
+        return FlightStreamReader(schema, gen(), on_done=done)
+
+    def do_get_query(self, plan, options: CallOptions | None = None) -> FlightStreamReader:
+        """DoGet a typed ``QueryCommand`` executing ``plan`` server-side."""
+        return self.do_get(Ticket.for_command(QueryCommand.for_plan(plan)), options)
+
+    def do_put(self, descriptor: FlightDescriptor, schema: Schema,
+               options: CallOptions | None = None) -> FlightStreamWriter:
+        options = self._options(options)
         if self._server is not None:
             return FlightStreamWriter(schema, None, self._server, descriptor)
         conn = self._checkout()
         try:
-            conn.send_ctrl(
-                {"method": "DoPut", "descriptor": descriptor.to_json(), "token": self.token})
+            payload = {"method": "DoPut", "descriptor": descriptor.to_json()}
+            self._prepare(payload, conn, options)
+            conn.send_ctrl(payload)
             conn.recv_ctrl()
         except FlightError:
+            self._reset_deadline(conn, options)
             self._checkin(conn)
             raise
+        except TimeoutError as e:
+            raise self._timed_out(conn, options, e) from e
         except (ConnectionError, OSError) as e:
             conn.close()
-            raise FlightUnavailableError(str(e)) from e
+            raise FlightUnavailable(str(e)) from e
         return FlightStreamWriter(schema, conn, None, descriptor)
 
     def do_exchange(self, descriptor: FlightDescriptor, schema: Schema) -> "FlightExchange":
@@ -239,6 +313,7 @@ class FlightClient:
         client_factory=None,
         ordered: bool = True,
         window: int = 4,
+        call_options: CallOptions | None = None,
     ) -> ParallelStreamScheduler:
         """A ParallelStreamScheduler whose primary connection is this client.
 
@@ -254,6 +329,7 @@ class FlightClient:
             hedge_after=hedge_after,
             ordered=ordered,
             window=window,
+            call_options=call_options if call_options is not None else self.options,
         )
 
     def read_all_parallel(
@@ -263,6 +339,7 @@ class FlightClient:
         hedge_after: float | None = None,
         client_factory=None,
         ordered: bool = True,
+        call_options: CallOptions | None = None,
     ) -> tuple[Table, TransferStats]:
         """Pull every endpoint of ``info`` with up to ``max_streams`` parallel
         DoGet streams.  ``hedge_after`` seconds without completion re-issues
@@ -272,6 +349,7 @@ class FlightClient:
         return self.scheduler(
             max_streams=max_streams, hedge_after=hedge_after,
             client_factory=client_factory, ordered=ordered,
+            call_options=call_options,
         ).fetch(info)
 
     def write_parallel(

@@ -35,11 +35,17 @@ from .client import FlightClient
 from .protocol import (
     Action,
     ActionResult,
+    CallOptions,
     FlightDescriptor,
+    FlightEndpoint,
     FlightError,
     FlightInfo,
+    FlightInvalidArgument,
+    FlightNotFound,
     Location,
+    QueryCommand,
     ShardSpec,
+    StagedPutCommand,
     Ticket,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats
@@ -214,7 +220,7 @@ class FlightClusterServer(FlightServerBase):
     def _info_for(self, name: str) -> FlightInfo:
         with self._dlock:
             if name not in self._datasets:
-                raise FlightError(f"no such flight: {name}")
+                raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             schema = self._datasets[name]
         endpoints, records, nbytes = [], 0, 0
         for shard in self.shards:
@@ -243,26 +249,80 @@ class FlightClusterServer(FlightServerBase):
             names = list(self._datasets)
         return [self._info_for(n) for n in names]
 
+    def _plan_query_info(self, cmd: QueryCommand, descriptor: FlightDescriptor) -> FlightInfo:
+        """Plan ``GetFlightInfo(QueryCommand)``: one query endpoint per shard.
+
+        Each endpoint's ticket carries the *same plan* scoped to one shard,
+        so a scheduler-aware client pulls N filtered/projected streams
+        concurrently and every shard executes its slice of the pushdown
+        where the data lives."""
+        if cmd.start != 0 or cmd.stop != -1:
+            # a head-level batch range has no well-defined split across
+            # shard-local batch indices — scope ranges per shard instead
+            raise FlightInvalidArgument(
+                "cluster query planning takes an unranged QueryCommand",
+                detail={"start": cmd.start, "stop": cmd.stop})
+        plan = cmd.plan
+        name = plan.dataset
+        with self._dlock:
+            if name not in self._datasets:
+                raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
+            schema = self._datasets[name]
+        out_schema = schema.select(plan.projection) if plan.projection else schema
+        endpoints = []
+        for i, shard in enumerate(self.shards):
+            if name not in shard._store:
+                continue  # shard never received a slice of this dataset
+            endpoints.append(FlightEndpoint(
+                Ticket.for_command(QueryCommand(cmd.plan_bytes, 0, -1, shard=i)),
+                shard.locations(),
+                app_metadata={"shard": i},
+            ))
+        return FlightInfo(out_schema, descriptor, endpoints,
+                          total_records=-1, total_bytes=-1,
+                          shard_spec=self.placement.spec(self.num_shards))
+
     def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
         if descriptor.path is None:
-            raise FlightError("cluster resolves path descriptors only")
+            cmd = descriptor.parsed_command()
+            if isinstance(cmd, QueryCommand):
+                return self._plan_query_info(cmd, descriptor)
+            raise FlightInvalidArgument(
+                f"cluster plans path or query descriptors, not {type(cmd).__name__}")
         return self._info_for(descriptor.path[0])
 
     def do_get_impl(self, ticket: Ticket):
-        r = ticket.range()
-        sid = r.get("shard")
+        cmd = ticket.command()
+        if isinstance(cmd, StagedPutCommand):
+            raise FlightInvalidArgument("staged-put commands are not redeemable via DoGet")
+        sid = getattr(cmd, "shard", None)
         if sid is not None:
             if not 0 <= sid < self.num_shards:
-                raise FlightError(f"no such shard: {sid}")
+                raise FlightNotFound(f"no such shard: {sid}", detail={"shard": sid})
             return self.shards[sid].do_get_impl(ticket)
-        # shard-less ticket: gather — a range over the shard-ordered concat,
-        # so single-connection legacy clients still read the whole dataset
-        name = r["dataset"]
+        if isinstance(cmd, QueryCommand):
+            # shard-less query ticket: gather every shard's batches and
+            # execute at the head (legacy single-stream clients)
+            from ...query.engine import execute  # lazy import, see protocol.py
+
+            plan = cmd.plan
+            with self._dlock:
+                if plan.dataset not in self._datasets:
+                    raise FlightNotFound(f"no such flight: {plan.dataset}",
+                                         detail={"dataset": plan.dataset})
+                schema = self._datasets[plan.dataset]
+            out_schema = schema.select(plan.projection) if plan.projection else schema
+            stop = cmd.stop if cmd.stop >= 0 else None
+            batches = self.dataset(plan.dataset)[cmd.start : stop]
+            return out_schema, iter(list(execute(plan, batches)))
+        # shard-less range ticket: gather — a range over the shard-ordered
+        # concat, so single-connection legacy clients read the whole dataset
+        name = cmd.dataset
         with self._dlock:
             if name not in self._datasets:
-                raise FlightError(f"no such flight: {name}")
+                raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             schema = self._datasets[name]
-        batches = self.dataset(name)[r["start"]: r["stop"] if r["stop"] >= 0 else None]
+        batches = self.dataset(name)[cmd.start: cmd.stop if cmd.stop >= 0 else None]
         return schema, iter(batches)
 
     def do_put_impl(self, descriptor, schema, batches) -> dict:
@@ -367,10 +427,12 @@ class FlightClusterClient:
         ordered: bool = True,
         window: int = 4,
         hedge_after: float | None = None,
+        call_options: CallOptions | None = None,
     ):
         self.token = token
+        self.call_options = call_options
         self._cluster = target if isinstance(target, FlightClusterServer) else None
-        self.head = FlightClient(target, token=token)
+        self.head = FlightClient(target, token=token, options=call_options)
         self.max_streams = max_streams
         self.ordered = ordered
         self.window = window
@@ -403,6 +465,10 @@ class FlightClusterClient:
             ordered=self.ordered,
             window=self.window,
             hedge_after=self.hedge_after,
+            call_options=self.call_options,
+            # our put targets are the cluster's own shards, whose content-hash
+            # dedup guard makes a retried stream idempotent
+            put_retries=1,
         )
         opts.update(overrides)
         # _factory already resolves every location, so it serves as its own
@@ -419,6 +485,20 @@ class FlightClusterClient:
     def stream(self, name: str, **sched_overrides):
         return self.scheduler(**sched_overrides).stream(self.info(name))
 
+    # -- typed query pushdown ---------------------------------------------- #
+    def query_info(self, plan) -> FlightInfo:
+        """Plan a ``QueryCommand`` at the head: per-shard query endpoints."""
+        return self.head.get_flight_info(FlightDescriptor.for_query(plan))
+
+    def query(self, plan, **sched_overrides) -> tuple[Table, TransferStats]:
+        """Predicated/projected read executed shard-side, fanned in parallel.
+
+        Each shard filters and projects its own slice (see
+        ``FlightClusterServer._plan_query_info``); only surviving
+        columns/rows cross the wire — the paper's Fig 8 pushdown win on top
+        of the Fig 2 parallel-stream topology."""
+        return self.scheduler(**sched_overrides).fetch(self.query_info(plan))
+
     def write(
         self,
         name: str,
@@ -428,11 +508,14 @@ class FlightClusterClient:
         """Partition client-side and DoPut each shard's slice in parallel.
 
         DoPut *appends* (matching ``InMemoryFlightServer``), and the N shard
-        streams commit independently — there is no cross-shard transaction.
-        If one stream fails this raises after the others committed, and
-        retrying re-appends their rows.  For retry-safe ingestion write to a
-        fresh dataset name and swap (or ``drop`` first); transactional DoPut
-        is an open roadmap item."""
+        streams commit independently — there is no cross-shard transaction
+        yet (``StagedPutCommand`` stubs the two-phase protocol).  Transient
+        per-stream failures are retried, and the shards' content-hash dedup
+        guard drops a re-sent payload they already committed, so a failed
+        ``write`` re-issued within the dedup window does not duplicate rows.
+        Note the flip side: intentionally appending a byte-identical payload
+        twice in quick succession is also deduplicated — use
+        ``dedup_puts=False`` shards (or distinct payloads) for that."""
         layout = json.loads(self.head.do_action(Action("shard-locations"))[0].body)
         if placement is None:
             placement = make_placement(layout["scheme"], layout.get("key"))

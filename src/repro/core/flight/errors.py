@@ -1,0 +1,84 @@
+"""Typed Flight errors that round-trip over the wire.
+
+Arrow Flight maps RPC failures onto gRPC status codes; our TCP transport
+does the equivalent with a small registry of ``FlightError`` subclasses.
+A server-side raise is serialized as a structured control frame
+(``{"error": msg, "code": code, "detail": {...}}``) and rehydrated into the
+*same class* client-side, so callers catch ``FlightNotFound`` /
+``FlightTimedOut`` instead of string-matching one ad-hoc ``{"error": ...}``
+dict.  ``detail`` carries machine-readable context (dataset name, timeout
+seconds, shard id) untouched.
+
+Back-compat: ``FlightError`` keeps its historical position as the base
+class (re-exported from ``protocol``), and ``FlightUnavailableError``
+remains as an alias of ``FlightUnavailable``.
+"""
+from __future__ import annotations
+
+_REGISTRY: dict[str, type] = {}
+
+
+class FlightError(RuntimeError):
+    """Base Flight failure.  ``code`` discriminates on the wire."""
+
+    code = "internal"
+
+    def __init__(self, message: str = "", detail: dict | None = None):
+        super().__init__(message)
+        self.detail = dict(detail or {})
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        _REGISTRY.setdefault(cls.code, cls)
+
+    def to_wire(self) -> dict:
+        """Control-frame payload; the peer rebuilds the typed error."""
+        o = {"error": str(self) or self.code, "code": self.code}
+        if self.detail:
+            o["detail"] = self.detail
+        return o
+
+
+class FlightUnauthenticated(FlightError):
+    """Bad or missing credentials — rejected by the auth middleware."""
+
+    code = "unauthenticated"
+
+
+class FlightNotFound(FlightError):
+    """Unknown dataset / flight / shard."""
+
+    code = "not_found"
+
+
+class FlightUnavailable(FlightError):
+    """Endpoint unreachable — callers may fail over to a replica location."""
+
+    code = "unavailable"
+
+
+class FlightTimedOut(FlightError):
+    """A ``CallOptions.timeout`` deadline expired before the RPC finished."""
+
+    code = "timed_out"
+
+
+class FlightInvalidArgument(FlightError):
+    """Malformed command / ticket / request."""
+
+    code = "invalid_argument"
+
+
+# deprecated alias (pre-hierarchy name); keeps old imports and excepts working
+FlightUnavailableError = FlightUnavailable
+
+_REGISTRY.setdefault("internal", FlightError)
+
+
+def error_from_wire(meta: dict) -> FlightError:
+    """Rebuild the typed error a peer serialized with ``to_wire``.
+
+    Unknown codes (newer peer) degrade to the base ``FlightError`` so old
+    clients still fail with the message instead of a decode error."""
+    cls = _REGISTRY.get(meta.get("code", ""), FlightError)
+    return cls(meta.get("error", "remote error"), meta.get("detail"))

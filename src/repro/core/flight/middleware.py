@@ -1,0 +1,136 @@
+"""Server middleware: a composable interception chain around verb dispatch.
+
+Arrow Flight lets servers install middleware that observes/steers every RPC
+(auth, tracing, metrics) without touching handlers; this is our equivalent.
+``FlightServerBase`` runs each incoming RPC through a ``MiddlewareStack``:
+
+* ``on_call(ctx)`` runs front-to-back *before* the verb handler; raising a
+  ``FlightError`` short-circuits the call (later middleware and the handler
+  never run) and the typed error goes back over the wire.
+* ``on_complete(ctx, error)`` runs back-to-front *after* the handler (or the
+  short-circuit) for every middleware whose ``on_call`` was invoked —
+  ``error`` is ``None`` on success.
+
+``CallContext.state`` is a per-call scratch dict middleware can use to pass
+data between its two hooks (e.g. a start timestamp) or to later middleware.
+
+The hard-coded ``_check_auth`` of earlier revisions is now just
+``AuthTokenMiddleware`` installed by the server when ``auth_token`` is set.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .errors import FlightError, FlightUnauthenticated
+
+
+@dataclass
+class CallContext:
+    """What middleware sees about one RPC."""
+
+    method: str                      # verb name: "DoGet", "DoPut", ...
+    headers: dict = field(default_factory=dict)   # token + CallOptions headers
+    request: dict = field(default_factory=dict)   # raw control-frame payload
+    state: dict = field(default_factory=dict)     # per-call middleware scratch
+
+
+class ServerMiddleware:
+    """Override one or both hooks; the defaults are no-ops."""
+
+    def on_call(self, ctx: CallContext) -> None:  # raise FlightError to reject
+        pass
+
+    def on_complete(self, ctx: CallContext, error: Exception | None) -> None:
+        pass
+
+
+class MiddlewareStack:
+    def __init__(self, items: list[ServerMiddleware] | None = None):
+        self.items: list[ServerMiddleware] = list(items or [])
+
+    @contextmanager
+    def wrap(self, ctx: CallContext):
+        """Run the chain around one dispatched verb (see module docstring)."""
+        started: list[ServerMiddleware] = []
+        error: Exception | None = None
+        try:
+            for m in self.items:
+                started.append(m)
+                m.on_call(ctx)
+            yield
+        except Exception as e:
+            error = e
+            raise
+        finally:
+            for m in reversed(started):
+                try:
+                    m.on_complete(ctx, error)
+                except Exception:
+                    pass  # completion hooks never mask the real outcome
+
+
+# --------------------------------------------------------------------------
+# stock middleware
+# --------------------------------------------------------------------------
+
+
+class AuthTokenMiddleware(ServerMiddleware):
+    """Shared-token auth — the typed replacement for ``_check_auth``."""
+
+    def __init__(self, token: str):
+        self.token = token
+
+    def on_call(self, ctx: CallContext) -> None:
+        if ctx.headers.get("token") != self.token:
+            raise FlightUnauthenticated(
+                "bad or missing token", detail={"method": ctx.method}
+            )
+
+
+class MetricsMiddleware(ServerMiddleware):
+    """Per-verb call/error/latency counters (surfaced by ``server-stats``).
+
+    Locked: each TCP connection runs on its own handler thread, so
+    concurrent RPCs hit these read-modify-write updates simultaneously."""
+
+    def __init__(self):
+        self.calls: dict[str, int] = {}
+        self.errors: dict[str, int] = {}
+        self.seconds: dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def on_call(self, ctx: CallContext) -> None:
+        ctx.state["metrics_t0"] = time.perf_counter()
+        with self._lock:
+            self.calls[ctx.method] = self.calls.get(ctx.method, 0) + 1
+
+    def on_complete(self, ctx: CallContext, error: Exception | None) -> None:
+        dt = time.perf_counter() - ctx.state.get("metrics_t0", time.perf_counter())
+        with self._lock:
+            self.seconds[ctx.method] = self.seconds.get(ctx.method, 0.0) + dt
+            if error is not None:
+                self.errors[ctx.method] = self.errors.get(ctx.method, 0) + 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "calls": dict(self.calls),
+                "errors": dict(self.errors),
+                "seconds": {k: round(v, 6) for k, v in self.seconds.items()},
+            }
+
+
+class LoggingMiddleware(ServerMiddleware):
+    """Calls ``log(line)`` per completed RPC; defaults to collecting lines."""
+
+    def __init__(self, log: Callable[[str], None] | None = None):
+        self.lines: list[str] = []
+        self._log = log if log is not None else self.lines.append
+
+    def on_complete(self, ctx: CallContext, error: Exception | None) -> None:
+        status = "ok" if error is None else f"error:{getattr(error, 'code', 'exception')}"
+        self._log(f"{ctx.method} {status}")

@@ -4,18 +4,264 @@ Semantics mirror Arrow Flight RPC: a client asks ``GetFlightInfo(descriptor)``
 and receives a ``FlightInfo`` whose ``endpoints`` carry ``Ticket``s — opaque,
 idempotent handles to streams of RecordBatches, each with one or more
 ``locations`` (replicas).  ``DoGet(ticket)`` pulls a stream; ``DoPut``
-pushes one.  Tickets being *range reads* (dataset, start, stop) is what makes
-parallel streams, resumable loaders, and hedged (straggler-mitigating) reads
-trivial — the property the data plane exploits.
+pushes one.
+
+Since the typed-command redesign, descriptors' ``command`` bytes and
+tickets' ``raw`` bytes carry a **Command** — a versioned, binary-serialized
+control message (magic ``0xC2``, alongside the ``0xB1`` binary IPC codec one
+layer down):
+
+* ``RangeReadCommand`` — the idempotent ``(dataset, start, stop[, shard])``
+  range read that makes parallel streams, resume, and hedged reads trivial;
+* ``QueryCommand``      — a ``QueryPlan`` (predicate/projection pushdown)
+  plus an optional batch range and shard, so query execution composes with
+  the sharded-cluster and parallel-stream machinery;
+* ``StagedPutCommand``  — stub for the two-phase (stage + commit) cluster
+  DoPut on the roadmap.
+
+``parse_command`` also accepts the two legacy JSON encodings (range-ticket
+dicts and bare ``QueryPlan`` JSON) so pre-redesign tickets keep redeeming;
+``Ticket.range()`` remains as a deprecated dict view over the parsed
+command.
+
+``CallOptions`` is the per-call knob bundle (timeout, wire codec, frame
+coalescing, read window) that clients propagate with each RPC instead of
+freezing behavior at server construction.
 """
 from __future__ import annotations
 
 import json
+import struct
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Union
 
 from ..schema import Schema
+from .errors import (  # noqa: F401  (re-exported: historical home of the errors)
+    FlightError,
+    FlightInvalidArgument,
+    FlightNotFound,
+    FlightTimedOut,
+    FlightUnauthenticated,
+    FlightUnavailable,
+    FlightUnavailableError,
+    error_from_wire,
+)
 
+# ---------------------------------------------------------------------------
+# typed commands
+# ---------------------------------------------------------------------------
+
+COMMAND_MAGIC = 0xC2  # first byte of every binary command (JSON starts with '{')
+COMMAND_VERSION = 1
+
+_CMD_RANGE, _CMD_QUERY, _CMD_STAGED_PUT = 1, 2, 3
+_HEAD = struct.Struct("<BBB")        # magic, version, type
+_U16, _U32 = struct.Struct("<H"), struct.Struct("<I")
+_RANGE_TAIL = struct.Struct("<qqi")  # start, stop, shard (-1 = none)
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode()
+    return _U16.pack(len(b)) + b
+
+
+def _unpack_str(raw: bytes, pos: int) -> tuple[str, int]:
+    (n,) = _U16.unpack_from(raw, pos)
+    pos += _U16.size
+    if pos + n > len(raw):  # slicing would silently truncate the string
+        raise FlightInvalidArgument("truncated command: string runs past buffer")
+    return raw[pos : pos + n].decode(), pos + n
+
+
+@dataclass(frozen=True)
+class RangeReadCommand:
+    """Idempotent batch-range read — the workhorse DoGet ticket."""
+
+    dataset: str
+    start: int
+    stop: int                      # exclusive; -1 = to end
+    shard: int | None = None
+    extra: tuple = ()              # legacy JSON extras, kept for the shim
+
+    def to_bytes(self) -> bytes:
+        if self.extra:  # extras have no binary slot: stay on the JSON shim
+            return json.dumps(self.to_dict()).encode()
+        return (
+            _HEAD.pack(COMMAND_MAGIC, COMMAND_VERSION, _CMD_RANGE)
+            + _pack_str(self.dataset)
+            + _RANGE_TAIL.pack(self.start, self.stop, -1 if self.shard is None else self.shard)
+        )
+
+    def to_dict(self) -> dict:
+        o = {"dataset": self.dataset, "start": self.start, "stop": self.stop}
+        if self.shard is not None:
+            o["shard"] = self.shard
+        o.update(dict(self.extra))
+        return o
+
+
+@dataclass(frozen=True)
+class QueryCommand:
+    """A serialized ``QueryPlan`` + optional batch range/shard scope.
+
+    ``plan_bytes`` is ``QueryPlan.serialize()`` output; the ``plan`` property
+    decodes lazily so this module never imports the query engine at import
+    time (the engine imports Flight for its service layer)."""
+
+    plan_bytes: bytes
+    start: int = 0
+    stop: int = -1                 # -1 = all stored batches
+    shard: int | None = None
+
+    @classmethod
+    def for_plan(cls, plan, start: int = 0, stop: int = -1,
+                 shard: int | None = None) -> "QueryCommand":
+        return cls(plan.serialize(), start, stop, shard)
+
+    @property
+    def plan(self):
+        from ...query.engine import QueryPlan  # lazy: avoids an import cycle
+
+        return QueryPlan.deserialize(self.plan_bytes)
+
+    def to_bytes(self) -> bytes:
+        return (
+            _HEAD.pack(COMMAND_MAGIC, COMMAND_VERSION, _CMD_QUERY)
+            + _RANGE_TAIL.pack(self.start, self.stop, -1 if self.shard is None else self.shard)
+            + _U32.pack(len(self.plan_bytes))
+            + self.plan_bytes
+        )
+
+    def to_dict(self) -> dict:
+        o = {
+            "dataset": self.plan.dataset,
+            "start": self.start,
+            "stop": self.stop,
+            "plan": self.plan_bytes.decode(),
+        }
+        if self.shard is not None:
+            o["shard"] = self.shard
+        return o
+
+
+@dataclass(frozen=True)
+class StagedPutCommand:
+    """Two-phase cluster DoPut control message (stub — see ROADMAP).
+
+    ``phase`` is ``"stage"`` or ``"commit"``.  Serialization is pinned now so
+    the transactional put can land without another wire-format version."""
+
+    dataset: str
+    txn_id: str
+    phase: str = "stage"
+
+    def to_bytes(self) -> bytes:
+        return (
+            _HEAD.pack(COMMAND_MAGIC, COMMAND_VERSION, _CMD_STAGED_PUT)
+            + _pack_str(self.dataset)
+            + _pack_str(self.txn_id)
+            + bytes([0 if self.phase == "stage" else 1])
+        )
+
+    def to_dict(self) -> dict:
+        return {"dataset": self.dataset, "txn_id": self.txn_id, "phase": self.phase}
+
+
+Command = Union[RangeReadCommand, QueryCommand, StagedPutCommand]
+
+
+def parse_command(raw: bytes) -> Command:
+    """Decode binary commands; fall back to the two legacy JSON encodings."""
+    if not raw:
+        raise FlightInvalidArgument("empty command")
+    if raw[0] == COMMAND_MAGIC:
+        try:
+            magic, version, kind = _HEAD.unpack_from(raw, 0)
+            if version != COMMAND_VERSION:
+                raise FlightInvalidArgument(
+                    f"unsupported command version {version}",
+                    detail={"version": version, "supported": COMMAND_VERSION},
+                )
+            pos = _HEAD.size
+            if kind == _CMD_RANGE:
+                dataset, pos = _unpack_str(raw, pos)
+                start, stop, shard = _RANGE_TAIL.unpack_from(raw, pos)
+                return RangeReadCommand(dataset, start, stop, None if shard < 0 else shard)
+            if kind == _CMD_QUERY:
+                start, stop, shard = _RANGE_TAIL.unpack_from(raw, pos)
+                pos += _RANGE_TAIL.size
+                (n,) = _U32.unpack_from(raw, pos)
+                pos += _U32.size
+                if pos + n > len(raw):
+                    raise FlightInvalidArgument("truncated command: plan runs past buffer")
+                return QueryCommand(raw[pos : pos + n], start, stop,
+                                    None if shard < 0 else shard)
+            if kind == _CMD_STAGED_PUT:
+                dataset, pos = _unpack_str(raw, pos)
+                txn_id, pos = _unpack_str(raw, pos)
+                return StagedPutCommand(dataset, txn_id,
+                                        "stage" if raw[pos] == 0 else "commit")
+            raise FlightInvalidArgument(f"unknown command type {kind}", detail={"type": kind})
+        except (struct.error, IndexError, UnicodeDecodeError) as e:
+            # truncated/garbled binary must surface as a typed refusal, not
+            # an unhandled exception killing the server's handler thread
+            raise FlightInvalidArgument(f"malformed binary command: {e}") from e
+    try:
+        o = json.loads(raw.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise FlightInvalidArgument(f"unparseable command: {e}") from e
+    if not isinstance(o, dict) or "dataset" not in o:
+        raise FlightInvalidArgument("command JSON must name a dataset")
+    if "start" in o and "stop" in o:  # legacy range-ticket dict
+        if "plan" in o:
+            return QueryCommand(o["plan"].encode(), o["start"], o["stop"], o.get("shard"))
+        extra = tuple(sorted(
+            (k, v) for k, v in o.items()
+            if k not in ("dataset", "start", "stop", "shard")
+        ))
+        return RangeReadCommand(o["dataset"], o["start"], o["stop"], o.get("shard"), extra)
+    # bare QueryPlan JSON (pre-redesign FlightDescriptor.for_command payload)
+    return QueryCommand(raw)
+
+
+# ---------------------------------------------------------------------------
+# per-call options
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CallOptions:
+    """Per-RPC knobs, propagated with the call instead of frozen server-side.
+
+    * ``timeout``     — seconds before the client abandons the RPC with a
+      ``FlightTimedOut`` (TCP transport only; in-proc calls cannot be
+      interrupted).
+    * ``wire_codec``  — IPC metadata codec for this call's data stream
+      ("binary"/"json"); the server re-encodes instead of using its default.
+    * ``coalesce``    — override the server's frame-coalescing choice.
+    * ``read_window`` — per-stream backpressure window for scheduler reads.
+    * ``headers``     — opaque key/values surfaced to server middleware.
+    """
+
+    timeout: float | None = None
+    wire_codec: str | None = None
+    coalesce: bool | None = None
+    read_window: int | None = None
+    headers: dict | None = None
+
+    def to_json(self) -> dict:
+        o: dict = {}
+        if self.wire_codec is not None:
+            o["wire_codec"] = self.wire_codec
+        if self.coalesce is not None:
+            o["coalesce"] = self.coalesce
+        if self.headers:
+            o["headers"] = dict(self.headers)
+        return o
+
+
+# ---------------------------------------------------------------------------
+# descriptors / tickets / endpoints
 # ---------------------------------------------------------------------------
 
 
@@ -31,16 +277,28 @@ class FlightDescriptor:
         return cls(path=tuple(path))
 
     @classmethod
-    def for_command(cls, command: bytes | str) -> "FlightDescriptor":
-        if isinstance(command, str):
+    def for_command(cls, command: "bytes | str | Command") -> "FlightDescriptor":
+        if hasattr(command, "to_bytes"):
+            command = command.to_bytes()
+        elif isinstance(command, str):
             command = command.encode()
         return cls(command=command)
+
+    @classmethod
+    def for_query(cls, plan, start: int = 0, stop: int = -1) -> "FlightDescriptor":
+        """Descriptor carrying a typed ``QueryCommand`` for ``plan``."""
+        return cls.for_command(QueryCommand.for_plan(plan, start, stop))
+
+    def parsed_command(self) -> Command:
+        if self.command is None:
+            raise FlightInvalidArgument("descriptor carries no command")
+        return parse_command(self.command)
 
     @property
     def key(self) -> str:
         if self.path is not None:
             return "path:" + "/".join(self.path)
-        return "cmd:" + (self.command or b"").decode("utf-8", "replace")
+        return "cmd:" + (self.command or b"").decode("latin1")
 
     def to_json(self) -> dict:
         return {
@@ -58,16 +316,30 @@ class FlightDescriptor:
 
 @dataclass(frozen=True)
 class Ticket:
-    """Opaque stream handle.  We structure ours as an idempotent range read."""
+    """Opaque stream handle — the bytes of a serialized ``Command``."""
 
     raw: bytes
 
     @classmethod
+    def for_command(cls, cmd: Command) -> "Ticket":
+        return cls(cmd.to_bytes())
+
+    @classmethod
     def for_range(cls, dataset: str, start: int, stop: int, **extra: Any) -> "Ticket":
-        return cls(json.dumps({"dataset": dataset, "start": start, "stop": stop, **extra}).encode())
+        shard = extra.pop("shard", None)
+        if "plan" in extra and not extra.keys() - {"plan"}:
+            return cls(QueryCommand(extra["plan"].encode(), start, stop, shard).to_bytes())
+        return cls(
+            RangeReadCommand(dataset, start, stop, shard,
+                             tuple(sorted(extra.items()))).to_bytes()
+        )
+
+    def command(self) -> Command:
+        return parse_command(self.raw)
 
     def range(self) -> dict:
-        return json.loads(self.raw.decode())
+        """Deprecated dict view of the command (pre-redesign ticket API)."""
+        return self.command().to_dict()
 
     def to_json(self) -> dict:
         return {"raw": self.raw.decode("latin1")}
@@ -194,11 +466,3 @@ class ActionResult:
     @classmethod
     def from_json(cls, o: dict) -> "ActionResult":
         return cls(o["body"].encode("latin1"))
-
-
-class FlightError(RuntimeError):
-    pass
-
-
-class FlightUnavailableError(FlightError):
-    """Endpoint unreachable — callers may fail over to a replica location."""

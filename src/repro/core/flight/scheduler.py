@@ -27,6 +27,7 @@ works, supplied through ``client_factory(location) -> client``.
 """
 from __future__ import annotations
 
+import inspect
 import queue
 import threading
 import time
@@ -37,10 +38,13 @@ from typing import Callable, Iterator
 from ..recordbatch import RecordBatch, Table
 from ..schema import Schema
 from .protocol import (
+    CallOptions,
     FlightDescriptor,
     FlightEndpoint,
     FlightError,
     FlightInfo,
+    FlightTimedOut,
+    FlightUnavailable,
     FlightUnavailableError,
     Location,
 )
@@ -82,18 +86,49 @@ class ParallelStreamScheduler:
         window: int = 4,
         hedge_after: float | None = None,
         hedge_factory: Callable[[Location], object] | None = None,
+        call_options: CallOptions | None = None,
+        put_retries: int = 0,
     ):
         self._factory = client_factory
         self._hedge_factory = hedge_factory
         self.max_streams = max(1, max_streams)
         self.ordered = ordered
+        self.call_options = call_options
+        if call_options is not None and call_options.read_window is not None:
+            window = call_options.read_window
         self.window = max(1, window)
         self.hedge_after = hedge_after
+        self.put_retries = max(0, put_retries)
         self._clients: dict[str, object] = {}
         self._client_lock = threading.Lock()
         self._stat_lock = threading.Lock()
+        self._options_support: dict[type, bool] = {}
         self.retries = 0
         self.hedges = 0
+
+    def _takes_options(self, client) -> bool:
+        """Signature probe, cached per client type — never wraps the live
+        call in ``except TypeError`` (that would mask real bugs and re-issue
+        the RPC on an abandoned connection)."""
+        key = type(client)
+        cached = self._options_support.get(key)
+        if cached is None:
+            try:
+                params = inspect.signature(client.do_get).parameters
+                cached = "options" in params or any(
+                    p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+                )
+            except (TypeError, ValueError):
+                cached = False
+            self._options_support[key] = cached
+        return cached
+
+    def _do_get(self, client, ticket):
+        """Issue DoGet, forwarding CallOptions when the client understands
+        them (the scheduler's client contract is only ``do_get(ticket)``)."""
+        if self.call_options is not None and self._takes_options(client):
+            return client.do_get(ticket, options=self.call_options)
+        return client.do_get(ticket)
 
     def _bump(self, counter: str, n: int = 1) -> None:
         with self._stat_lock:
@@ -137,7 +172,7 @@ class ParallelStreamScheduler:
                 self._bump("retries")
             attempted = True
             try:
-                reader = client.do_get(ep.ticket)
+                reader = self._do_get(client, ep.ticket)
                 seen = 0
                 for b in reader:
                     seen += 1
@@ -160,7 +195,7 @@ class ParallelStreamScheduler:
         winner: list[list[RecordBatch]] = []
 
         def attempt(client) -> list[RecordBatch]:
-            return list(client.do_get(ep.ticket))
+            return list(self._do_get(client, ep.ticket))
 
         primary_client = None
         primary_loc: Location | None = None
@@ -308,13 +343,20 @@ class ParallelStreamScheduler:
         schema: Schema,
         assignments: list[tuple[Location | None, list[RecordBatch]]],
     ) -> TransferStats:
-        """Write each (location, batches) shard on its own DoPut stream."""
+        """Write each (location, batches) shard on its own DoPut stream.
+
+        Transient failures (``FlightUnavailable``, ``FlightTimedOut``, socket
+        errors) are retried up to ``put_retries`` times per stream.  A retry
+        may re-send a payload the server already committed, so retries
+        default to 0: only enable them against servers with the content-hash
+        dedup guard (``InMemoryFlightServer.dedup_puts``), which drops the
+        duplicate and makes the retry idempotent."""
         assignments = [(loc, bs) for loc, bs in assignments if bs]
         if not assignments:
             return TransferStats(streams=0)
         t0 = time.perf_counter()
 
-        def write(loc: Location | None, shard: list[RecordBatch]) -> None:
+        def write_once(loc: Location | None, shard: list[RecordBatch]) -> None:
             w = self._client(loc).do_put(descriptor, schema)
             # the scheduler's writer contract is write_batch/close (see module
             # docstring: any client works); write_batches is an optional
@@ -326,6 +368,16 @@ class ParallelStreamScheduler:
                 for b in shard:
                     w.write_batch(b)
             w.close()
+
+        def write(loc: Location | None, shard: list[RecordBatch]) -> None:
+            for attempt in range(self.put_retries + 1):
+                try:
+                    write_once(loc, shard)
+                    return
+                except (FlightUnavailable, FlightTimedOut, ConnectionError, OSError):
+                    if attempt == self.put_retries:
+                        raise
+                    self._bump("retries")
 
         with ThreadPoolExecutor(
             max_workers=min(self.max_streams, len(assignments)),

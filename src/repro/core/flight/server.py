@@ -5,47 +5,87 @@ DoGet, DoPut, DoAction, DoExchange) against abstract handlers; it can be
 used in-process (zero-copy object handoff) or served over TCP via
 ``serve_tcp`` (thread per connection, streaming IPC frames).
 
+Every RPC is dispatched through a **middleware stack** (see middleware.py):
+auth is just ``AuthTokenMiddleware`` (installed automatically when
+``auth_token`` is set), a ``MetricsMiddleware`` counts per-verb calls/errors
+/latency (surfaced via ``server-stats``), and servers can prepend their own
+interceptors.  Failures raise the typed ``FlightError`` hierarchy
+(errors.py) and round-trip to clients as structured control frames.
+
 ``InMemoryFlightServer`` is the paper's "simple data producer with an
 InMemoryStore" (§4.2.2) — datasets are lists of RecordBatches keyed by
-descriptor path; tickets are idempotent (dataset, start, stop) range reads,
-so any batch range can be re-fetched (hedged reads / resume).
+descriptor path.  Tickets carry typed ``Command``s (protocol.py):
+
+* ``RangeReadCommand`` — idempotent (dataset, start, stop) range reads, so
+  any batch range can be re-fetched (hedged reads / resume);
+* ``QueryCommand`` — executed **natively** via ``query.engine.execute``
+  (predicate/projection/limit pushdown), no ``do_get_impl`` monkeypatching.
+  Pass-through queries (no predicate, full projection, no limit) serve from
+  the encode-once cache like plain range reads; filtered queries encode
+  per-request and never poison the cache.
 
 Data-plane fast paths (the wire-speed work):
 
-* **encode-once cache** — ``InMemoryFlightServer`` pre-encodes each stored
-  dataset to ``EncodedMessage``s on first DoGet and serves every later DoGet
-  from the cache (zero ``encode_batch`` calls — asserted via the
-  ``server-stats`` action counters).  The cache is invalidated on DoPut /
-  ``add_dataset`` / ``drop``, and bypassed whenever ``do_get_impl`` is
-  overridden (query pushdown, paced shards, test monkeypatches) so
-  behavior-modifying subclasses keep their semantics.
+* **encode-once cache** — datasets are pre-encoded to ``EncodedMessage``s on
+  first DoGet and every later DoGet serves from the cache (zero
+  ``encode_batch`` calls — asserted via the ``server-stats`` counters).  The
+  cache is invalidated on DoPut / ``add_dataset`` / ``drop``, and bypassed
+  whenever ``do_get_impl`` is overridden (paced shards, test monkeypatches)
+  so behavior-modifying subclasses keep their semantics.
 * **frame coalescing** — DoGet streams go out via
   ``FrameConnection.send_data_many`` (many frames per ``sendmsg``) unless
-  ``coalesce=False``.
+  disabled; ``CallOptions.coalesce`` overrides per call.
 * ``wire_codec`` selects the IPC metadata codec (binary default; json kept
-  for comparison benchmarks).
+  for comparison benchmarks); ``CallOptions.wire_codec`` overrides per call
+  (bypassing the cache, which holds server-codec messages).
+* **DoPut dedup guard** — recently committed put payloads are content-hashed
+  per dataset; an identical re-append within the window (a retried parallel
+  put after partial failure) is dropped instead of duplicating rows.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import threading
+from collections import OrderedDict
 from itertools import chain
-from typing import Callable, Iterable, Iterator
+from typing import Iterable, Iterator
 
-from ..ipc import DEFAULT_CODEC, EncodedMessage, decode_message, encode_batch, encode_eos, encode_schema
+from ..ipc import (
+    CODEC_BINARY,
+    CODEC_JSON,
+    DEFAULT_CODEC,
+    EncodedMessage,
+    decode_message,
+    encode_batch,
+    encode_eos,
+    encode_schema,
+)
 from ..recordbatch import RecordBatch
 from ..schema import Schema
+from .errors import FlightError, FlightInvalidArgument, FlightNotFound, FlightUnauthenticated
+from .middleware import (
+    AuthTokenMiddleware,
+    CallContext,
+    MetricsMiddleware,
+    MiddlewareStack,
+    ServerMiddleware,
+)
 from .protocol import (
     Action,
     ActionResult,
     FlightDescriptor,
     FlightEndpoint,
-    FlightError,
     FlightInfo,
     Location,
+    QueryCommand,
+    RangeReadCommand,
+    StagedPutCommand,
     Ticket,
 )
 from .transport import KIND_CTRL, KIND_DATA, FrameConnection, SocketListener
+
+_PUT_DEDUP_WINDOW = 32  # recent content hashes remembered per dataset
 
 
 class FlightServerBase:
@@ -58,6 +98,7 @@ class FlightServerBase:
         *,
         wire_codec: str = DEFAULT_CODEC,
         coalesce: bool = True,
+        middleware: Iterable[ServerMiddleware] | None = None,
     ):
         self.location_name = location_name
         self.auth_token = auth_token
@@ -65,6 +106,13 @@ class FlightServerBase:
         self.coalesce = coalesce
         self.encode_calls = 0  # encode_batch invocations on the DoGet path
         self._listener: SocketListener | None = None
+        stack: list[ServerMiddleware] = list(middleware or [])
+        if auth_token is not None and not any(
+            isinstance(m, AuthTokenMiddleware) for m in stack
+        ):
+            stack.insert(0, AuthTokenMiddleware(auth_token))
+        self.metrics = MetricsMiddleware()  # first: counts rejected calls too
+        self.middleware = MiddlewareStack([self.metrics, *stack])
 
     # -- handlers to override ------------------------------------------- #
     def list_flights_impl(self) -> list[FlightInfo]:
@@ -123,8 +171,15 @@ class FlightServerBase:
 
     # -- dispatch ---------------------------------------------------------- #
     def _check_auth(self, req: dict) -> None:
+        """Deprecated — auth now runs as ``AuthTokenMiddleware``."""
         if self.auth_token is not None and req.get("token") != self.auth_token:
-            raise FlightError("unauthenticated: bad or missing token")
+            raise FlightUnauthenticated("bad or missing token")
+
+    def _call_context(self, method: str, req: dict) -> CallContext:
+        opts = req.get("options") or {}
+        headers = {"token": req.get("token")}
+        headers.update(opts.get("headers") or {})
+        return CallContext(method=method, headers=headers, request=req)
 
     def _handle_connection(self, conn: FrameConnection) -> None:
         """One connection = a sequence of RPCs (like an HTTP/2 channel)."""
@@ -136,44 +191,56 @@ class FlightServerBase:
             if kind != KIND_CTRL:
                 raise FlightError("expected control frame opening an RPC")
             method = req.get("method")
+            opts = req.get("options") or {}
             try:
-                self._check_auth(req)
-                if method == "GetFlightInfo":
-                    info = self.get_flight_info_impl(FlightDescriptor.from_json(req["descriptor"]))
-                    conn.send_ctrl({"info": info.to_json()})
-                elif method == "ListFlights":
-                    infos = self.list_flights_impl()
-                    conn.send_ctrl({"infos": [i.to_json() for i in infos]})
-                elif method == "DoAction":
-                    results = self.do_action_impl(Action.from_json(req["action"]))
-                    conn.send_ctrl({"results": [r.to_json() for r in results]})
-                elif method == "DoGet":
-                    self._serve_do_get(conn, Ticket.from_json(req["ticket"]))
-                elif method == "DoPut":
-                    self._serve_do_put(conn, FlightDescriptor.from_json(req["descriptor"]))
-                elif method == "DoExchange":
-                    self._serve_do_exchange(conn, FlightDescriptor.from_json(req["descriptor"]))
-                elif method == "Handshake":
-                    conn.send_ctrl({"ok": True})
-                else:
-                    raise FlightError(f"unknown method {method!r}")
+                with self.middleware.wrap(self._call_context(method or "?", req)):
+                    if method == "GetFlightInfo":
+                        info = self.get_flight_info_impl(
+                            FlightDescriptor.from_json(req["descriptor"]))
+                        conn.send_ctrl({"info": info.to_json()})
+                    elif method == "ListFlights":
+                        infos = self.list_flights_impl()
+                        conn.send_ctrl({"infos": [i.to_json() for i in infos]})
+                    elif method == "DoAction":
+                        results = self.do_action_impl(Action.from_json(req["action"]))
+                        conn.send_ctrl({"results": [r.to_json() for r in results]})
+                    elif method == "DoGet":
+                        self._serve_do_get(conn, Ticket.from_json(req["ticket"]), opts)
+                    elif method == "DoPut":
+                        self._serve_do_put(conn, FlightDescriptor.from_json(req["descriptor"]))
+                    elif method == "DoExchange":
+                        self._serve_do_exchange(conn, FlightDescriptor.from_json(req["descriptor"]))
+                    elif method == "Handshake":
+                        conn.send_ctrl({"ok": True})
+                    else:
+                        raise FlightInvalidArgument(f"unknown method {method!r}")
             except FlightError as e:
-                conn.send_ctrl({"error": str(e)})
+                conn.send_ctrl(e.to_wire())
 
-    def _send_stream(self, conn: FrameConnection, msgs: Iterable[EncodedMessage]) -> None:
-        if self.coalesce:
+    def _send_stream(
+        self, conn: FrameConnection, msgs: Iterable[EncodedMessage], coalesce: bool | None = None
+    ) -> None:
+        if self.coalesce if coalesce is None else coalesce:
             conn.send_data_many(msgs)
         else:
             for m in msgs:
                 conn.send_data(m)
 
-    def _serve_do_get(self, conn: FrameConnection, ticket: Ticket) -> None:
-        pre = self.do_get_encoded(ticket)
+    def _serve_do_get(self, conn: FrameConnection, ticket: Ticket, opts: dict | None = None) -> None:
+        opts = opts or {}
+        codec = opts.get("wire_codec") or self.wire_codec
+        if codec not in (CODEC_BINARY, CODEC_JSON):
+            # reject before the ok frame: an unknown codec must be a typed
+            # refusal, not a ValueError killing the handler mid-stream
+            raise FlightInvalidArgument(f"unknown wire codec {codec!r}",
+                                        detail={"wire_codec": codec})
+        coalesce = opts.get("coalesce")
+        pre = self.do_get_encoded(ticket) if codec == self.wire_codec else None
         if pre is not None:  # encode-once cache: no per-request encoding
             schema_msg, batch_msgs = pre
             conn.send_ctrl({"ok": True})
             self._send_stream(
-                conn, chain((schema_msg,), batch_msgs, (encode_eos(self.wire_codec),))
+                conn, chain((schema_msg,), batch_msgs, (encode_eos(codec),)), coalesce
             )
             return
         schema, batches = self.do_get_impl(ticket)
@@ -183,10 +250,10 @@ class FlightServerBase:
             yield encode_schema(schema)
             for b in batches:
                 self.encode_calls += 1
-                yield encode_batch(b, self.wire_codec)
-            yield encode_eos(self.wire_codec)
+                yield encode_batch(b, codec)
+            yield encode_eos(codec)
 
-        self._send_stream(conn, frames())
+        self._send_stream(conn, frames(), coalesce)
 
     def _recv_stream(self, conn: FrameConnection) -> tuple[Schema, Iterator[RecordBatch]]:
         kind, meta, body = conn.recv_frame()
@@ -236,6 +303,20 @@ class FlightServerBase:
             conn.send_data(encode_batch(out, self.wire_codec))
 
 
+def _content_digest(schema: Schema, batches: list[RecordBatch]) -> str:
+    """Stable content hash of a put payload (dedup key for retried puts).
+
+    Hashes the IPC frame *views* (metadata + zero-copy buffer slices) rather
+    than materializing each message, so the cost is one pass over the bytes
+    with no per-batch body copy."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(json.dumps(schema.to_json(), sort_keys=True).encode())
+    for b in batches:
+        for part in encode_batch(b).frame_parts():
+            h.update(part)
+    return h.hexdigest()
+
+
 class InMemoryFlightServer(FlightServerBase):
     """Dataset store: descriptor path[0] -> list[RecordBatch]."""
 
@@ -249,13 +330,18 @@ class InMemoryFlightServer(FlightServerBase):
         wire_codec: str = DEFAULT_CODEC,
         coalesce: bool = True,
         cache_encoded: bool = True,
+        endpoints_per_query: int = 4,
+        dedup_puts: bool = True,
+        middleware: Iterable[ServerMiddleware] | None = None,
     ):
-        super().__init__(location_name, auth_token, wire_codec=wire_codec, coalesce=coalesce)
+        super().__init__(location_name, auth_token, wire_codec=wire_codec,
+                         coalesce=coalesce, middleware=middleware)
         self._store: dict[str, list[RecordBatch]] = {}
         self._schemas: dict[str, Schema] = {}
         self._lock = threading.Lock()
         self.batches_per_endpoint = batches_per_endpoint  # 0 = single endpoint
         self.shard_id = shard_id  # set by cluster.py: stamped into tickets
+        self.endpoints_per_query = endpoints_per_query  # GetFlightInfo(QueryCommand) fan-out
         # encode-once cache: dataset -> (schema msg, per-batch msgs), built on
         # first DoGet, invalidated whenever the dataset changes
         self.cache_encoded = cache_encoded
@@ -263,6 +349,14 @@ class InMemoryFlightServer(FlightServerBase):
         self._versions: dict[str, int] = {}  # bumped on every dataset mutation
         self.cache_hits = 0
         self.cache_misses = 0
+        # query pushdown counters (per-shard evidence that filtering ran here)
+        self.queries_executed = 0
+        self.query_rows_in = 0
+        self.query_rows_out = 0
+        # DoPut dedup guard: dataset -> recent payload content hashes
+        self.dedup_puts = dedup_puts
+        self._recent_puts: dict[str, OrderedDict[str, dict]] = {}
+        self.put_dedup_hits = 0
 
     # -- direct (in-proc) API ------------------------------------------- #
     def add_dataset(
@@ -275,6 +369,7 @@ class InMemoryFlightServer(FlightServerBase):
             self._store[name] = list(batches)
             self._schemas[name] = schema
             self._encoded.pop(name, None)
+            self._recent_puts.pop(name, None)
             self._versions[name] = self._versions.get(name, 0) + 1
 
     def dataset(self, name: str) -> list[RecordBatch]:
@@ -302,49 +397,124 @@ class InMemoryFlightServer(FlightServerBase):
             total_bytes=sum(b.nbytes() for b in batches),
         )
 
+    def _plan_query_info(self, cmd: QueryCommand, descriptor: FlightDescriptor) -> FlightInfo:
+        """Plan ``GetFlightInfo(QueryCommand)``: per-range query endpoints.
+
+        The command's own ``[start, stop)`` scope (if any) bounds the planned
+        ranges, so a ranged query descriptor only ever touches its slice."""
+        plan = cmd.plan
+        with self._lock:
+            if plan.dataset not in self._store:
+                raise FlightNotFound(f"no such dataset: {plan.dataset}",
+                                     detail={"dataset": plan.dataset})
+            n = len(self._store[plan.dataset])
+            schema = self._schemas[plan.dataset]
+        out_schema = schema.select(plan.projection) if plan.projection else schema
+        lo = min(max(cmd.start, 0), n)
+        hi = n if cmd.stop < 0 else min(cmd.stop, n)
+        span = max(hi - lo, 0)
+        per = max(1, -(-span // self.endpoints_per_query))
+        extra = {} if self.shard_id is None else {"shard": self.shard_id}
+        endpoints = [
+            FlightEndpoint(
+                Ticket.for_command(
+                    QueryCommand(cmd.plan_bytes, i, min(i + per, hi), self.shard_id)),
+                self.locations(),
+                app_metadata=extra or None,
+            )
+            for i in range(lo, max(hi, lo + 1), per)
+        ]
+        return FlightInfo(out_schema, descriptor, endpoints,
+                          total_records=-1, total_bytes=-1)
+
     def list_flights_impl(self) -> list[FlightInfo]:
         with self._lock:
             return [self._info_for(name) for name in self._store]
 
     def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
         if descriptor.path is None:
-            raise FlightError("in-memory store resolves path descriptors only")
+            cmd = descriptor.parsed_command()
+            if isinstance(cmd, QueryCommand):
+                return self._plan_query_info(cmd, descriptor)
+            raise FlightInvalidArgument(
+                f"in-memory store plans path or query descriptors, not "
+                f"{type(cmd).__name__}")
         name = descriptor.path[0]
         with self._lock:
             if name not in self._store:
-                raise FlightError(f"no such flight: {name}")
+                raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             return self._info_for(name)
 
+    def _execute_query(self, cmd: QueryCommand) -> tuple[Schema, Iterator[RecordBatch]]:
+        """Native QueryCommand execution: filter/project where the data lives."""
+        from ...query.engine import execute  # lazy: engine imports Flight's service layer
+
+        plan = cmd.plan
+        with self._lock:
+            if plan.dataset not in self._store:
+                raise FlightNotFound(f"no such dataset: {plan.dataset}",
+                                     detail={"dataset": plan.dataset})
+            stop = cmd.stop if cmd.stop >= 0 else None
+            batches = self._store[plan.dataset][cmd.start : stop]
+            schema = self._schemas[plan.dataset]
+        out_schema = schema.select(plan.projection) if plan.projection else schema
+        results = list(execute(plan, batches))
+        with self._lock:
+            self.queries_executed += 1
+            self.query_rows_in += sum(b.num_rows for b in batches)
+            self.query_rows_out += sum(b.num_rows for b in results)
+        return out_schema, iter(results)
+
     def do_get_impl(self, ticket: Ticket) -> tuple[Schema, Iterator[RecordBatch]]:
-        r = ticket.range()
-        name = r["dataset"]
+        cmd = ticket.command()
+        if isinstance(cmd, QueryCommand):
+            return self._execute_query(cmd)
+        if isinstance(cmd, StagedPutCommand):
+            raise FlightInvalidArgument("staged-put commands are not redeemable via DoGet")
+        name = cmd.dataset
         with self._lock:
             if name not in self._store:
-                raise FlightError(f"no such flight: {name}")
-            batches = self._store[name][r["start"] : r["stop"]]
+                raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
+            stop = cmd.stop if cmd.stop >= 0 else None
+            batches = self._store[name][cmd.start : stop]
             schema = self._schemas[name]
         return schema, iter(batches)
 
     def do_get_encoded(
         self, ticket: Ticket
     ) -> tuple[EncodedMessage, list[EncodedMessage]] | None:
-        # A subclass or monkeypatch that changes do_get_impl (query pushdown,
-        # paced streams, fault injection) must keep serving through it.
+        # A subclass or monkeypatch that changes do_get_impl (pacing, fault
+        # injection) must keep serving through it.
         if (
             not self.cache_encoded
             or type(self).do_get_impl is not InMemoryFlightServer.do_get_impl
             or "do_get_impl" in self.__dict__
         ):
             return None
-        r = ticket.range()
-        name = r["dataset"]
+        cmd = ticket.command()
+        if isinstance(cmd, QueryCommand):
+            # pass-through queries (no predicate, full projection, no limit)
+            # are range reads in disguise: serve them from the cache.  Real
+            # pushdown queries return per-request results and must never
+            # enter (or poison) the cache.
+            plan = cmd.plan
+            with self._lock:
+                schema = self._schemas.get(plan.dataset)
+            if schema is None or not plan.is_passthrough(schema.names):
+                return None
+            name, start, stop = plan.dataset, cmd.start, cmd.stop
+        elif isinstance(cmd, RangeReadCommand):
+            name, start, stop = cmd.dataset, cmd.start, cmd.stop
+        else:
+            return None
+        stop_ix = stop if stop >= 0 else None
         with self._lock:
             if name not in self._store:
-                raise FlightError(f"no such flight: {name}")
+                raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             entry = self._encoded.get(name)
             if entry is not None:
                 self.cache_hits += 1
-                return entry[0], list(entry[1][r["start"] : r["stop"]])
+                return entry[0], list(entry[1][start:stop_ix])
             self.cache_misses += 1
             batches = list(self._store[name])
             schema = self._schemas[name]
@@ -362,22 +532,34 @@ class InMemoryFlightServer(FlightServerBase):
             # stale-but-consistent snapshot still serves this request
             if self._versions.get(name, 0) == version and name in self._store:
                 self._encoded[name] = entry
-        return entry[0], list(entry[1][r["start"] : r["stop"]])
+        return entry[0], list(entry[1][start:stop_ix])
 
     def do_put_impl(self, descriptor, schema, batches) -> dict:
         name = descriptor.path[0] if descriptor.path else descriptor.key
         received = list(batches)
+        digest = _content_digest(schema, received) if self.dedup_puts else None
         with self._lock:
+            if digest is not None:
+                recent = self._recent_puts.setdefault(name, OrderedDict())
+                if digest in recent:
+                    # retried put of an already-committed payload: idempotent
+                    self.put_dedup_hits += 1
+                    return {**recent[digest], "deduped": True}
             self._store.setdefault(name, [])
             self._store[name].extend(received)
             self._schemas.setdefault(name, schema)
             self._encoded.pop(name, None)
             self._versions[name] = self._versions.get(name, 0) + 1
-        return {
-            "batches": len(received),
-            "rows": sum(b.num_rows for b in received),
-            "bytes": sum(b.nbytes() for b in received),
-        }
+            stats = {
+                "batches": len(received),
+                "rows": sum(b.num_rows for b in received),
+                "bytes": sum(b.nbytes() for b in received),
+            }
+            if digest is not None:
+                recent[digest] = stats
+                while len(recent) > _PUT_DEDUP_WINDOW:
+                    recent.popitem(last=False)
+        return stats
 
     def do_action_impl(self, action: Action) -> list[ActionResult]:
         if action.type == "drop":
@@ -385,6 +567,7 @@ class InMemoryFlightServer(FlightServerBase):
             with self._lock:
                 self._store.pop(name, None)
                 self._encoded.pop(name, None)
+                self._recent_puts.pop(name, None)
                 self._versions[name] = self._versions.get(name, 0) + 1
             return [ActionResult(b"dropped")]
         if action.type == "list-names":
@@ -402,6 +585,11 @@ class InMemoryFlightServer(FlightServerBase):
                     "encode_cache_datasets": len(self._encoded),
                     "wire_codec": self.wire_codec,
                     "coalesce": self.coalesce,
+                    "queries_executed": self.queries_executed,
+                    "query_rows_in": self.query_rows_in,
+                    "query_rows_out": self.query_rows_out,
+                    "put_dedup_hits": self.put_dedup_hits,
+                    "verbs": self.metrics.snapshot(),
                 }
             return [ActionResult(json.dumps(stats).encode())]
         if action.type == "stats":

@@ -46,7 +46,7 @@ import numpy as np
 
 from ..buffer import Buffer, BufferPool
 from ..ipc import EncodedMessage, parse_metadata
-from .protocol import FlightError
+from .errors import FlightError, error_from_wire
 
 FRAME = struct.Struct("<IBIQ")
 FRAME_MAGIC = 0xF117A77C
@@ -218,7 +218,7 @@ class FrameConnection:
         if kind != KIND_CTRL:
             raise FlightError(f"expected ctrl frame, got kind={kind}")
         if meta.get("error"):
-            raise FlightError(meta["error"])
+            raise error_from_wire(meta)  # typed FlightError subclass round-trip
         return meta
 
     def close(self) -> None:
@@ -275,7 +275,7 @@ class SocketListener:
             pass
         except FlightError as e:  # report to peer if still possible
             try:
-                conn.send_ctrl({"error": str(e)})
+                conn.send_ctrl(e.to_wire())
             except OSError:
                 pass
         finally:

@@ -48,6 +48,19 @@ class QueryPlan:
             limit=o["limit"],
         )
 
+    def is_passthrough(self, all_names: list[str]) -> bool:
+        """True when executing this plan returns the stored batches verbatim.
+
+        A pass-through plan (no predicate, no limit, no aggregation, full
+        in-order projection) is a range read in disguise — Flight servers use
+        this to serve it from the encode-once cache with zero re-encoding."""
+        return (
+            self.predicate is None
+            and self.limit is None
+            and not self.aggregations
+            and (self.projection is None or list(self.projection) == list(all_names))
+        )
+
     def required_columns(self, all_names: list[str]) -> list[str]:
         need = set(self.projection or all_names)
         if self.predicate is not None:

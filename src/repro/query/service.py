@@ -1,71 +1,31 @@
 """FlightQueryService — the Dremio analogue (paper §4.1, Fig 8).
 
-A Flight server whose ``GetFlightInfo(command=<QueryPlan>)`` plans a query:
-the returned endpoints carry tickets that execute the plan server-side
-(filter/project on columnar batches) and stream only surviving columns/rows.
-One endpoint per stored batch-range → clients parallelize with
-``read_all_parallel`` exactly like the Spark DataSource does (Fig 10).
+**Deprecated shim.**  Query pushdown is now native to the Flight control
+plane: ``InMemoryFlightServer`` plans ``GetFlightInfo(QueryCommand)`` into
+per-range query endpoints and executes ``QueryCommand`` tickets via
+``query.engine.execute`` — with the encode-once cache intact for
+pass-through queries (no more ``do_get_impl`` override bypassing it).  Use
+``InMemoryFlightServer`` (or ``FlightClusterServer`` + ``FlightClusterClient
+.query`` for sharded pushdown) and ``FlightDescriptor.for_query(plan)``.
+
+This class remains for one release so existing imports keep working; the
+only behavior it still adds is the ``aggregate`` action (filtered
+aggregation server-side — only scalars cross the wire).
 """
 from __future__ import annotations
 
 import json
-from typing import Iterator
 
-from ..core.flight.protocol import (
-    FlightDescriptor,
-    FlightEndpoint,
-    FlightError,
-    FlightInfo,
-    Ticket,
-)
+from ..core.flight.protocol import ActionResult
 from ..core.flight.server import InMemoryFlightServer
-from ..core.recordbatch import RecordBatch
-from ..core.schema import Schema
-from .engine import QueryPlan, aggregate, execute
+from .engine import QueryPlan, aggregate
 
 
 class FlightQueryService(InMemoryFlightServer):
-    """InMemory store + query pushdown over Flight."""
+    """InMemory store + query pushdown over Flight (deprecated alias)."""
 
     def __init__(self, endpoints_per_query: int = 4, **kw):
-        super().__init__(**kw)
-        self.endpoints_per_query = endpoints_per_query
-
-    def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
-        if descriptor.command is None:
-            return super().get_flight_info_impl(descriptor)
-        plan = QueryPlan.deserialize(descriptor.command)
-        with self._lock:
-            if plan.dataset not in self._store:
-                raise FlightError(f"no such dataset: {plan.dataset}")
-            batches = self._store[plan.dataset]
-            schema = self._schemas[plan.dataset]
-        out_schema = schema.select(plan.projection) if plan.projection else schema
-        n = len(batches)
-        per = max(1, -(-n // self.endpoints_per_query))
-        endpoints = [
-            FlightEndpoint(
-                Ticket.for_range(plan.dataset, i, min(i + per, n),
-                                 plan=descriptor.command.decode()),
-                self.locations(),
-            )
-            for i in range(0, n, per)
-        ]
-        return FlightInfo(out_schema, descriptor, endpoints, total_records=-1, total_bytes=-1)
-
-    def do_get_impl(self, ticket: Ticket) -> tuple[Schema, Iterator[RecordBatch]]:
-        r = ticket.range()
-        if "plan" not in r:
-            return super().do_get_impl(ticket)
-        plan = QueryPlan.deserialize(r["plan"].encode())
-        with self._lock:
-            batches = self._store[plan.dataset][r["start"]:r["stop"]]
-            schema = self._schemas[plan.dataset]
-        out_schema = schema.select(plan.projection) if plan.projection else schema
-        results = list(execute(plan, batches))
-        if not results:  # empty result set still needs a schema'd stream
-            results = []
-        return out_schema, iter(results)
+        super().__init__(endpoints_per_query=endpoints_per_query, **kw)
 
     def do_action_impl(self, action):
         if action.type == "aggregate":
@@ -73,6 +33,5 @@ class FlightQueryService(InMemoryFlightServer):
             with self._lock:
                 batches = self._store[plan.dataset]
             out = aggregate(plan, batches)
-            from ..core.flight.protocol import ActionResult
             return [ActionResult(json.dumps(out).encode())]
         return super().do_action_impl(action)

@@ -1,0 +1,561 @@
+"""Typed command control plane: Command serialization, middleware stack,
+CallOptions, FlightError hierarchy, cache/pushdown interplay, put dedup."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    Action,
+    AuthTokenMiddleware,
+    CallOptions,
+    FlightClient,
+    FlightClusterClient,
+    FlightClusterServer,
+    FlightDescriptor,
+    FlightError,
+    FlightNotFound,
+    FlightTimedOut,
+    FlightUnauthenticated,
+    FlightUnavailable,
+    FlightUnavailableError,
+    InMemoryFlightServer,
+    LoggingMiddleware,
+    QueryCommand,
+    RangeReadCommand,
+    ServerMiddleware,
+    StagedPutCommand,
+    Ticket,
+    error_from_wire,
+    parse_command,
+)
+from repro.query import QueryPlan, col, execute
+
+
+def make_batches(n=4, rows=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "a": rng.integers(0, 100, rows).astype(np.int64),
+        "b": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+def server_stats(client):
+    return json.loads(client.do_action("server-stats")[0].body)
+
+
+# --------------------------------------------------------------------------
+# Command serialization
+# --------------------------------------------------------------------------
+
+
+class TestCommands:
+    def test_range_read_golden_bytes(self):
+        """Pin the versioned binary layout: any change is a wire break."""
+        cmd = RangeReadCommand("ds", 0, 4, shard=2)
+        assert cmd.to_bytes().hex() == (
+            "c2"          # COMMAND_MAGIC
+            "01"          # version 1
+            "01"          # type: RangeRead
+            "0200" "6473"  # u16 len + "ds"
+            "0000000000000000"  # start=0  (i64 LE)
+            "0400000000000000"  # stop=4   (i64 LE)
+            "02000000"          # shard=2  (i32 LE)
+        )
+        assert parse_command(cmd.to_bytes()) == cmd
+
+    def test_query_command_golden_bytes(self):
+        plan = QueryPlan("t", projection=["a"])
+        cmd = QueryCommand.for_plan(plan, 1, 3, shard=0)
+        raw = cmd.to_bytes()
+        head = "c2" "01" "02" + "0100000000000000" + "0300000000000000" + "00000000"
+        assert raw.hex().startswith(head)
+        back = parse_command(raw)
+        assert back == cmd
+        assert back.plan.dataset == "t" and back.plan.projection == ["a"]
+
+    def test_staged_put_roundtrip(self):
+        cmd = StagedPutCommand("ds", "txn-42", "commit")
+        assert parse_command(cmd.to_bytes()) == cmd
+        assert cmd.to_bytes()[0] == 0xC2
+
+    def test_legacy_json_ticket_still_parses(self):
+        raw = json.dumps({"dataset": "ds", "start": 1, "stop": 3, "shard": 0}).encode()
+        cmd = parse_command(raw)
+        assert isinstance(cmd, RangeReadCommand)
+        assert (cmd.dataset, cmd.start, cmd.stop, cmd.shard) == ("ds", 1, 3, 0)
+
+    def test_legacy_bare_queryplan_json_parses_as_query(self):
+        plan = QueryPlan("taxi", predicate=col("b") > 0)
+        cmd = parse_command(plan.serialize())
+        assert isinstance(cmd, QueryCommand)
+        assert cmd.plan.dataset == "taxi" and cmd.start == 0 and cmd.stop == -1
+
+    def test_ticket_range_shim(self):
+        t = Ticket.for_range("ds", 2, 5, shard=1)
+        assert t.raw[0] == 0xC2  # binary by default
+        assert t.range() == {"dataset": "ds", "start": 2, "stop": 5, "shard": 1}
+        # extras (legacy) fall back to JSON and survive the round trip
+        t2 = Ticket.for_range("ds", 0, 1, priority="high")
+        assert t2.range()["priority"] == "high"
+
+    def test_unparseable_command_is_typed_error(self):
+        from repro.core.flight import FlightInvalidArgument
+        with pytest.raises(FlightInvalidArgument):
+            parse_command(b"\xff\x00garbage")
+        with pytest.raises(FlightInvalidArgument):
+            parse_command(b"")
+
+    def test_truncated_binary_command_is_typed_error(self):
+        from repro.core.flight import FlightInvalidArgument
+        for cmd in (RangeReadCommand("dataset", 0, 4, shard=2),
+                    QueryCommand.for_plan(QueryPlan("t", projection=["a"])),
+                    StagedPutCommand("ds", "txn-1")):
+            raw = cmd.to_bytes()
+            for cut in (3, 4, len(raw) // 2, len(raw) - 1):
+                with pytest.raises(FlightInvalidArgument):
+                    parse_command(raw[:cut])
+
+    def test_staged_put_ticket_rejected_by_cluster_head_too(self):
+        from repro.core.flight import FlightInvalidArgument
+        cl = FlightClusterServer(num_shards=2)
+        cl.add_dataset("ds", make_batches(2))
+        t = Ticket.for_command(StagedPutCommand("ds", "txn-1"))
+        for target in (cl, cl.shards[0]):
+            with pytest.raises(FlightInvalidArgument):
+                FlightClient(target).do_get(t)
+
+
+# --------------------------------------------------------------------------
+# middleware
+# --------------------------------------------------------------------------
+
+
+class Recorder(ServerMiddleware):
+    def __init__(self, name, log):
+        self.name, self.log = name, log
+
+    def on_call(self, ctx):
+        self.log.append(("call", self.name, ctx.method))
+
+    def on_complete(self, ctx, error):
+        self.log.append(("done", self.name, type(error).__name__ if error else None))
+
+
+class TestMiddleware:
+    def test_ordering_and_completion(self):
+        log = []
+        srv = InMemoryFlightServer(middleware=[Recorder("A", log), Recorder("B", log)])
+        srv.add_dataset("ds", make_batches(1))
+        srv.serve_tcp()
+        try:
+            FlightClient(f"tcp://127.0.0.1:{srv.port}").list_flights()
+            calls = [e for e in log if e[2] == "ListFlights" or e[0] == "done"]
+            assert calls == [
+                ("call", "A", "ListFlights"), ("call", "B", "ListFlights"),
+                ("done", "B", None), ("done", "A", None),  # completion reversed
+            ]
+        finally:
+            srv.shutdown()
+
+    def test_auth_short_circuits_later_middleware(self):
+        log = []
+        srv = InMemoryFlightServer(middleware=[
+            Recorder("pre", log), AuthTokenMiddleware("s3cret"), Recorder("post", log)])
+        srv.add_dataset("ds", make_batches(1))
+        srv.serve_tcp()
+        try:
+            with pytest.raises(FlightUnauthenticated):
+                FlightClient(f"tcp://127.0.0.1:{srv.port}").list_flights()
+            assert ("call", "pre", "ListFlights") in log
+            assert not any(e[1] == "post" and e[0] == "call" for e in log)
+            # pre's completion hook saw the typed error
+            assert ("done", "pre", "FlightUnauthenticated") in log
+            # good token flows through to post
+            FlightClient(f"tcp://127.0.0.1:{srv.port}", token="s3cret").list_flights()
+            assert ("call", "post", "ListFlights") in log
+        finally:
+            srv.shutdown()
+
+    def test_auth_token_kwarg_installs_middleware(self):
+        srv = InMemoryFlightServer(auth_token="tok")
+        assert any(isinstance(m, AuthTokenMiddleware) for m in srv.middleware.items)
+
+    def test_metrics_middleware_counts_verbs(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", make_batches(1))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            c.list_flights()
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            c.do_get(info.endpoints[0].ticket).read_all()
+            with pytest.raises(FlightNotFound):
+                c.get_flight_info(FlightDescriptor.for_path("nope"))
+            verbs = server_stats(c)["verbs"]
+            assert verbs["calls"]["ListFlights"] == 1
+            assert verbs["calls"]["GetFlightInfo"] == 2
+            assert verbs["calls"]["DoGet"] == 1
+            assert verbs["errors"]["GetFlightInfo"] == 1
+        finally:
+            srv.shutdown()
+
+    def test_logging_middleware_records_lines(self):
+        mw = LoggingMiddleware()
+        srv = InMemoryFlightServer(middleware=[mw]).serve_tcp()
+        srv.add_dataset("ds", make_batches(1))
+        try:
+            FlightClient(f"tcp://127.0.0.1:{srv.port}").list_flights()
+            assert "ListFlights ok" in mw.lines
+        finally:
+            srv.shutdown()
+
+
+# --------------------------------------------------------------------------
+# typed errors over the wire
+# --------------------------------------------------------------------------
+
+
+class TestTypedErrors:
+    def test_not_found_roundtrips_with_detail(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            with pytest.raises(FlightNotFound) as ei:
+                c.get_flight_info(FlightDescriptor.for_path("ghost"))
+            assert ei.value.detail["dataset"] == "ghost"
+        finally:
+            srv.shutdown()
+
+    def test_pooled_connection_survives_typed_errors(self):
+        """A typed refusal leaves the channel clean and pooled (no leak)."""
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", make_batches(1))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            for _ in range(3):
+                with pytest.raises(FlightNotFound):
+                    list(c.do_get(Ticket.for_range("nope", 0, 1)))
+            assert c._conn_pool.qsize() == 1
+            assert len(c.list_flights()) == 1  # channel still healthy
+        finally:
+            srv.shutdown()
+
+    def test_unauthenticated_is_typed_over_tcp(self):
+        srv = InMemoryFlightServer(auth_token="tok").serve_tcp()
+        try:
+            with pytest.raises(FlightUnauthenticated):
+                FlightClient(f"tcp://127.0.0.1:{srv.port}").list_flights()
+        finally:
+            srv.shutdown()
+
+    def test_unknown_code_degrades_to_base_error(self):
+        e = error_from_wire({"error": "boom", "code": "from_the_future"})
+        assert type(e) is FlightError and str(e) == "boom"
+
+    def test_unavailable_alias_is_same_class(self):
+        assert FlightUnavailableError is FlightUnavailable  # deprecation shim
+
+
+# --------------------------------------------------------------------------
+# CallOptions
+# --------------------------------------------------------------------------
+
+
+class SlowServer(InMemoryFlightServer):
+    def do_action_impl(self, action):
+        if action.type == "sleep":
+            time.sleep(float(action.body.decode() or "1"))
+            return []
+        return super().do_action_impl(action)
+
+
+class TestCallOptions:
+    def test_timeout_fires_as_flight_timed_out(self):
+        srv = SlowServer().serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            t0 = time.perf_counter()
+            with pytest.raises(FlightTimedOut) as ei:
+                c.do_action(Action("sleep", b"2.0"), options=CallOptions(timeout=0.2))
+            assert time.perf_counter() - t0 < 1.5
+            assert ei.value.detail["timeout"] == pytest.approx(0.2)
+            # the timed-out connection was discarded, not pooled; a fresh
+            # call works and never sees the stale late reply
+            assert c._conn_pool.qsize() == 0
+            assert c.do_action("health")[0].body == b"ok"
+        finally:
+            srv.shutdown()
+
+    def test_per_call_wire_codec_override(self):
+        srv = InMemoryFlightServer().serve_tcp()  # binary default
+        srv.add_dataset("ds", make_batches(2))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            base = c.do_get(info.endpoints[0].ticket).read_all()
+            asked = c.do_get(info.endpoints[0].ticket,
+                             options=CallOptions(wire_codec="json", coalesce=False)).read_all()
+            assert asked.num_rows == base.num_rows
+            assert all(a == b for a, b in zip(asked.batches, base.batches))
+            # the override bypassed the cache (its entries hold binary frames)
+            assert server_stats(c)["wire_codec"] == "binary"
+        finally:
+            srv.shutdown()
+
+    def test_unknown_wire_codec_is_typed_refusal_not_crash(self):
+        """A bogus per-call codec must be refused before the stream starts —
+        not a ValueError killing the server's handler thread."""
+        from repro.core.flight import FlightInvalidArgument
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", make_batches(1))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+            with pytest.raises(FlightInvalidArgument):
+                c.do_get(info.endpoints[0].ticket,
+                         options=CallOptions(wire_codec="bogus")).read_all()
+            # connection survived the refusal and still serves
+            assert c.do_get(info.endpoints[0].ticket).read_all().num_rows == 1000
+        finally:
+            srv.shutdown()
+
+    def test_default_options_on_client(self):
+        srv = SlowServer().serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}",
+                             options=CallOptions(timeout=0.2))
+            with pytest.raises(FlightTimedOut):
+                c.do_action(Action("sleep", b"2.0"))
+        finally:
+            srv.shutdown()
+
+
+# --------------------------------------------------------------------------
+# encode-cache / pushdown interplay (the PR-2 conflict, fixed)
+# --------------------------------------------------------------------------
+
+
+class TestQueryCacheInterplay:
+    def test_passthrough_query_hits_cache_zero_encodes(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", make_batches(4))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = c.get_flight_info(FlightDescriptor.for_query(QueryPlan("ds")))
+            c.read_all_parallel(info)  # warm: builds the cache once
+            warm = server_stats(c)
+            assert warm["encode_calls"] == 4  # one per stored batch, once
+            for _ in range(3):
+                t, _ = c.read_all_parallel(info)
+                assert t.num_rows == 4000
+            stats = server_stats(c)
+            assert stats["encode_calls"] == warm["encode_calls"]  # zero since warm
+            assert stats["encode_cache_hits"] > warm["encode_cache_hits"]
+            assert stats["queries_executed"] == 0  # never hit the engine
+        finally:
+            srv.shutdown()
+
+    def test_predicated_query_does_not_poison_cache(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", make_batches(4))
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            pass_info = c.get_flight_info(FlightDescriptor.for_query(QueryPlan("ds")))
+            c.read_all_parallel(pass_info)  # warm the cache
+            warm = server_stats(c)
+            plan = QueryPlan("ds", projection=["a"], predicate=col("b") > 0.5)
+            pred_info = c.get_flight_info(FlightDescriptor.for_query(plan))
+            table, _ = c.read_all_parallel(pred_info)
+            mid = server_stats(c)
+            # predicated read executed server-side, encoding per request ...
+            assert mid["queries_executed"] == len(pred_info.endpoints)
+            assert mid["query_rows_out"] < mid["query_rows_in"]
+            assert mid["encode_cache_misses"] == warm["encode_cache_misses"]
+            # ... and the warm pass-through entry is still served encode-free
+            t, _ = c.read_all_parallel(pass_info)
+            after = server_stats(c)
+            assert t.num_rows == 4000
+            assert after["encode_calls"] == mid["encode_calls"]
+            assert after["encode_cache_hits"] > mid["encode_cache_hits"]
+        finally:
+            srv.shutdown()
+
+    def test_predicated_results_match_client_side_filter(self):
+        srv = InMemoryFlightServer()
+        batches = make_batches(4)
+        srv.add_dataset("ds", batches)
+        plan = QueryPlan("ds", projection=["a"], predicate=col("b") > 0.5)
+        c = FlightClient(srv)
+        info = c.get_flight_info(FlightDescriptor.for_query(plan))
+        table, _ = c.read_all_parallel(info)
+        want = sum(b.num_rows for b in execute(plan, batches))
+        assert table.num_rows == want and table.schema.names == ["a"]
+
+    def test_ranged_query_descriptor_bounds_planning(self):
+        """GetFlightInfo(QueryCommand with [start, stop)) must only touch
+        that slice of the stored batches."""
+        srv = InMemoryFlightServer()
+        batches = make_batches(4)
+        srv.add_dataset("ds", batches)
+        plan = QueryPlan("ds", predicate=col("b") > 0.0)
+        c = FlightClient(srv)
+        info = c.get_flight_info(FlightDescriptor.for_query(plan, 1, 3))
+        table, _ = c.read_all_parallel(info)
+        want = sum(b.num_rows for b in execute(plan, batches[1:3]))
+        assert table.num_rows == want
+
+
+# --------------------------------------------------------------------------
+# sharded query pushdown through the cluster head
+# --------------------------------------------------------------------------
+
+
+class TestClusterQueryPushdown:
+    @pytest.mark.parametrize("transport", ["inproc", "tcp"])
+    def test_shard_side_execution_matches_client_filter(self, transport):
+        cl = FlightClusterServer(num_shards=4)
+        batches = make_batches(8, rows=500)
+        cl.add_dataset("ds", batches)
+        try:
+            if transport == "tcp":
+                cl.serve_tcp()
+                cc = FlightClusterClient(f"tcp://127.0.0.1:{cl.port}", max_streams=4)
+            else:
+                cc = FlightClusterClient(cl, max_streams=4)
+            plan = QueryPlan("ds", projection=["a"], predicate=col("b") > 0.25)
+            info = cc.query_info(plan)
+            assert len(info.endpoints) == 4  # one query endpoint per shard
+            assert {ep.shard for ep in info.endpoints} == {0, 1, 2, 3}
+            table, stats = cc.query(plan)
+            want = sum(b.num_rows for b in execute(plan, batches))
+            assert table.num_rows == want
+            assert table.schema.names == ["a"]
+            assert stats.streams == 4
+            # per-shard counters prove filtering ran where the data lives
+            for shard in cl.shards:
+                st = json.loads(shard.do_action_impl(Action("server-stats"))[0].body)
+                assert st["queries_executed"] >= 1
+                assert 0 < st["query_rows_out"] < st["query_rows_in"]
+        finally:
+            cl.shutdown()
+
+    def test_headless_query_ticket_gathers_at_head(self):
+        cl = FlightClusterServer(num_shards=2)
+        batches = make_batches(4)
+        cl.add_dataset("ds", batches)
+        plan = QueryPlan("ds", predicate=col("a") < 50)
+        got = FlightClient(cl).do_get_query(plan).read_all()
+        want = sum(b.num_rows for b in execute(plan, cl.dataset("ds")))
+        assert got.num_rows == want
+
+    def test_ranged_query_ticket_at_head_honors_slice(self):
+        cl = FlightClusterServer(num_shards=2)
+        cl.add_dataset("ds", make_batches(4))
+        plan = QueryPlan("ds", predicate=col("a") < 50)
+        t = Ticket.for_command(QueryCommand.for_plan(plan, 0, 2))
+        got = FlightClient(cl).do_get(t).read_all()
+        want = sum(b.num_rows for b in execute(plan, cl.dataset("ds")[0:2]))
+        assert got.num_rows == want
+
+    def test_cluster_rejects_ranged_query_descriptor(self):
+        from repro.core.flight import FlightInvalidArgument
+        cl = FlightClusterServer(num_shards=2)
+        cl.add_dataset("ds", make_batches(2))
+        plan = QueryPlan("ds")
+        with pytest.raises(FlightInvalidArgument):
+            FlightClient(cl).get_flight_info(FlightDescriptor.for_query(plan, 0, 1))
+
+
+# --------------------------------------------------------------------------
+# DoPut dedup guard (first step of the two-phase-put roadmap item)
+# --------------------------------------------------------------------------
+
+
+class TestPutDedup:
+    def test_identical_retried_put_is_dropped(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            payload = make_batches(2, rows=100, seed=3)
+            for i in range(2):  # second put == a retry of the first
+                w = c.do_put(FlightDescriptor.for_path("up"), payload[0].schema)
+                w.write_batches(payload)
+                stats = w.close()
+            assert stats.get("deduped") is True
+            assert sum(b.num_rows for b in srv.dataset("up")) == 200  # not 400
+            assert server_stats(c)["put_dedup_hits"] == 1
+        finally:
+            srv.shutdown()
+
+    def test_distinct_payloads_still_append(self):
+        srv = InMemoryFlightServer()
+        c = FlightClient(srv)
+        for seed in (1, 2):
+            batches = make_batches(1, rows=50, seed=seed)
+            w = c.do_put(FlightDescriptor.for_path("up"), batches[0].schema)
+            w.write_batch(batches[0])
+            w.close()
+        assert sum(b.num_rows for b in srv.dataset("up")) == 100
+
+    def test_dedup_disabled_appends_twice(self):
+        srv = InMemoryFlightServer(dedup_puts=False)
+        c = FlightClient(srv)
+        payload = make_batches(1, rows=50, seed=3)
+        for _ in range(2):
+            w = c.do_put(FlightDescriptor.for_path("up"), payload[0].schema)
+            w.write_batch(payload[0])
+            w.close()
+        assert sum(b.num_rows for b in srv.dataset("up")) == 100
+
+    def test_scheduler_put_retries_transient_failure_without_duplicates(self):
+        """A put stream that dies after the server committed is retried by the
+        scheduler; the shard-side dedup guard makes the retry idempotent."""
+        from repro.core.flight import ParallelStreamScheduler
+
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            inner = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            fails = {"n": 1}
+
+            class FlakyWriter:
+                def __init__(self, w):
+                    self._w = w
+
+                def write_batch(self, b):
+                    self._w.write_batch(b)
+
+                def close(self):
+                    out = self._w.close()  # server committed the payload ...
+                    if fails["n"]:
+                        fails["n"] -= 1
+                        raise FlightUnavailable("ack lost")  # ... but the ack was lost
+                    return out
+
+            class FlakyClient:
+                def do_get(self, ticket, **kw):
+                    return inner.do_get(ticket, **kw)
+
+                def do_put(self, descriptor, schema, **kw):
+                    return FlakyWriter(inner.do_put(descriptor, schema, **kw))
+
+            sched = ParallelStreamScheduler(lambda loc: FlakyClient(), put_retries=1)
+            payload = make_batches(2, rows=100, seed=5)
+            stats = sched.put(FlightDescriptor.for_path("up"), payload[0].schema,
+                              [(None, payload)])
+            assert sched.retries == 1
+            assert sum(b.num_rows for b in srv.dataset("up")) == 200  # no dup
+        finally:
+            srv.shutdown()
+
+    def test_cluster_write_retry_end_to_end(self):
+        """Re-issuing the same cluster write within the dedup window does not
+        double rows on any shard (the FlightClusterClient.write retry story)."""
+        cl = FlightClusterServer(num_shards=3)
+        cc = FlightClusterClient(cl)
+        batches = make_batches(6, rows=100, seed=11)
+        cc.write("ds", batches)
+        cc.write("ds", batches)  # retry after a presumed partial failure
+        table, _ = cc.read("ds")
+        assert table.num_rows == 600
