@@ -1,4 +1,4 @@
-"""CI gate: fail when wire-plane msgs/s regresses >20% vs the committed baseline.
+"""CI gate: fail when wire-plane msgs/s regresses >30% vs the committed baseline.
 
 Raw msgs/s scales with runner hardware, so by default the guard compares
 **normalized** msgs/s: each non-seed config's msgs/s divided by the same-run
@@ -6,6 +6,13 @@ Raw msgs/s scales with runner hardware, so by default the guard compares
 the pre-binary-metadata data plane, so the ratio isolates the optimization
 and cancels machine speed).  A normalized value below ``(1 - tolerance)`` of
 the committed ``benchmarks/wire_baseline.json`` fails the build.
+
+The default tolerance is 0.30: normalized ratios are a quotient of two
+noisy measurements, and a 20% floor tripped on random configs on loaded
+containers even at unmodified commits (see docs/benchmarks.md, "Tolerance:
+why 30%").  The regressions this gate exists for — losing the encode
+cache, the binary codec silently falling back to JSON, broken coalescing —
+show up as 2x+ normalized drops and still fail comfortably.
 
 ``--absolute`` compares raw msgs/s instead — useful for same-machine
 trajectories, too flaky across heterogeneous CI runners.
@@ -23,7 +30,7 @@ import sys
 from pathlib import Path
 
 BASELINE = Path(__file__).parent / "wire_baseline.json"
-TOLERANCE = 0.20
+TOLERANCE = 0.30  # see docs/benchmarks.md for the derivation
 
 
 def load_results(path: Path) -> dict[tuple[str, int], float]:

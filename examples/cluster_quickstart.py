@@ -40,7 +40,16 @@ print(f"DoPut x{wstats.streams} shards: {wstats.rows} rows "
 per_shard = [sum(b.num_rows for b in s.dataset('events')) for s in hashed.shards]
 print(f"hash placement rows per shard: {per_shard}")
 
-# 5. Same topology over TCP: each shard listens on its own port, and a slow
+# 5. Transactional DoPut: the same parallel shard streams, but staged under
+#    one txn id and committed by the head's prepare->commit round — the
+#    write lands all-or-none (a failed stage aborts every shard's slice)
+before = hclient.read("events")[0].num_rows
+wstats = hclient.write("events", batches, transactional=True)
+after = hclient.read("events")[0].num_rows
+print(f"transactional DoPut x{wstats.streams} shards: "
+      f"{after - before} rows committed atomically")
+
+# 6. Same topology over TCP: each shard listens on its own port, and a slow
 #    shard can be hedged (re-issue its idempotent range ticket on a replica)
 cluster.serve_tcp()
 remote = FlightClusterClient(f"tcp://127.0.0.1:{cluster.port}",

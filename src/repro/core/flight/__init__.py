@@ -44,4 +44,8 @@ from .protocol import (  # noqa: F401
     parse_command,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats  # noqa: F401
-from .server import FlightServerBase, InMemoryFlightServer  # noqa: F401
+from .server import (  # noqa: F401
+    FlightServerBase,
+    InMemoryFlightServer,
+    parse_txn_body,
+)

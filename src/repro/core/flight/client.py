@@ -24,7 +24,9 @@ live in cluster.py.
 """
 from __future__ import annotations
 
+import json
 import queue
+import uuid
 from typing import Iterator
 
 from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
@@ -43,9 +45,39 @@ from .protocol import (
     QueryCommand,
     Ticket,
 )
+from .protocol import StagedPutCommand
 from .scheduler import ParallelStreamScheduler, TransferStats
 from .server import FlightServerBase
 from .transport import FrameConnection, dial
+
+
+def run_staged_put(
+    scheduler: ParallelStreamScheduler,
+    do_action,
+    dataset: str,
+    schema: Schema,
+    assignments: list,
+    txn_id: str,
+    commit_body: bytes,
+) -> TransferStats:
+    """The client side of the two-phase put, shared by single-server
+    ``write_parallel`` and cluster ``write``: stage every assignment under
+    one txn id, then commit via the ``txn-commit`` action.  Any failure
+    triggers a best-effort ``txn-abort`` (the server's TTL reaper covers
+    whatever the abort cannot reach) and re-raises."""
+    descriptor = FlightDescriptor.for_command(
+        StagedPutCommand(dataset, txn_id, "stage"))
+    try:
+        stats = scheduler.put(descriptor, schema, assignments)
+        do_action(Action("txn-commit", commit_body))
+    except Exception:  # any failure, not just Flight ones: free the stage now
+        try:
+            do_action(Action("txn-abort", json.dumps(
+                {"txn_id": txn_id, "dataset": dataset}).encode()))
+        except FlightError:
+            pass
+        raise
+    return stats
 
 
 # --------------------------------------------------------------------------
@@ -357,13 +389,32 @@ class FlightClient:
         descriptor: FlightDescriptor,
         batches: list[RecordBatch],
         max_streams: int = 8,
+        transactional: bool = False,
+        txn_id: str | None = None,
     ) -> TransferStats:
-        """DoPut the batches over N parallel streams (round-robin)."""
+        """DoPut the batches over N parallel streams (round-robin).
+
+        ``transactional=True`` stages the N streams under one txn id
+        (``StagedPutCommand`` stage leg — nothing is visible while streams
+        are in flight) and then commits via the ``txn-commit`` action: a
+        reader sees either none of the payload or all of it.  If any stream
+        fails the txn is aborted (best-effort; the server's TTL reaper GCs
+        whatever an abort cannot reach) and the failure re-raises.  Note
+        that against a ``dedup_puts`` server (the default), byte-identical
+        streams within the txn collapse to one — the same trade-off as the
+        plain-put dedup guard (see ``InMemoryFlightServer``)."""
         schema = batches[0].schema
         shards = [batches[i::max_streams] for i in range(max_streams)]
-        return self.scheduler(max_streams=max_streams).put(
-            descriptor, schema, [(None, s) for s in shards]
-        )
+        if not transactional:
+            return self.scheduler(max_streams=max_streams).put(
+                descriptor, schema, [(None, s) for s in shards]
+            )
+        dataset = descriptor.path[0] if descriptor.path else descriptor.key
+        txn_id = txn_id or uuid.uuid4().hex
+        return run_staged_put(
+            self.scheduler(max_streams=max_streams), self.do_action,
+            dataset, schema, [(None, s) for s in shards], txn_id,
+            StagedPutCommand(dataset, txn_id, "commit").to_bytes())
 
 
 class FlightExchange:

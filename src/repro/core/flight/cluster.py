@@ -20,18 +20,28 @@ supplies the server side of that topology:
   with a ``ParallelStreamScheduler``: ``read()`` fans in all shard endpoints,
   ``write()`` partitions client-side and DoPuts straight to the shards in
   parallel (never funneling bytes through the head).
+
+Transactional writes (``write(..., transactional=True)``) keep shard ingest
+at wire speed while the head coordinates atomic visibility: batches stream
+to shards as *staged* payloads keyed by a txn id (``StagedPutCommand``'s
+stage leg on each DoPut descriptor), then one ``txn-commit`` action at the
+head drives a two-phase round — prepare votes on every expected shard, then
+commit fan-out flips all staged data visible; any missing/failed vote
+aborts the txn on every shard, so a crashed writer's partial stage is never
+readable (and the shards' TTL reaper GCs it).
 """
 from __future__ import annotations
 
 import json
 import threading
+import uuid
 import zlib
 
 import numpy as np
 
 from ..recordbatch import RecordBatch, Table
 from ..schema import Schema
-from .client import FlightClient
+from .client import FlightClient, run_staged_put
 from .protocol import (
     Action,
     ActionResult,
@@ -42,6 +52,7 @@ from .protocol import (
     FlightInfo,
     FlightInvalidArgument,
     FlightNotFound,
+    FlightUnavailable,
     Location,
     QueryCommand,
     ShardSpec,
@@ -49,7 +60,7 @@ from .protocol import (
     Ticket,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats
-from .server import FlightServerBase, InMemoryFlightServer
+from .server import FlightServerBase, InMemoryFlightServer, parse_txn_body
 
 _MIX = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing constant
 
@@ -326,6 +337,33 @@ class FlightClusterServer(FlightServerBase):
         return schema, iter(batches)
 
     def do_put_impl(self, descriptor, schema, batches) -> dict:
+        if descriptor.path is None and descriptor.command is not None:
+            cmd = descriptor.parsed_command()
+            if isinstance(cmd, StagedPutCommand):
+                # head-funneled stage leg (legacy single-stream writers):
+                # partition and stage on the owning shards — invisible
+                # everywhere until the txn-commit round
+                if cmd.phase != "stage":
+                    raise FlightInvalidArgument(
+                        f"DoPut takes the stage leg only; {cmd.phase!r} rides "
+                        f"the txn-{cmd.phase} action", detail={"phase": cmd.phase})
+                received = list(batches)
+                parts = self.placement.assign(received, self.num_shards)
+                per_shard = [
+                    shard.do_put_impl(descriptor, schema, iter(part))
+                    for shard, part in zip(self.shards, parts) if part
+                ]
+                # deduped acks describe payload the shard already held —
+                # counting them would double-book retried streams
+                fresh = [s for s in per_shard if not s.get("deduped")]
+                return {
+                    "staged": True,
+                    "txn_id": cmd.txn_id,
+                    "batches": sum(s["batches"] for s in fresh),
+                    "rows": sum(s["rows"] for s in fresh),
+                    "bytes": sum(s["bytes"] for s in fresh),
+                    "per_shard": per_shard,
+                }
         name = descriptor.path[0] if descriptor.path else descriptor.key
         received = list(batches)
         parts = self.placement.assign(received, self.num_shards)
@@ -341,9 +379,87 @@ class FlightClusterServer(FlightServerBase):
             "per_shard": per_shard,
         }
 
+    # -- transaction coordination (two-phase commit across shards) -------- #
+    def _shard_txn_action(self, shard: InMemoryFlightServer, verb: str,
+                          body: bytes) -> dict:
+        return json.loads(shard.do_action_impl(Action(verb, body))[0].body)
+
+    def _coordinate_commit(self, o: dict) -> dict:
+        """Prepare→commit fan-out — the first cross-shard coordinated verb.
+
+        Phase 1 asks every shard whether the txn's stage is present and
+        healthy (``txn-prepare`` pins it against GC).  If any shard the
+        caller expected (``expect_shards``, or simply *some* shard when
+        unspecified) cannot vote yes, the txn is aborted everywhere and the
+        failure surfaces — nothing becomes visible.  Phase 2 commits every
+        staged shard; each shard's flip is atomic under its store lock."""
+        txn_id = o["txn_id"]
+        body = json.dumps({"txn_id": txn_id}).encode()
+        try:
+            votes = [self._shard_txn_action(s, "txn-prepare", body)
+                     for s in self.shards]
+        except FlightError:
+            self._coordinate_abort(o)
+            raise
+        staged_ids = [i for i, v in enumerate(votes) if v.get("staged")]
+        expired = sorted(i for i, v in enumerate(votes) if v.get("expired"))
+        if expired:
+            # some shard *had* this txn's stage and GC'd it — committing the
+            # surviving shards would tear the txn even without expect_shards
+            self._coordinate_abort(o)
+            raise FlightUnavailable(
+                f"txn {txn_id!r} aborted: stage expired on shard(s) {expired}",
+                detail={"txn_id": txn_id, "expired_shards": expired})
+        expect = o.get("expect_shards")
+        if expect is not None:
+            missing = sorted(set(expect) - set(staged_ids))
+            if missing:
+                self._coordinate_abort(o)
+                raise FlightUnavailable(
+                    f"txn {txn_id!r} aborted: shard(s) {missing} hold no stage "
+                    f"(crashed writer, or stage GC'd)",
+                    detail={"txn_id": txn_id, "missing_shards": missing})
+        if not staged_ids:
+            raise FlightNotFound(f"no staged txn {txn_id!r} on any shard",
+                                 detail={"txn_id": txn_id})
+        acks = [self._shard_txn_action(self.shards[i], "txn-commit", body)
+                for i in staged_ids]
+        dataset = o.get("dataset") or acks[0].get("dataset")
+        if dataset is not None:
+            with self._dlock:
+                self._datasets.setdefault(
+                    dataset, self.shards[staged_ids[0]]._schemas[dataset])
+        return {
+            "txn_id": txn_id,
+            "committed": True,
+            "dataset": dataset,
+            "shards": staged_ids,
+            "batches": sum(a.get("batches", 0) for a in acks),
+            "rows": sum(a.get("rows", 0) for a in acks),
+            "bytes": sum(a.get("bytes", 0) for a in acks),
+            "duplicate": all(a.get("duplicate") for a in acks),
+        }
+
+    def _coordinate_abort(self, o: dict) -> dict:
+        body = json.dumps({"txn_id": o["txn_id"]}).encode()
+        aborted = []
+        for i, s in enumerate(self.shards):
+            try:
+                if self._shard_txn_action(s, "txn-abort", body).get("aborted"):
+                    aborted.append(i)
+            except FlightError:
+                continue  # best-effort: committed shards surface elsewhere
+        return {"txn_id": o["txn_id"], "aborted": bool(aborted), "shards": aborted}
+
     def do_action_impl(self, action: Action) -> list[ActionResult]:
         if action.type == "health":
             return [ActionResult(b"ok")]
+        if action.type == "txn-commit":
+            out = self._coordinate_commit(parse_txn_body(action.body))
+            return [ActionResult(json.dumps(out).encode())]
+        if action.type == "txn-abort":
+            out = self._coordinate_abort(parse_txn_body(action.body))
+            return [ActionResult(json.dumps(out).encode())]
         if action.type == "list-names":
             with self._dlock:
                 return [ActionResult(",".join(self._datasets).encode())]
@@ -504,35 +620,62 @@ class FlightClusterClient:
         name: str,
         batches: list[RecordBatch],
         placement: Placement | None = None,
+        transactional: bool = False,
+        txn_id: str | None = None,
     ) -> TransferStats:
         """Partition client-side and DoPut each shard's slice in parallel.
 
-        DoPut *appends* (matching ``InMemoryFlightServer``), and the N shard
-        streams commit independently — there is no cross-shard transaction
-        yet (``StagedPutCommand`` stubs the two-phase protocol).  Transient
-        per-stream failures are retried, and the shards' content-hash dedup
-        guard drops a re-sent payload they already committed, so a failed
-        ``write`` re-issued within the dedup window does not duplicate rows.
-        Note the flip side: intentionally appending a byte-identical payload
-        twice in quick succession is also deduplicated — use
-        ``dedup_puts=False`` shards (or distinct payloads) for that."""
+        Plain mode: DoPut *appends* (matching ``InMemoryFlightServer``), and
+        the N shard streams commit independently.  Transient per-stream
+        failures are retried, and the shards' content-hash dedup guard drops
+        a re-sent payload they already committed, so a failed ``write``
+        re-issued within the dedup window does not duplicate rows.  Note the
+        flip side: intentionally appending a byte-identical payload twice in
+        quick succession is also deduplicated — use ``dedup_puts=False``
+        shards (or distinct payloads) for that.
+
+        ``transactional=True``: the two-phase protocol.  Each shard's slice
+        streams as a *staged* payload under one txn id (same parallel
+        fan-out, same wire speed — the stage leg is just a DoPut whose
+        descriptor carries ``StagedPutCommand``), then a single
+        ``txn-commit`` at the head drives prepare→commit across the staged
+        shards.  The *outcome* is all-or-none: every slice ends up visible,
+        or — on any stage or vote failure — none does (the txn is aborted
+        everywhere and this call raises).  Each shard's flip is atomic
+        under its store lock, so no reader ever sees part of a shard's
+        slice; a read overlapping the brief commit fan-out can still catch
+        some shards flipped before others (cross-shard read snapshots are a
+        roadmap item).  Stage-leg retries stay safe against the default
+        dedup-guarded shards: they dedup re-staged streams by content hash
+        within the txn."""
         layout = json.loads(self.head.do_action(Action("shard-locations"))[0].body)
         if placement is None:
             placement = make_placement(layout["scheme"], layout.get("key"))
         parts = placement.assign(batches, layout["num_shards"])
-        assignments = []
+        schema = batches[0].schema
+        assignments, shard_ids = [], []
         for entry, part in zip(layout["shards"], parts):
             if not part:
                 continue
             loc = self._pick_location(entry["locations"])
             assignments.append((loc, part))
-        schema = batches[0].schema
-        stats = self.scheduler().put(FlightDescriptor.for_path(name), schema, assignments)
-        self.head.do_action(
-            Action("register-dataset",
-                   json.dumps({"name": name, "schema": schema.to_json()}).encode())
-        )
-        return stats
+            shard_ids.append(entry["shard"])
+        if not transactional:
+            stats = self.scheduler().put(
+                FlightDescriptor.for_path(name), schema, assignments)
+            self.head.do_action(
+                Action("register-dataset",
+                       json.dumps({"name": name, "schema": schema.to_json()}).encode())
+            )
+            return stats
+        if not assignments:
+            return TransferStats(streams=0)
+        txn_id = txn_id or uuid.uuid4().hex
+        commit_body = json.dumps(
+            {"txn_id": txn_id, "dataset": name, "expect_shards": shard_ids}
+        ).encode()
+        return run_staged_put(self.scheduler(), self.head.do_action,
+                              name, schema, assignments, txn_id, commit_body)
 
     def _pick_location(self, uris: list[str]) -> Location:
         """Prefer in-proc when we hold the server objects, else TCP."""

@@ -101,12 +101,16 @@ class MetricsMiddleware(ServerMiddleware):
         self.calls: dict[str, int] = {}
         self.errors: dict[str, int] = {}
         self.seconds: dict[str, float] = {}
+        self.actions: dict[str, int] = {}  # DoAction broken out by type
         self._lock = threading.Lock()
 
     def on_call(self, ctx: CallContext) -> None:
         ctx.state["metrics_t0"] = time.perf_counter()
         with self._lock:
             self.calls[ctx.method] = self.calls.get(ctx.method, 0) + 1
+            if ctx.method == "DoAction":
+                kind = (ctx.request.get("action") or {}).get("type", "?")
+                self.actions[kind] = self.actions.get(kind, 0) + 1
 
     def on_complete(self, ctx: CallContext, error: Exception | None) -> None:
         dt = time.perf_counter() - ctx.state.get("metrics_t0", time.perf_counter())
@@ -121,6 +125,7 @@ class MetricsMiddleware(ServerMiddleware):
                 "calls": dict(self.calls),
                 "errors": dict(self.errors),
                 "seconds": {k: round(v, 6) for k, v in self.seconds.items()},
+                "actions": dict(self.actions),
             }
 
 

@@ -16,8 +16,11 @@ layer down):
 * ``QueryCommand``      — a ``QueryPlan`` (predicate/projection pushdown)
   plus an optional batch range and shard, so query execution composes with
   the sharded-cluster and parallel-stream machinery;
-* ``StagedPutCommand``  — stub for the two-phase (stage + commit) cluster
-  DoPut on the roadmap.
+* ``StagedPutCommand``  — the two-phase transactional cluster DoPut control
+  message: the ``stage`` phase rides a DoPut descriptor (payload lands
+  staged, invisible to readers), while ``commit``/``abort`` bytes are the
+  bodies of the ``txn-commit``/``txn-abort`` DoAction verbs that flip all
+  staged data visible atomically or discard it (see docs/wire-format.md).
 
 ``parse_command`` also accepts the two legacy JSON encodings (range-ticket
 dicts and bare ``QueryPlan`` JSON) so pre-redesign tickets keep redeeming;
@@ -144,23 +147,38 @@ class QueryCommand:
         return o
 
 
+_STAGED_PHASES = ("stage", "commit", "abort")  # wire phase byte = tuple index
+
+
 @dataclass(frozen=True)
 class StagedPutCommand:
-    """Two-phase cluster DoPut control message (stub — see ROADMAP).
+    """Two-phase transactional DoPut control message.
 
-    ``phase`` is ``"stage"`` or ``"commit"``.  Serialization is pinned now so
-    the transactional put can land without another wire-format version."""
+    ``phase`` selects the leg of the protocol:
+
+    * ``"stage"``  — carried by a DoPut descriptor: the streamed batches land
+      in the server's staging store keyed by ``txn_id``, invisible to every
+      reader until committed;
+    * ``"commit"`` — body of the ``txn-commit`` DoAction: atomically flips
+      the txn's staged batches into the visible dataset;
+    * ``"abort"``  — body of the ``txn-abort`` DoAction: discards them.
+
+    The serialization was pinned one PR ahead of the protocol (phase byte
+    0/1/2 in ``_STAGED_PHASES`` order), so staged tickets from the stub era
+    still parse."""
 
     dataset: str
     txn_id: str
     phase: str = "stage"
 
     def to_bytes(self) -> bytes:
+        if self.phase not in _STAGED_PHASES:
+            raise FlightInvalidArgument(f"unknown staged-put phase {self.phase!r}")
         return (
             _HEAD.pack(COMMAND_MAGIC, COMMAND_VERSION, _CMD_STAGED_PUT)
             + _pack_str(self.dataset)
             + _pack_str(self.txn_id)
-            + bytes([0 if self.phase == "stage" else 1])
+            + bytes([_STAGED_PHASES.index(self.phase)])
         )
 
     def to_dict(self) -> dict:
@@ -199,8 +217,12 @@ def parse_command(raw: bytes) -> Command:
             if kind == _CMD_STAGED_PUT:
                 dataset, pos = _unpack_str(raw, pos)
                 txn_id, pos = _unpack_str(raw, pos)
-                return StagedPutCommand(dataset, txn_id,
-                                        "stage" if raw[pos] == 0 else "commit")
+                phase_byte = raw[pos]
+                if phase_byte >= len(_STAGED_PHASES):
+                    raise FlightInvalidArgument(
+                        f"unknown staged-put phase byte {phase_byte}",
+                        detail={"phase": phase_byte})
+                return StagedPutCommand(dataset, txn_id, _STAGED_PHASES[phase_byte])
             raise FlightInvalidArgument(f"unknown command type {kind}", detail={"type": kind})
         except (struct.error, IndexError, UnicodeDecodeError) as e:
             # truncated/garbled binary must surface as a typed refusal, not
@@ -338,7 +360,11 @@ class Ticket:
         return parse_command(self.raw)
 
     def range(self) -> dict:
-        """Deprecated dict view of the command (pre-redesign ticket API)."""
+        """Deprecated dict view of the parsed command.
+
+        Use ``command()`` and the typed ``Command`` union instead — the
+        binary layouts and their JSON fallbacks are specified in
+        docs/wire-format.md ("0xC2 — the Command union")."""
         return self.command().to_dict()
 
     def to_json(self) -> dict:

@@ -102,23 +102,23 @@ class ParallelStreamScheduler:
         self._clients: dict[str, object] = {}
         self._client_lock = threading.Lock()
         self._stat_lock = threading.Lock()
-        self._options_support: dict[type, bool] = {}
+        self._options_support: dict[tuple[type, str], bool] = {}
         self.retries = 0
         self.hedges = 0
 
-    def _takes_options(self, client) -> bool:
-        """Signature probe, cached per client type — never wraps the live
-        call in ``except TypeError`` (that would mask real bugs and re-issue
-        the RPC on an abandoned connection)."""
-        key = type(client)
+    def _takes_options(self, client, method: str = "do_get") -> bool:
+        """Signature probe, cached per (client type, method) — never wraps
+        the live call in ``except TypeError`` (that would mask real bugs and
+        re-issue the RPC on an abandoned connection)."""
+        key = (type(client), method)
         cached = self._options_support.get(key)
         if cached is None:
             try:
-                params = inspect.signature(client.do_get).parameters
+                params = inspect.signature(getattr(client, method)).parameters
                 cached = "options" in params or any(
                     p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
                 )
-            except (TypeError, ValueError):
+            except (AttributeError, TypeError, ValueError):
                 cached = False
             self._options_support[key] = cached
         return cached
@@ -129,6 +129,12 @@ class ParallelStreamScheduler:
         if self.call_options is not None and self._takes_options(client):
             return client.do_get(ticket, options=self.call_options)
         return client.do_get(ticket)
+
+    def _do_put(self, client, descriptor, schema):
+        """Open a DoPut stream, forwarding CallOptions when understood."""
+        if self.call_options is not None and self._takes_options(client, "do_put"):
+            return client.do_put(descriptor, schema, options=self.call_options)
+        return client.do_put(descriptor, schema)
 
     def _bump(self, counter: str, n: int = 1) -> None:
         with self._stat_lock:
@@ -350,14 +356,19 @@ class ParallelStreamScheduler:
         may re-send a payload the server already committed, so retries
         default to 0: only enable them against servers with the content-hash
         dedup guard (``InMemoryFlightServer.dedup_puts``), which drops the
-        duplicate and makes the retry idempotent."""
+        duplicate and makes the retry idempotent.  Staged-put streams
+        (descriptors carrying ``StagedPutCommand``) get the same protection
+        from in-txn content-hash dedup — which is likewise gated on the
+        server's ``dedup_puts`` flag, so against ``dedup_puts=False``
+        servers a stage-leg retry can duplicate rows inside the txn just as
+        a plain-put retry would."""
         assignments = [(loc, bs) for loc, bs in assignments if bs]
         if not assignments:
             return TransferStats(streams=0)
         t0 = time.perf_counter()
 
         def write_once(loc: Location | None, shard: list[RecordBatch]) -> None:
-            w = self._client(loc).do_put(descriptor, schema)
+            w = self._do_put(self._client(loc), descriptor, schema)
             # the scheduler's writer contract is write_batch/close (see module
             # docstring: any client works); write_batches is an optional
             # extension for coalesced frames

@@ -41,13 +41,32 @@ Data-plane fast paths (the wire-speed work):
 * **DoPut dedup guard** — recently committed put payloads are content-hashed
   per dataset; an identical re-append within the window (a retried parallel
   put after partial failure) is dropped instead of duplicating rows.
+
+Transactional staged DoPut (the two-phase cluster write protocol):
+
+* a DoPut whose descriptor carries ``StagedPutCommand(dataset, txn_id,
+  "stage")`` lands in a **staging store** keyed by txn id — invisible to
+  every DoGet/query until committed, and never touching the encode-once
+  cache (invalidation happens on *commit*, not stage);
+* ``txn-prepare`` / ``txn-commit`` / ``txn-abort`` DoActions drive the
+  commit round (commit flips all of a txn's staged batches into the visible
+  dataset under one lock acquisition — a concurrent reader sees none or all
+  of them; abort discards them).  Commit and abort are idempotent within a
+  recent-transactions window, so a retried coordinator round is safe;
+* a TTL **GC reaper** (daemon thread, started when the first stage arrives)
+  discards stages whose writer went away — an orphaned txn is never
+  readable and stops holding memory after ``stage_ttl`` seconds;
+* ``server-stats`` surfaces ``staged_bytes`` / ``staged_txns`` /
+  ``txn_commits`` / ``txn_aborts`` / ``txn_gc_reaped``.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import threading
+import time
 from collections import OrderedDict
+from dataclasses import dataclass, field
 from itertools import chain
 from typing import Iterable, Iterator
 
@@ -82,10 +101,47 @@ from .protocol import (
     RangeReadCommand,
     StagedPutCommand,
     Ticket,
+    parse_command,
 )
 from .transport import KIND_CTRL, KIND_DATA, FrameConnection, SocketListener
 
-_PUT_DEDUP_WINDOW = 32  # recent content hashes remembered per dataset
+_PUT_DEDUP_WINDOW = 32   # recent content hashes remembered per dataset
+_TXN_FINISH_WINDOW = 64  # recent committed/aborted txn ids (idempotency)
+
+
+def parse_txn_body(raw: bytes) -> dict:
+    """Decode a txn action body: ``StagedPutCommand`` bytes or a JSON dict.
+
+    Returns ``{"txn_id", "dataset", ...}`` — JSON bodies may carry extra
+    coordinator fields (e.g. ``expect_shards``)."""
+    if not raw:
+        raise FlightInvalidArgument("empty transaction body")
+    if raw[0] == 0xC2:
+        cmd = parse_command(raw)
+        if not isinstance(cmd, StagedPutCommand):
+            raise FlightInvalidArgument(
+                f"txn action body must be a StagedPutCommand, got {type(cmd).__name__}")
+        return {"txn_id": cmd.txn_id, "dataset": cmd.dataset}
+    try:
+        o = json.loads(raw.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise FlightInvalidArgument(f"unparseable txn body: {e}") from e
+    if not isinstance(o, dict) or "txn_id" not in o:
+        raise FlightInvalidArgument("txn body JSON must name a txn_id")
+    return o
+
+
+@dataclass
+class _StagedTxn:
+    """One transaction's staged-but-invisible payload on this server."""
+
+    dataset: str
+    schema: Schema
+    batches: list[RecordBatch] = field(default_factory=list)
+    digests: set = field(default_factory=set)  # in-txn stream dedup (retries)
+    nbytes: int = 0
+    expires_at: float = 0.0
+    prepared: bool = False
 
 
 class FlightServerBase:
@@ -332,6 +388,7 @@ class InMemoryFlightServer(FlightServerBase):
         cache_encoded: bool = True,
         endpoints_per_query: int = 4,
         dedup_puts: bool = True,
+        stage_ttl: float = 60.0,
         middleware: Iterable[ServerMiddleware] | None = None,
     ):
         super().__init__(location_name, auth_token, wire_codec=wire_codec,
@@ -357,6 +414,16 @@ class InMemoryFlightServer(FlightServerBase):
         self.dedup_puts = dedup_puts
         self._recent_puts: dict[str, OrderedDict[str, dict]] = {}
         self.put_dedup_hits = 0
+        # transactional staged puts: txn_id -> staged payload, plus a window
+        # of finished txns so duplicate commit/abort rounds are idempotent
+        self.stage_ttl = stage_ttl
+        self._staged: dict[str, _StagedTxn] = {}
+        self._finished_txns: OrderedDict[str, tuple[str, dict]] = {}
+        self._reaper: threading.Thread | None = None
+        self._reaper_stop = threading.Event()
+        self.txn_commits = 0
+        self.txn_aborts = 0
+        self.txn_gc_reaped = 0
 
     # -- direct (in-proc) API ------------------------------------------- #
     def add_dataset(
@@ -534,7 +601,196 @@ class InMemoryFlightServer(FlightServerBase):
                 self._encoded[name] = entry
         return entry[0], list(entry[1][start:stop_ix])
 
+    # -- transactional staged puts -------------------------------------- #
+    def _ensure_reaper(self) -> None:
+        """Start the GC reaper lazily (under ``self._lock``); it exits when
+        the staging store drains and restarts on the next stage."""
+        if self._reaper is not None and self._reaper.is_alive():
+            return
+        self._reaper_stop = threading.Event()
+        self._reaper = threading.Thread(
+            target=self._reap_loop, daemon=True,
+            name=f"stage-gc-{self.location_name}")
+        self._reaper.start()
+
+    def _reap_loop(self) -> None:
+        interval = min(max(self.stage_ttl / 4.0, 0.02), 30.0)
+        stop = self._reaper_stop
+        while not stop.wait(interval):
+            self._gc_staged()
+            with self._lock:
+                if not self._staged:  # idle: exit; _ensure_reaper restarts us
+                    self._reaper = None
+                    return
+
+    def _gc_staged(self) -> None:
+        """Discard expired stages — an orphaned writer's payload is never
+        readable, and stops holding memory after ``stage_ttl`` seconds.
+
+        *Prepared* stages are exempt: after a yes vote the txn's fate
+        belongs to the coordinator, and reaping it here could land between
+        a sibling shard's commit and ours — a half-visible txn.  The cost
+        is the classic 2PC in-doubt window: a coordinator that dies after
+        prepare leaves the stage pinned until an explicit txn-abort."""
+        now = time.monotonic()
+        with self._lock:
+            expired = [t for t, s in self._staged.items()
+                       if s.expires_at <= now and not s.prepared]
+            for txn_id in expired:
+                self._staged.pop(txn_id)
+                self._finish_txn(txn_id, "expired", {})
+                self.txn_gc_reaped += 1
+
+    def _finish_txn(self, txn_id: str, outcome: str, stats: dict) -> None:
+        """Record a txn's fate (idempotency window). Caller holds the lock."""
+        self._finished_txns[txn_id] = (outcome, stats)
+        while len(self._finished_txns) > _TXN_FINISH_WINDOW:
+            self._finished_txns.popitem(last=False)
+
+    def _stage_put(self, cmd: StagedPutCommand, schema: Schema,
+                   received: list[RecordBatch]) -> dict:
+        """The stage leg: payload lands keyed by txn id, invisible to reads.
+
+        Stages never touch ``_store`` or the encode-once cache — cache
+        invalidation happens on commit, when the data becomes visible.
+        Re-staged streams (scheduler put retries) are deduplicated by
+        content hash *within the txn*, so a retry cannot double rows.
+        Like the plain-put guard this is gated on ``dedup_puts`` and shares
+        its trade-off: byte-identical parallel streams in one txn are
+        indistinguishable from retries and collapse to one — stage distinct
+        payloads, or construct the server with ``dedup_puts=False`` (which
+        also makes stage-leg retries unsafe, exactly as for plain puts)."""
+        digest = _content_digest(schema, received) if self.dedup_puts else None
+        nbytes = sum(b.nbytes() for b in received)
+        with self._lock:
+            outcome = self._finished_txns.get(cmd.txn_id)
+            if outcome is not None:
+                raise FlightInvalidArgument(
+                    f"txn {cmd.txn_id!r} already {outcome[0]}: cannot stage",
+                    detail={"txn_id": cmd.txn_id, "outcome": outcome[0]})
+            txn = self._staged.get(cmd.txn_id)
+            if txn is None:
+                txn = self._staged[cmd.txn_id] = _StagedTxn(cmd.dataset, schema)
+                self._ensure_reaper()
+            elif txn.dataset != cmd.dataset:
+                raise FlightInvalidArgument(
+                    f"txn {cmd.txn_id!r} is bound to dataset {txn.dataset!r}",
+                    detail={"txn_id": cmd.txn_id, "dataset": txn.dataset})
+            elif txn.schema != schema:
+                raise FlightInvalidArgument(
+                    f"schema mismatch on staged stream of txn {cmd.txn_id!r}")
+            txn.expires_at = time.monotonic() + self.stage_ttl
+            if digest is not None:
+                if digest in txn.digests:  # retried stage stream: idempotent
+                    self.put_dedup_hits += 1
+                    return {"staged": True, "txn_id": cmd.txn_id, "deduped": True,
+                            "batches": len(received),
+                            "rows": sum(b.num_rows for b in received),
+                            "bytes": nbytes}
+                txn.digests.add(digest)
+            txn.batches.extend(received)
+            txn.nbytes += nbytes
+        return {"staged": True, "txn_id": cmd.txn_id, "batches": len(received),
+                "rows": sum(b.num_rows for b in received), "bytes": nbytes}
+
+    def _txn_prepare(self, o: dict) -> dict:
+        """Phase-1 vote: is this txn's stage present and healthy here?
+
+        Never raises for an unknown txn — the coordinator uses ``staged``
+        to tell participants from bystanders.  Preparing refreshes the TTL
+        so GC cannot race the commit that immediately follows."""
+        self._gc_staged()
+        txn_id = o["txn_id"]
+        with self._lock:
+            outcome = self._finished_txns.get(txn_id)
+            if outcome is not None and outcome[0] == "committed":
+                return {"txn_id": txn_id, "staged": True, "committed": True,
+                        **outcome[1]}
+            if outcome is not None and outcome[0] == "expired":
+                # the stage was here but the reaper ate it: the coordinator
+                # must abort the whole txn, not commit the surviving shards
+                return {"txn_id": txn_id, "staged": False, "expired": True}
+            txn = self._staged.get(txn_id)
+            if txn is None or outcome is not None:
+                return {"txn_id": txn_id, "staged": False}
+            txn.prepared = True
+            txn.expires_at = time.monotonic() + self.stage_ttl
+            return {"txn_id": txn_id, "staged": True,
+                    "batches": len(txn.batches),
+                    "rows": sum(b.num_rows for b in txn.batches),
+                    "bytes": txn.nbytes}
+
+    def _txn_commit(self, o: dict) -> dict:
+        """Flip a txn's staged batches into the visible dataset atomically.
+
+        The flip happens under one ``self._lock`` acquisition — the same
+        lock every DoGet/query snapshot takes — so a concurrent reader sees
+        either none or all of the txn's batches, never a torn prefix."""
+        self._gc_staged()
+        txn_id = o["txn_id"]
+        with self._lock:
+            outcome = self._finished_txns.get(txn_id)
+            if outcome is not None:
+                if outcome[0] == "committed":  # duplicate commit: idempotent
+                    return {**outcome[1], "committed": True, "duplicate": True}
+                if outcome[0] == "aborted":
+                    raise FlightInvalidArgument(
+                        f"txn {txn_id!r} was aborted: cannot commit",
+                        detail={"txn_id": txn_id, "outcome": outcome[0]})
+            txn = self._staged.pop(txn_id, None)
+            if txn is None:
+                raise FlightNotFound(
+                    f"no staged txn {txn_id!r} (never staged, or GC'd after "
+                    f"{self.stage_ttl}s)", detail={"txn_id": txn_id})
+            name = txn.dataset
+            self._store.setdefault(name, []).extend(txn.batches)
+            self._schemas.setdefault(name, txn.schema)
+            self._encoded.pop(name, None)  # visibility flip invalidates cache
+            self._versions[name] = self._versions.get(name, 0) + 1
+            stats = {
+                "txn_id": txn_id,
+                "dataset": name,
+                "batches": len(txn.batches),
+                "rows": sum(b.num_rows for b in txn.batches),
+                "bytes": txn.nbytes,
+            }
+            self._finish_txn(txn_id, "committed", stats)
+            self.txn_commits += 1
+        return {**stats, "committed": True}
+
+    def _txn_abort(self, o: dict) -> dict:
+        """Discard a txn's staged batches.  Unknown/expired txns are a
+        no-op (idempotent — the coordinator aborts broadly on failure);
+        aborting a *committed* txn is a protocol error and surfaces."""
+        self._gc_staged()
+        txn_id = o["txn_id"]
+        with self._lock:
+            outcome = self._finished_txns.get(txn_id)
+            if outcome is not None:
+                if outcome[0] == "committed":
+                    raise FlightInvalidArgument(
+                        f"txn {txn_id!r} already committed: cannot abort",
+                        detail={"txn_id": txn_id})
+                if outcome[0] == "aborted":  # duplicate abort: idempotent
+                    return {"txn_id": txn_id, "aborted": True, "duplicate": True}
+                return {"txn_id": txn_id, "aborted": False, "expired": True}
+            txn = self._staged.pop(txn_id, None)
+            if txn is None:
+                return {"txn_id": txn_id, "aborted": False}
+            self._finish_txn(txn_id, "aborted", {"dataset": txn.dataset})
+            self.txn_aborts += 1
+        return {"txn_id": txn_id, "aborted": True}
+
     def do_put_impl(self, descriptor, schema, batches) -> dict:
+        if descriptor.path is None and descriptor.command is not None:
+            cmd = descriptor.parsed_command()
+            if isinstance(cmd, StagedPutCommand):
+                if cmd.phase != "stage":
+                    raise FlightInvalidArgument(
+                        f"DoPut takes the stage leg only; {cmd.phase!r} rides "
+                        f"the txn-{cmd.phase} action",
+                        detail={"phase": cmd.phase})
+                return self._stage_put(cmd, schema, list(batches))
         name = descriptor.path[0] if descriptor.path else descriptor.key
         received = list(batches)
         digest = _content_digest(schema, received) if self.dedup_puts else None
@@ -561,7 +817,20 @@ class InMemoryFlightServer(FlightServerBase):
                     recent.popitem(last=False)
         return stats
 
+    def shutdown(self) -> None:
+        self._reaper_stop.set()
+        super().shutdown()
+
     def do_action_impl(self, action: Action) -> list[ActionResult]:
+        if action.type == "txn-prepare":
+            return [ActionResult(json.dumps(
+                self._txn_prepare(parse_txn_body(action.body))).encode())]
+        if action.type == "txn-commit":
+            return [ActionResult(json.dumps(
+                self._txn_commit(parse_txn_body(action.body))).encode())]
+        if action.type == "txn-abort":
+            return [ActionResult(json.dumps(
+                self._txn_abort(parse_txn_body(action.body))).encode())]
         if action.type == "drop":
             name = action.body.decode()
             with self._lock:
@@ -589,6 +858,11 @@ class InMemoryFlightServer(FlightServerBase):
                     "query_rows_in": self.query_rows_in,
                     "query_rows_out": self.query_rows_out,
                     "put_dedup_hits": self.put_dedup_hits,
+                    "staged_txns": len(self._staged),
+                    "staged_bytes": sum(t.nbytes for t in self._staged.values()),
+                    "txn_commits": self.txn_commits,
+                    "txn_aborts": self.txn_aborts,
+                    "txn_gc_reaped": self.txn_gc_reaped,
                     "verbs": self.metrics.snapshot(),
                 }
             return [ActionResult(json.dumps(stats).encode())]

@@ -1,12 +1,14 @@
 """FlightQueryService — the Dremio analogue (paper §4.1, Fig 8).
 
-**Deprecated shim.**  Query pushdown is now native to the Flight control
-plane: ``InMemoryFlightServer`` plans ``GetFlightInfo(QueryCommand)`` into
+**Deprecated shim.**  Query pushdown is native to the Flight control plane:
+``InMemoryFlightServer`` plans ``GetFlightInfo(QueryCommand)`` into
 per-range query endpoints and executes ``QueryCommand`` tickets via
-``query.engine.execute`` — with the encode-once cache intact for
-pass-through queries (no more ``do_get_impl`` override bypassing it).  Use
-``InMemoryFlightServer`` (or ``FlightClusterServer`` + ``FlightClusterClient
-.query`` for sharded pushdown) and ``FlightDescriptor.for_query(plan)``.
+``query.engine.execute``.  Use ``InMemoryFlightServer`` (or
+``FlightClusterServer`` + ``FlightClusterClient.query`` for sharded
+pushdown) with ``FlightDescriptor.for_query(plan)`` — the typed-command
+wire format, including ``QueryCommand``'s byte layout, is specified in
+docs/wire-format.md ("0xC2 — the Command union"); README.md's quickstart
+shows the replacement call pattern.
 
 This class remains for one release so existing imports keep working; the
 only behavior it still adds is the ``aggregate`` action (filtered

@@ -1,0 +1,433 @@
+"""Transactional staged DoPut: stage→commit→abort/GC across shards.
+
+The invariants under test (ISSUE 4 acceptance criteria):
+
+* a crashed writer's staged payloads are never readable and are GC'd after
+  the TTL;
+* a committed txn is visible on all shards or none;
+* a reader racing a commit never sees a half-visible txn (per-shard, the
+  visibility flip is atomic under the store lock);
+* duplicate commits are idempotent, commit-after-abort and abort-after-
+  commit are typed protocol errors.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    Action,
+    FlightClient,
+    FlightClusterClient,
+    FlightClusterServer,
+    FlightDescriptor,
+    FlightInvalidArgument,
+    FlightNotFound,
+    FlightUnavailable,
+    InMemoryFlightServer,
+    StagedPutCommand,
+    parse_command,
+    parse_txn_body,
+)
+
+
+def make_batches(n=8, rows=500, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "k": rng.integers(0, 40, rows).astype(np.int64),
+        "v": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+def stage(server_or_client, dataset, txn_id, batches):
+    """Stream ``batches`` as one staged DoPut stream."""
+    client = (server_or_client if isinstance(server_or_client, FlightClient)
+              else FlightClient(server_or_client))
+    desc = FlightDescriptor.for_command(StagedPutCommand(dataset, txn_id, "stage"))
+    w = client.do_put(desc, batches[0].schema)
+    for b in batches:
+        w.write_batch(b)
+    return w.close()
+
+
+def stats_of(server):
+    return json.loads(server.do_action_impl(Action("server-stats"))[0].body)
+
+
+def txn_action(client, verb, txn_id, dataset="ds", **extra):
+    body = json.dumps({"txn_id": txn_id, "dataset": dataset, **extra}).encode()
+    return json.loads(client.do_action(Action(verb, body))[0].body)
+
+
+# --------------------------------------------------------------------------
+# wire format
+# --------------------------------------------------------------------------
+
+
+class TestStagedPutWire:
+    def test_all_three_phases_round_trip(self):
+        for phase in ("stage", "commit", "abort"):
+            cmd = StagedPutCommand("ds", "txn-7", phase)
+            assert parse_command(cmd.to_bytes()) == cmd
+
+    def test_phase_bytes_are_pinned(self):
+        # the phase byte is the last byte: 0=stage, 1=commit, 2=abort —
+        # a change here is a wire break (docs/wire-format.md)
+        for i, phase in enumerate(("stage", "commit", "abort")):
+            assert StagedPutCommand("d", "t", phase).to_bytes()[-1] == i
+
+    def test_unknown_phase_rejected_both_directions(self):
+        with pytest.raises(FlightInvalidArgument):
+            StagedPutCommand("d", "t", "flush").to_bytes()
+        raw = bytearray(StagedPutCommand("d", "t").to_bytes())
+        raw[-1] = 9
+        with pytest.raises(FlightInvalidArgument):
+            parse_command(bytes(raw))
+
+    def test_txn_body_accepts_binary_and_json(self):
+        o = parse_txn_body(StagedPutCommand("ds", "t1", "commit").to_bytes())
+        assert o == {"txn_id": "t1", "dataset": "ds"}
+        o = parse_txn_body(b'{"txn_id": "t2", "expect_shards": [0, 1]}')
+        assert o["txn_id"] == "t2" and o["expect_shards"] == [0, 1]
+        with pytest.raises(FlightInvalidArgument):
+            parse_txn_body(b"")
+        with pytest.raises(FlightInvalidArgument):
+            parse_txn_body(b'{"no": "txn"}')
+
+
+# --------------------------------------------------------------------------
+# single-server staging semantics
+# --------------------------------------------------------------------------
+
+
+class TestStagingStore:
+    def test_staged_payload_invisible_until_commit(self):
+        s = InMemoryFlightServer()
+        c = FlightClient(s)
+        batches = make_batches(4)
+        stage(s, "ds", "t1", batches)
+        # not listed, not gettable, not in the store
+        with pytest.raises(FlightNotFound):
+            c.get_flight_info(FlightDescriptor.for_path("ds"))
+        assert "ds" not in s._store
+        assert stats_of(s)["staged_txns"] == 1
+        assert stats_of(s)["staged_bytes"] == sum(b.nbytes() for b in batches)
+        ack = txn_action(c, "txn-commit", "t1")
+        assert ack["committed"] and ack["rows"] == 4 * 500
+        assert sum(b.num_rows for b in s.dataset("ds")) == 4 * 500
+        assert stats_of(s)["staged_txns"] == 0
+        assert stats_of(s)["txn_commits"] == 1
+
+    def test_commit_appends_to_existing_dataset(self):
+        s = InMemoryFlightServer()
+        s.add_dataset("ds", make_batches(2))
+        stage(s, "ds", "t1", make_batches(3, seed=1))
+        assert len(s.dataset("ds")) == 2
+        txn_action(FlightClient(s), "txn-commit", "t1")
+        assert len(s.dataset("ds")) == 5
+
+    def test_stage_does_not_invalidate_encode_cache_commit_does(self):
+        s = InMemoryFlightServer()
+        s.add_dataset("ds", make_batches(2))
+        c = FlightClient(s)
+        info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+        ticket = info.endpoints[0].ticket
+        assert s.do_get_encoded(ticket) is not None  # build the cache
+        assert stats_of(s)["encode_cache_misses"] == 1
+        stage(s, "ds", "t1", make_batches(1, seed=2))
+        s.do_get_encoded(ticket)
+        assert stats_of(s)["encode_cache_hits"] == 1  # stage kept it warm
+        txn_action(c, "txn-commit", "t1")
+        assert stats_of(s)["encode_cache_datasets"] == 0  # commit dropped it
+
+    def test_duplicate_commit_is_idempotent(self):
+        s = InMemoryFlightServer()
+        c = FlightClient(s)
+        stage(s, "ds", "t1", make_batches(2))
+        first = txn_action(c, "txn-commit", "t1")
+        second = txn_action(c, "txn-commit", "t1")
+        assert second["duplicate"] and second["committed"]
+        assert second["rows"] == first["rows"]
+        assert len(s.dataset("ds")) == 2  # not doubled
+        assert stats_of(s)["txn_commits"] == 1
+
+    def test_retried_stage_stream_dedups_within_txn(self):
+        s = InMemoryFlightServer()
+        batches = make_batches(2)
+        stage(s, "ds", "t1", batches)
+        ack = stage(s, "ds", "t1", batches)  # scheduler put retry, same bytes
+        assert ack["deduped"]
+        txn_action(FlightClient(s), "txn-commit", "t1")
+        assert len(s.dataset("ds")) == 2
+
+    def test_dedup_puts_off_keeps_identical_staged_streams(self):
+        """Like the plain-put guard, stage dedup is opt-out: a server built
+        with dedup_puts=False commits byte-identical parallel streams in
+        full instead of collapsing them to one."""
+        srv = InMemoryFlightServer(dedup_puts=False)
+        c = FlightClient(srv)
+        b = make_batches(1)[0]
+        c.write_parallel(FlightDescriptor.for_path("ds"), [b] * 8,
+                         max_streams=4, transactional=True)
+        assert sum(x.num_rows for x in srv.dataset("ds")) == 8 * 500
+
+    def test_abort_discards_and_is_idempotent(self):
+        s = InMemoryFlightServer()
+        c = FlightClient(s)
+        stage(s, "ds", "t1", make_batches(2))
+        assert txn_action(c, "txn-abort", "t1")["aborted"]
+        assert "ds" not in s._store and stats_of(s)["staged_txns"] == 0
+        again = txn_action(c, "txn-abort", "t1")
+        assert again["aborted"] and again["duplicate"]
+        assert stats_of(s)["txn_aborts"] == 1
+        # unknown txn: no-op, not an error (coordinator aborts broadly)
+        assert txn_action(c, "txn-abort", "never-staged")["aborted"] is False
+
+    def test_commit_after_abort_and_abort_after_commit_are_errors(self):
+        s = InMemoryFlightServer()
+        c = FlightClient(s)
+        stage(s, "ds", "t1", make_batches(1))
+        txn_action(c, "txn-abort", "t1")
+        with pytest.raises(FlightInvalidArgument):
+            txn_action(c, "txn-commit", "t1")
+        stage(s, "ds", "t2", make_batches(1))
+        txn_action(c, "txn-commit", "t2")
+        with pytest.raises(FlightInvalidArgument):
+            txn_action(c, "txn-abort", "t2")
+        # staging into a finished txn is also refused
+        with pytest.raises(FlightInvalidArgument):
+            stage(s, "ds", "t2", make_batches(1, seed=3))
+
+    def test_commit_of_unknown_txn_is_not_found(self):
+        with pytest.raises(FlightNotFound):
+            txn_action(FlightClient(InMemoryFlightServer()), "txn-commit", "ghost")
+
+    def test_commit_phase_rejected_on_the_doput_leg(self):
+        s = InMemoryFlightServer()
+        c = FlightClient(s)
+        w = c.do_put(FlightDescriptor.for_command(
+            StagedPutCommand("ds", "t1", "commit")), make_batches(1)[0].schema)
+        with pytest.raises(FlightInvalidArgument):
+            w.close()  # in-proc DoPut dispatches on close
+
+    def test_schema_mismatch_across_staged_streams_rejected(self):
+        s = InMemoryFlightServer()
+        stage(s, "ds", "t1", make_batches(1))
+        other = [RecordBatch.from_numpy({"z": np.arange(4, dtype=np.int64)})]
+        with pytest.raises(FlightInvalidArgument):
+            stage(s, "ds", "t1", other)
+
+
+class TestStageGC:
+    def test_expired_stage_is_reaped_and_commit_fails(self):
+        s = InMemoryFlightServer(stage_ttl=0.15)
+        c = FlightClient(s)
+        stage(s, "ds", "t1", make_batches(2))  # the "crashed writer"
+        deadline = time.time() + 5.0
+        while stats_of(s)["staged_txns"] and time.time() < deadline:
+            time.sleep(0.05)
+        st = stats_of(s)
+        assert st["staged_txns"] == 0 and st["staged_bytes"] == 0
+        assert st["txn_gc_reaped"] == 1
+        assert "ds" not in s._store  # never became readable
+        with pytest.raises(FlightNotFound):
+            txn_action(c, "txn-commit", "t1")
+
+    def test_prepared_stage_is_pinned_against_gc(self):
+        """After a yes vote the coordinator owns the txn's fate: the reaper
+        must not fire between a sibling shard's commit and ours (that would
+        leave the txn half-visible across shards)."""
+        s = InMemoryFlightServer(stage_ttl=0.1)
+        c = FlightClient(s)
+        stage(s, "ds", "t1", make_batches(2))
+        txn_action(c, "txn-prepare", "t1")
+        time.sleep(0.35)  # several reaper intervals past the TTL
+        s._gc_staged()
+        assert stats_of(s)["staged_txns"] == 1  # pinned, not reaped
+        txn_action(c, "txn-commit", "t1")      # the delayed commit still lands
+        assert len(s.dataset("ds")) == 2
+        # an explicit abort resolves an in-doubt prepared stage too
+        stage(s, "ds", "t2", make_batches(1))
+        txn_action(c, "txn-prepare", "t2")
+        assert txn_action(c, "txn-abort", "t2")["aborted"]
+
+    def test_live_stage_survives_the_reaper(self):
+        s = InMemoryFlightServer(stage_ttl=30.0)
+        stage(s, "ds", "t1", make_batches(1))
+        s._gc_staged()
+        assert stats_of(s)["staged_txns"] == 1
+        txn_action(FlightClient(s), "txn-commit", "t1")
+        assert len(s.dataset("ds")) == 1
+
+
+# --------------------------------------------------------------------------
+# commit racing concurrent readers
+# --------------------------------------------------------------------------
+
+
+class TestCommitVisibilityRace:
+    def test_reader_never_sees_half_visible_txn(self):
+        """Hammer DoGet while commits flip — every read sees a whole number
+        of transactions (the per-shard flip is atomic under the store lock)."""
+        s = InMemoryFlightServer(cache_encoded=False)
+        c = FlightClient(s)
+        s.add_dataset("ds", make_batches(1, rows=10))
+        txn_rows = 4 * 100  # each txn stages 4 batches of 100 rows
+        valid = {10 + i * txn_rows for i in range(21)}
+        seen, bad, stop = set(), [], threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    info = c.get_flight_info(FlightDescriptor.for_path("ds"))
+                    n = sum(sum(b.num_rows for b in c.do_get(e.ticket))
+                            for e in info.endpoints)
+                except FlightNotFound:
+                    continue
+                seen.add(n)
+                if n not in valid:
+                    bad.append(n)
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for i in range(20):
+            stage(s, "ds", f"t{i}", make_batches(4, rows=100, seed=i))
+            txn_action(c, "txn-commit", f"t{i}")
+        stop.set()
+        for t in threads:
+            t.join()
+        assert not bad, f"torn reads: {sorted(set(bad))}; valid={sorted(valid)}"
+        assert len(seen) > 1  # the race actually observed multiple states
+
+
+# --------------------------------------------------------------------------
+# cluster coordination
+# --------------------------------------------------------------------------
+
+
+class TestClusterTransactions:
+    def test_transactional_write_all_or_nothing_visible(self):
+        cl = FlightClusterServer(num_shards=4)
+        cc = FlightClusterClient(cl)
+        batches = make_batches(8)
+        cc.write("events", batches, transactional=True)
+        table, _ = cc.read("events")
+        assert table.num_rows == sum(b.num_rows for b in batches)
+        for shard in cl.shards:
+            st = stats_of(shard)
+            assert st["staged_txns"] == 0 and st["txn_commits"] == 1
+
+    def test_transactional_write_over_tcp(self):
+        cl = FlightClusterServer(num_shards=3).serve_tcp()
+        try:
+            cc = FlightClusterClient(f"tcp://127.0.0.1:{cl.port}")
+            batches = make_batches(6, seed=4)
+            cc.write("ev", batches, transactional=True)
+            table, _ = cc.read("ev")
+            assert table.num_rows == sum(b.num_rows for b in batches)
+        finally:
+            cl.shutdown()
+
+    def test_abort_after_partial_stage_nothing_visible(self):
+        """A writer that staged only some shards (then crashed): the commit
+        round's prepare vote fails, every shard's stage is aborted."""
+        cl = FlightClusterServer(num_shards=4)
+        head = FlightClient(cl)
+        # stage on shards 0 and 1 only — the crash happened before 2 and 3
+        stage(cl.shards[0], "ds", "t1", make_batches(2))
+        stage(cl.shards[1], "ds", "t1", make_batches(2, seed=1))
+        with pytest.raises(FlightUnavailable) as ei:
+            txn_action(head, "txn-commit", "t1", expect_shards=[0, 1, 2, 3])
+        assert ei.value.detail["missing_shards"] == [2, 3]
+        for shard in cl.shards:
+            assert "ds" not in shard._store  # all-or-none: none
+            assert stats_of(shard)["staged_txns"] == 0  # aborted, not lingering
+        assert stats_of(cl.shards[0])["txn_aborts"] == 1
+
+    def test_commit_aborts_when_one_shards_stage_was_gcd(self):
+        """Even without expect_shards, a stage the reaper ate on one shard
+        must abort the whole txn — committing the survivors would tear it."""
+        cl = FlightClusterServer(num_shards=2)
+        head = FlightClient(cl)
+        stage(cl.shards[0], "ds", "t1", make_batches(2))
+        stage(cl.shards[1], "ds", "t1", make_batches(2, seed=1))
+        cl.shards[1]._staged["t1"].expires_at = 0.0  # writer paused > TTL
+        cl.shards[1]._gc_staged()
+        with pytest.raises(FlightUnavailable) as ei:
+            txn_action(head, "txn-commit", "t1")  # note: no expect_shards
+        assert ei.value.detail["expired_shards"] == [1]
+        assert all("ds" not in s._store for s in cl.shards)
+        assert stats_of(cl.shards[0])["staged_txns"] == 0  # aborted everywhere
+
+    def test_commit_without_expectations_commits_staged_shards(self):
+        cl = FlightClusterServer(num_shards=3)
+        head = FlightClient(cl)
+        stage(cl.shards[0], "ds", "t1", make_batches(2))
+        stage(cl.shards[2], "ds", "t1", make_batches(2, seed=1))
+        ack = txn_action(head, "txn-commit", "t1")
+        assert ack["shards"] == [0, 2] and ack["batches"] == 4
+        # the head learned the dataset: reads fan in the committed shards
+        table, _ = FlightClusterClient(cl).read("ds")
+        assert table.num_rows == 4 * 500
+
+    def test_duplicate_cluster_commit_round_is_idempotent(self):
+        cl = FlightClusterServer(num_shards=2)
+        cc = FlightClusterClient(cl)
+        head = FlightClient(cl)
+        cc.write("ds", make_batches(4), transactional=True, txn_id="t-dup")
+        before = sum(b.num_rows for b in cl.dataset("ds"))
+        ack = txn_action(head, "txn-commit", "t-dup")  # retried coordinator round
+        assert ack["committed"] and ack["duplicate"]
+        assert sum(b.num_rows for b in cl.dataset("ds")) == before
+
+    def test_cluster_abort_fans_out(self):
+        cl = FlightClusterServer(num_shards=3)
+        head = FlightClient(cl)
+        for i in range(3):
+            stage(cl.shards[i], "ds", "t1", make_batches(1, seed=i))
+        out = txn_action(head, "txn-abort", "t1")
+        assert out["aborted"] and out["shards"] == [0, 1, 2]
+        assert all(stats_of(s)["staged_txns"] == 0 for s in cl.shards)
+
+    def test_head_funneled_staged_put_partitions_and_stages(self):
+        """Legacy single-stream writers can stage through the head too."""
+        cl = FlightClusterServer(num_shards=2)
+        head = FlightClient(cl)
+        batches = make_batches(4)
+        desc = FlightDescriptor.for_command(StagedPutCommand("ds", "t1", "stage"))
+        w = head.do_put(desc, batches[0].schema)
+        for b in batches:
+            w.write_batch(b)
+        ack = w.close()
+        assert ack["staged"] and ack["batches"] == 4
+        assert all("ds" not in s._store for s in cl.shards)
+        txn_action(head, "txn-commit", "t1")
+        assert sum(b.num_rows for b in cl.dataset("ds")) == 4 * 500
+
+    def test_single_server_write_parallel_transactional(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            batches = make_batches(8, seed=5)
+            c.write_parallel(FlightDescriptor.for_path("ds"), batches,
+                             max_streams=4, transactional=True)
+            assert sum(b.num_rows for b in srv.dataset("ds")) == 8 * 500
+            assert stats_of(srv)["txn_commits"] == 1
+            # txn verbs show up in the per-action metrics breakdown
+            assert stats_of(srv)["verbs"]["actions"]["txn-commit"] == 1
+        finally:
+            srv.shutdown()
+
+    def test_transactional_matches_plain_write_content(self):
+        batches = make_batches(6, seed=7)
+        plain = FlightClusterServer(num_shards=3)
+        FlightClusterClient(plain).write("ds", batches)
+        txn = FlightClusterServer(num_shards=3)
+        FlightClusterClient(txn).write("ds", batches, transactional=True)
+        def rows(cl):
+            return sorted(r for b in cl.dataset("ds") for r in b.to_rows())
+        assert rows(plain) == rows(txn)

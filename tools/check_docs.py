@@ -1,0 +1,94 @@
+"""Docs gate: the code in README/docs must run, not just read well.
+
+Executes every fenced ``python`` block in README.md and docs/*.md — blocks
+within one file share a namespace and run in order, so a quickstart can
+build on earlier snippets — then smoke-runs the example scripts a reader
+would try first.  Any exception (or a failing ``assert`` inside a snippet)
+fails the build with the file and block number.
+
+Fences tagged anything other than ``python`` (``bash``, ``text``, ``json``)
+are ignored.  A block whose info string is ``python no-run`` is skipped —
+use sparingly, for snippets that genuinely cannot run in CI.
+
+Run from the repo root::
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+EXAMPLES = [
+    ROOT / "examples" / "cluster_quickstart.py",
+    ROOT / "examples" / "query_cluster.py",
+]
+
+_FENCE = re.compile(r"^```(\w+[^\n]*)\n(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def python_blocks(text: str) -> list[str]:
+    out = []
+    for m in _FENCE.finditer(text):
+        info, body = m.group(1).strip(), m.group(2)
+        if info == "python":
+            out.append(body)
+    return out
+
+
+def run_doc(path: Path) -> int:
+    blocks = python_blocks(path.read_text())
+    if not blocks:
+        print(f"  {path.relative_to(ROOT)}: no python blocks")
+        return 0
+    ns: dict = {"__name__": f"doc:{path.name}"}
+    for i, block in enumerate(blocks, 1):
+        try:
+            exec(compile(block, f"{path.name}[block {i}]", "exec"), ns)
+        except Exception as e:
+            print(f"FAIL {path.relative_to(ROOT)} block {i}: "
+                  f"{type(e).__name__}: {e}", file=sys.stderr)
+            return 1
+    print(f"  {path.relative_to(ROOT)}: {len(blocks)} block(s) ran clean")
+    return 0
+
+
+def run_example(path: Path) -> int:
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{SRC}{os.pathsep}{env['PYTHONPATH']}" \
+        if env.get("PYTHONPATH") else str(SRC)
+    proc = subprocess.run([sys.executable, str(path)], env=env, cwd=ROOT,
+                          capture_output=True, text=True, timeout=300)
+    if proc.returncode != 0:
+        print(f"FAIL {path.relative_to(ROOT)} (exit {proc.returncode}):\n"
+              f"{proc.stderr[-2000:]}", file=sys.stderr)
+        return 1
+    print(f"  {path.relative_to(ROOT)}: ran clean")
+    return 0
+
+
+def main() -> int:
+    if str(SRC) not in sys.path:
+        sys.path.insert(0, str(SRC))
+    rc = 0
+    print("executing fenced python blocks:")
+    for doc in DOC_FILES:
+        rc |= run_doc(doc)
+    print("smoke-running examples:")
+    for ex in EXAMPLES:
+        rc |= run_example(ex)
+    if rc == 0:
+        print("docs OK: every snippet and example runs")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
