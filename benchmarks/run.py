@@ -17,9 +17,9 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (bench_cluster, bench_endpoints, bench_export, bench_kernels,
-                   bench_protocols, bench_query, bench_serde, bench_transfer,
-                   bench_wire)
+    from . import (bench_cluster, bench_endpoints, bench_exchange, bench_export,
+                   bench_kernels, bench_protocols, bench_query, bench_serde,
+                   bench_transfer, bench_wire)
     from .common import emit_bench_json
     suites = {
         "transfer": bench_transfer,    # Fig 2/3
@@ -29,10 +29,11 @@ def main() -> None:
         "endpoints": bench_endpoints,  # Fig 10
         "cluster": bench_cluster,      # shard scaling (Fig 2 over N servers)
         "wire": bench_wire,            # data plane: codec × coalescing × size
+        "exchange": bench_exchange,    # Fig 11: streaming DoExchange microservices
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
-    json_suites = {"cluster", "wire", "query"}  # suites recorded to BENCH_<name>.json
+    json_suites = {"cluster", "wire", "query", "exchange"}  # recorded to BENCH_<name>.json
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

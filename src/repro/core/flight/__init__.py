@@ -1,6 +1,13 @@
 """Arrow-Flight-style RPC: protocol, transports, server, client, scheduler,
-cluster, middleware, typed errors, netsim."""
+cluster, middleware, typed errors, streaming exchange services, netsim."""
 from .client import FlightClient, FlightExchange, FlightStreamReader  # noqa: F401
+from .exchange import (  # noqa: F401
+    FlightExchangeStream,
+    InprocExchangeStream,
+    Pipeline,
+    as_exchange_descriptor,
+    open_exchange,
+)
 from .cluster import (  # noqa: F401
     FlightClusterClient,
     FlightClusterServer,
@@ -32,6 +39,7 @@ from .protocol import (  # noqa: F401
     ActionResult,
     CallOptions,
     Command,
+    ExchangeCommand,
     FlightDescriptor,
     FlightEndpoint,
     FlightInfo,
@@ -48,4 +56,14 @@ from .server import (  # noqa: F401
     FlightServerBase,
     InMemoryFlightServer,
     parse_txn_body,
+)
+from .services import (  # noqa: F401
+    EchoService,
+    ExchangeService,
+    ExchangeServiceRegistry,
+    FilterService,
+    MapBatchesService,
+    ProjectService,
+    RepartitionService,
+    ScoreService,
 )

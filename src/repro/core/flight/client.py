@@ -27,11 +27,13 @@ from __future__ import annotations
 import json
 import queue
 import uuid
+from dataclasses import replace
 from typing import Iterator
 
 from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
 from ..recordbatch import RecordBatch, Table
 from ..schema import Schema
+from .exchange import FlightExchangeStream, InprocExchangeStream
 from .protocol import (
     Action,
     ActionResult,
@@ -334,7 +336,39 @@ class FlightClient:
             raise FlightUnavailable(str(e)) from e
         return FlightStreamWriter(schema, conn, None, descriptor)
 
+    def do_exchange_stream(self, descriptor: FlightDescriptor, schema: Schema,
+                           options: CallOptions | None = None):
+        """Open a pipelined bidirectional DoExchange stream (exchange.py).
+
+        The returned stream decouples writing and reading: feed input
+        batches (``write_batch``/``write_batches``/``feed``) while iterating
+        the transformed output, with a bounded in-flight window
+        (``CallOptions.read_window``) providing backpressure.  The
+        descriptor may carry an ``ExchangeCommand`` naming a registered
+        transform service, or a path for the legacy per-batch handler."""
+        options = self._options(options)
+        if self._server is not None:
+            return InprocExchangeStream(self._server, descriptor, schema,
+                                        token=self.token, options=options)
+        conn = self._checkout()
+        try:
+            payload = {"method": "DoExchange", "descriptor": descriptor.to_json()}
+            self._prepare(payload, conn, options)
+            conn.send_ctrl(payload)
+            conn.recv_ctrl()  # ok / typed refusal
+        except FlightError:
+            self._reset_deadline(conn, options)
+            self._checkin(conn)  # refused before the stream: channel clean
+            raise
+        except TimeoutError as e:
+            raise self._timed_out(conn, options, e) from e
+        except (ConnectionError, OSError) as e:
+            conn.close()
+            raise FlightUnavailable(str(e)) from e
+        return FlightExchangeStream(self, conn, schema, options)
+
     def do_exchange(self, descriptor: FlightDescriptor, schema: Schema) -> "FlightExchange":
+        """Deprecated lockstep exchange — use ``do_exchange_stream``."""
         return FlightExchange(self, descriptor, schema)
 
     # -- parallel stream manager (the paper's Fig 2/3 engine) ---------------- #
@@ -418,38 +452,33 @@ class FlightClient:
 
 
 class FlightExchange:
-    """Bidirectional per-batch exchange (the scoring-microservice verb)."""
+    """Deprecated single-batch ping-pong view over the streaming exchange.
+
+    Kept as a shim (the ``Ticket.range()`` deprecation pattern): each
+    ``exchange(batch)`` writes one batch and blocks for one response —
+    lockstep, ``window=1`` — so legacy 1:1 scoring services keep working
+    unchanged.  Strictly for **1:1** services: against a dropping or
+    re-chunking transform (filter, repartition) the blocking read waits for
+    a response that may never come (set ``CallOptions.timeout`` on the
+    client to bound it, or — better — don't use this shim).  New code
+    should use ``FlightClient.do_exchange_stream`` /
+    ``core.flight.exchange.open_exchange`` (pipelined, windowed, routed to
+    named ``ExchangeCommand`` services, safe for non-1:1 transforms); the
+    streaming wire protocol is specified in docs/wire-format.md
+    ("DoExchange framing")."""
 
     def __init__(self, client: FlightClient, descriptor: FlightDescriptor, schema: Schema):
-        self._client = client
-        self._schema = schema
-        self._descriptor = descriptor
-        self._out_schema: Schema | None = None
-        if client.is_inproc:
-            self._conn = None
-        else:
-            self._conn = client._checkout()
-            self._conn.send_ctrl(
-                {"method": "DoExchange", "descriptor": descriptor.to_json(), "token": client.token}
-            )
-            self._conn.recv_ctrl()
-            self._conn.send_data(encode_schema(schema))
+        opts = client._options(None)
+        opts = replace(opts, read_window=1) if opts is not None else CallOptions(read_window=1)
+        self._stream = client.do_exchange_stream(descriptor, schema, options=opts)
+        self._iter = iter(self._stream)
 
     def exchange(self, batch: RecordBatch) -> RecordBatch:
-        if self._conn is None:
-            return self._client._server.do_exchange_impl(self._descriptor, self._schema, batch)
-        self._conn.send_data(encode_batch(batch))
-        kind, meta, body = self._conn.recv_frame()
-        msg = decode_message(meta, body)
-        if msg.kind == "schema":
-            self._out_schema = msg.schema
-            kind, meta, body = self._conn.recv_frame()
-            msg = decode_message(meta, body)
-        return msg.batch(self._out_schema or self._schema)
+        self._stream.write_batch(batch)
+        out = next(self._iter, None)
+        if out is None:
+            raise FlightError("exchange stream ended before a response batch")
+        return out
 
     def close(self) -> None:
-        if self._conn is not None:
-            self._conn.send_data(encode_eos())
-            kind, meta, body = self._conn.recv_frame()  # server EOS
-            self._client._checkin(self._conn)
-            self._conn = None
+        self._stream.close()

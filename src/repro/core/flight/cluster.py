@@ -42,10 +42,12 @@ import numpy as np
 from ..recordbatch import RecordBatch, Table
 from ..schema import Schema
 from .client import FlightClient, run_staged_put
+from .exchange import as_exchange_descriptor
 from .protocol import (
     Action,
     ActionResult,
     CallOptions,
+    ExchangeCommand,
     FlightDescriptor,
     FlightEndpoint,
     FlightError,
@@ -189,6 +191,10 @@ class FlightClusterServer(FlightServerBase):
                     auth_token=auth_token,
                     batches_per_endpoint=batches_per_endpoint,
                     shard_id=i,
+                    # head and shards share one exchange-service registry, so
+                    # registering a transform once makes it reachable on
+                    # every endpoint a fanned-out exchange lands on
+                    services=self.services,
                 )
         self.shards = [
             shard_factory(i, f"{location_name}-shard{i}") for i in range(num_shards)
@@ -304,8 +310,9 @@ class FlightClusterServer(FlightServerBase):
 
     def do_get_impl(self, ticket: Ticket):
         cmd = ticket.command()
-        if isinstance(cmd, StagedPutCommand):
-            raise FlightInvalidArgument("staged-put commands are not redeemable via DoGet")
+        if isinstance(cmd, (StagedPutCommand, ExchangeCommand)):
+            raise FlightInvalidArgument(
+                f"{type(cmd).__name__} tickets are not redeemable via DoGet")
         sid = getattr(cmd, "shard", None)
         if sid is not None:
             if not 0 <= sid < self.num_shards:
@@ -614,6 +621,41 @@ class FlightClusterClient:
         columns/rows cross the wire — the paper's Fig 8 pushdown win on top
         of the Fig 2 parallel-stream topology."""
         return self.scheduler(**sched_overrides).fetch(self.query_info(plan))
+
+    # -- streaming exchange fan-out ---------------------------------------- #
+    def exchange(
+        self,
+        command,
+        batches: list[RecordBatch],
+        **sched_overrides,
+    ) -> tuple[Table, TransferStats]:
+        """Fan one transform exchange across the cluster's shard endpoints.
+
+        ``command`` names a registered ``ExchangeService`` (a service name
+        string, an ``ExchangeCommand``, or a full descriptor).  The batches
+        are split round-robin across the shards and each slice streams
+        through its shard's exchange concurrently (one pipelined stream per
+        endpoint — the paper's Fig 11 "throughput vs parallel streams"
+        topology applied to the microservice verb).  Returns the gathered
+        transformed table plus bidirectional transfer stats."""
+        if not batches:
+            raise FlightInvalidArgument(
+                "cluster exchange needs at least one input batch "
+                "(the input schema rides the first batch)")
+        descriptor = as_exchange_descriptor(command)
+        layout = json.loads(self.head.do_action(Action("shard-locations"))[0].body)
+        parts = RoundRobinPlacement().assign(batches, layout["num_shards"])
+        assignments = [
+            (self._pick_location(entry["locations"]), part)
+            for entry, part in zip(layout["shards"], parts) if part
+        ]
+        out_schema, outs, stats = self.scheduler(**sched_overrides).exchange(
+            descriptor, batches[0].schema, assignments)
+        if not outs:
+            from .scheduler import _empty_batch
+
+            outs = [_empty_batch(out_schema or batches[0].schema)]
+        return Table(outs), stats
 
     def write(
         self,

@@ -1,0 +1,674 @@
+"""Streaming bidirectional DoExchange — the pipelined microservice plane.
+
+The old exchange verb was lockstep: one batch up, wait, one batch back —
+every round trip idle in both directions.  This module replaces it with a
+*pipelined* stream modeled on the scheduler's window semantics:
+
+* **decoupled writer/reader** — a receive thread drains the connection
+  continuously (output batches into a bounded buffer, acks into the send
+  window), so writing and reading overlap instead of alternating;
+* **bounded in-flight window** — the writer blocks once ``window`` input
+  batches are unacknowledged.  The server acks batches as its service
+  *consumes* them (not as they hit the socket), so ``window=1`` degenerates
+  to the old lockstep behavior and larger windows keep both directions of
+  the pipe full without unbounded buffering anywhere;
+* **schema up front** — registry services declare their output schema from
+  the input schema, and the server sends it before any batch, so a
+  downstream consumer (the next server in a ``Pipeline``) can open its own
+  stream immediately.  Legacy per-batch handlers defer it to the first
+  output batch;
+* **typed mid-stream errors** — a server-side failure after the stream
+  opened arrives as a structured error control frame *inside* the data
+  stream; the receive thread rehydrates the typed ``FlightError`` and every
+  blocked writer/reader raises it.  The connection is torn down on both
+  sides (frames may be in flight in either direction), so an exchange error
+  never bleeds into a later RPC.
+
+Wire sequence (framing details in docs/wire-format.md, "DoExchange
+framing")::
+
+    client                                server
+    ctrl {method: DoExchange, ...}  →
+                                    ←  ctrl {ok}            (or typed refusal)
+    data SCHEMA                     →
+                                    ←  data SCHEMA          (declared services)
+    data BATCH *                    →
+                                    ←  ctrl {ack: n} *      (consumption acks)
+                                    ←  data BATCH *         (outputs, interleaved)
+    data EOS                        →
+                                    ←  data EOS
+                                    ←  ctrl {ok, stats}
+
+``Pipeline`` chains exchange streams across servers Mallard-style: stage
+N's output iterator feeds stage N+1's writer on a relay thread, so batches
+flow A→transform→B bounded by each link's window with no client-side
+materialization.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import deque
+from typing import Iterable, Iterator
+
+from ..ipc import decode_message, encode_batch, encode_eos, encode_schema
+from ..recordbatch import RecordBatch, Table
+from ..schema import Schema
+from .errors import (
+    FlightError,
+    FlightTimedOut,
+    FlightUnavailable,
+    error_from_wire,
+)
+from .protocol import CallOptions, ExchangeCommand, FlightDescriptor
+from .services import drive_exchange
+from .transport import KIND_CTRL
+
+DEFAULT_WINDOW = 16  # in-flight input batches per exchange stream
+
+
+def ack_interval(window: int) -> int:
+    """How many consumed batches between acks.  Must stay ≤ the window (a
+    blocked writer must always have a releasing ack on the way); half the
+    window halves the control-frame overhead while keeping the writer at
+    most half-drained before permits replenish."""
+    return max(1, window // 2)
+
+
+def resolve_window(options: CallOptions | None) -> int:
+    if options is not None and options.read_window:
+        return max(1, options.read_window)
+    return DEFAULT_WINDOW
+
+
+def as_exchange_descriptor(command) -> FlightDescriptor:
+    """Normalize a service name / ``ExchangeCommand`` / descriptor."""
+    if isinstance(command, FlightDescriptor):
+        return command
+    if isinstance(command, str):
+        command = ExchangeCommand(command)
+    return FlightDescriptor.for_command(command)
+
+
+_EOS = object()
+
+
+class ExchangeStreamBase:
+    """Shared reader/buffer/lifecycle machinery of both transports.
+
+    Public surface (both ``FlightExchangeStream`` and
+    ``InprocExchangeStream``): ``write_batch`` / ``write_batches`` /
+    ``done_writing`` feed the input side; iterating yields output batches;
+    ``feed(batches)`` runs the whole input side on a relay thread;
+    ``out_schema`` blocks until the server's schema frame arrives; ``stats``
+    holds the server's summary after the stream completes.
+
+    A stream is a resource: end it by iterating to completion, ``close()``,
+    ``abort()``, or a ``with`` block — an abandoned stream leaks its
+    connection (TCP) or worker thread (in-proc), like any unclosed file."""
+
+    def __init__(self, in_schema: Schema, window: int):
+        self.in_schema = in_schema
+        self.window = max(1, window)
+        self._cond = threading.Condition()
+        self._buf: deque = deque()
+        self._cap = max(2, self.window)
+        self._out_schema: Schema | None = None
+        self._err: Exception | None = None
+        self._eos_written = False
+        self._finished = False
+        self._disposed = False
+        self.stats: dict | None = None
+        self._feeder: threading.Thread | None = None
+
+    # -- input side ------------------------------------------------------- #
+    def write_batch(self, batch: RecordBatch) -> None:
+        raise NotImplementedError
+
+    def write_batches(self, batches: Iterable[RecordBatch]) -> None:
+        for b in batches:
+            self.write_batch(b)
+
+    def done_writing(self) -> None:
+        raise NotImplementedError
+
+    def __enter__(self) -> "ExchangeStreamBase":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        # a stream must always end via close()/abort()/full iteration —
+        # abandoning one leaks its connection (TCP) or worker thread
+        # (in-proc), like any unclosed resource
+        if exc_type is not None:
+            self.abort(exc)
+        else:
+            self.close()
+        return False
+
+    def feed(self, batches: Iterable[RecordBatch]) -> "ExchangeStreamBase":
+        """Write every batch then EOS on a background thread (the decoupled
+        writer), leaving the calling thread free to iterate outputs.  A
+        feeder failure aborts the stream, so the reader raises instead of
+        waiting forever."""
+
+        def run() -> None:
+            try:
+                self.write_batches(batches)
+                self.done_writing()
+            except Exception as e:  # noqa: BLE001 — relayed to the reader
+                self.abort(e)
+
+        self._feeder = threading.Thread(
+            target=run, daemon=True, name="flight-exchange-feed")
+        self._feeder.start()
+        return self
+
+    # -- output side ------------------------------------------------------ #
+    @property
+    def out_schema(self) -> Schema:
+        """The service's output schema; blocks until the schema frame lands
+        (immediately for registry services — it is sent up front)."""
+        with self._cond:
+            while (self._out_schema is None and self._err is None
+                   and not self._finished):
+                self._cond.wait(0.05)
+            if self._out_schema is not None:
+                return self._out_schema
+            if self._err is not None:
+                raise self._err
+            return self.in_schema  # legacy stream with zero outputs
+
+    schema = out_schema  # FlightStreamReader-compatible alias
+
+    def __iter__(self) -> Iterator[RecordBatch]:
+        while True:
+            item = self._next()
+            if item is _EOS:
+                self._wait_finished()
+                return
+            yield item
+
+    def _next(self):
+        with self._cond:
+            while True:
+                if self._buf:
+                    item = self._buf.popleft()
+                    self._cond.notify_all()
+                    return item
+                if self._err is not None:
+                    err = self._err
+                    break
+                if self._finished:
+                    return _EOS  # already drained (re-iteration safe)
+                self._cond.wait(0.05)
+        self._dispose()
+        raise err
+
+    def read_all(self) -> Table:
+        return Table(list(self))
+
+    def close(self) -> dict:
+        """Finish the call: drain remaining output, release the connection,
+        return the server's stats.  With an active ``feed`` thread the
+        feeder owns the input side — draining keeps acks flowing so it can
+        finish, and racing it with our own EOS would abort the stream."""
+        if self._feeder is not None:
+            for _ in self:
+                pass
+            self._feeder.join(timeout=5.0)
+            return self.stats or {}
+        if self._err is None and not self._eos_written:
+            self.done_writing()
+        for _ in self:
+            pass
+        return self.stats or {}
+
+    def abort(self, exc: Exception | None = None) -> None:
+        """Tear the stream down (feeder failure, consumer giving up)."""
+        if exc is None:
+            exc = FlightError("exchange aborted")
+        elif not isinstance(exc, FlightError):
+            exc = FlightError(f"exchange aborted: {exc}")
+        self._fail(exc)
+        self._dispose()
+
+    # -- internals -------------------------------------------------------- #
+    def _emit(self, item) -> None:
+        with self._cond:
+            while (len(self._buf) >= self._cap and self._err is None
+                   and not self._disposed):
+                self._cond.wait(0.05)
+            if self._err is not None or self._disposed:
+                return  # stream failed: drop, the error wins
+            self._buf.append(item)
+            self._cond.notify_all()
+
+    def _fail(self, exc: Exception) -> None:
+        with self._cond:
+            if self._err is None and not self._finished:
+                self._err = exc
+            self._cond.notify_all()
+
+    def _raise_if_failed(self) -> None:
+        with self._cond:
+            if self._err is not None:
+                raise self._err
+
+    def _wait_finished(self) -> None:
+        with self._cond:
+            while not self._finished and self._err is None:
+                self._cond.wait(0.05)
+            err = self._err
+        if err is not None:
+            self._dispose()
+            raise err
+        self._dispose()
+
+    def _dispose(self) -> None:
+        """Release transport resources exactly once (subclass hook)."""
+        with self._cond:
+            if self._disposed:
+                return
+            self._disposed = True
+            clean = self._finished and self._err is None
+            self._cond.notify_all()
+        self._release(clean)
+
+    def _release(self, clean: bool) -> None:
+        pass
+
+
+class FlightExchangeStream(ExchangeStreamBase):
+    """One pipelined DoExchange call over a TCP ``FrameConnection``.
+
+    Constructed by ``FlightClient.do_exchange_stream`` after the server's
+    ``ok`` frame; sends the input schema immediately.  The connection is
+    *pumped inline by whichever thread reads* (iterating the stream, or
+    blocking on ``out_schema``): each pump processes one incoming frame —
+    output batches, acks replenishing the writer's window, the up-front
+    schema, mid-stream typed errors, the trailing stats — so the hot read
+    path pays zero cross-thread handoffs (decoupling comes from running the
+    *writer* on the ``feed`` thread).  Consequence: a writer blocked on the
+    window is released by acks only while some thread reads — use ``feed``
+    + iterate (or the lockstep write/read alternation), never
+    write-everything-then-read with a window smaller than the input.
+    ``max_in_flight`` records the high-water mark of unacked input batches —
+    the window property tests pin it."""
+
+    def __init__(self, client, conn, in_schema: Schema,
+                 options: CallOptions | None):
+        super().__init__(in_schema, resolve_window(options))
+        self._client = client
+        self._conn = conn
+        self._options = options
+        self._sent = 0
+        self._acked = 0
+        self._recv_lock = threading.Lock()
+        self._pending: deque = deque()  # batches pumped by a non-reader thread
+        self._eos_seen = False
+        self.max_in_flight = 0
+        try:
+            conn.send_data(encode_schema(in_schema))
+        except (ConnectionError, OSError) as e:
+            conn.close()
+            raise FlightUnavailable(f"exchange open failed: {e}") from e
+
+    # -- inline pump: the reader side of the connection -------------------- #
+    def _pump_one(self) -> None:
+        """Process exactly one incoming frame (caller holds ``_recv_lock``)."""
+        kind, meta, body = self._conn.recv_frame()
+        if kind == KIND_CTRL:
+            if meta.get("error"):
+                raise error_from_wire(meta)  # typed mid-stream error
+            if "ack" in meta:
+                with self._cond:
+                    self._acked = max(self._acked, int(meta["ack"]))
+                    self._cond.notify_all()
+                return
+            if meta.get("ok"):  # trailing stats: stream complete
+                with self._cond:
+                    self.stats = meta.get("stats", {})
+                    self._finished = True
+                    self._acked = self._sent
+                    self._cond.notify_all()
+                return
+            return  # unknown control frame: ignore (forward compat)
+        msg = decode_message(meta, body)
+        if msg.kind == "schema":
+            with self._cond:
+                self._out_schema = msg.schema
+                self._cond.notify_all()
+            return
+        if msg.kind == "eos":
+            self._eos_seen = True
+            return
+        if self._out_schema is None:
+            raise FlightError("exchange: output batch before schema")
+        self._pending.append(msg.batch(self._out_schema))
+
+    def _pump_until(self, ready) -> None:
+        """Pump frames until ``ready()`` holds; any failure wakes writers."""
+        while not ready():
+            self._raise_if_failed()
+            with self._recv_lock:
+                if ready():  # another thread pumped it meanwhile
+                    return
+                try:
+                    self._pump_one()
+                except TimeoutError as e:
+                    err = FlightTimedOut(
+                        f"exchange stalled past the call timeout: {e}")
+                    self._fail(err)
+                except (ConnectionError, OSError) as e:
+                    self._fail(FlightUnavailable(f"exchange stream died: {e}"))
+                except FlightError as e:
+                    self._fail(e)
+            self._raise_if_failed()
+
+    def _next(self):
+        while True:
+            if self._pending:
+                return self._pending.popleft()
+            if self._eos_seen:
+                return _EOS
+            try:
+                self._pump_until(
+                    lambda: self._pending or self._eos_seen or self._finished)
+            except FlightError:
+                self._dispose()
+                raise
+            if self._finished and not self._pending:
+                return _EOS
+
+    @property
+    def out_schema(self) -> Schema:
+        try:
+            self._pump_until(
+                lambda: self._out_schema is not None or self._finished)
+        except FlightError:
+            self._dispose()
+            raise
+        with self._cond:
+            if self._out_schema is not None:
+                return self._out_schema
+            return self.in_schema  # legacy stream with zero outputs
+
+    schema = out_schema
+
+    def _wait_finished(self) -> None:
+        try:
+            self._pump_until(lambda: self._finished)
+        except FlightError:
+            self._dispose()
+            raise
+        self._dispose()
+
+    # -- windowed writer --------------------------------------------------- #
+    def _reserve(self, want: int) -> int:
+        """Block until ≥1 window permit is free; take up to ``want``."""
+        with self._cond:
+            while True:
+                if self._err is not None:
+                    raise self._err
+                if self._eos_written:
+                    raise FlightError("exchange input stream already closed")
+                free = self.window - (self._sent - self._acked)
+                if free >= 1:
+                    k = min(want, free)
+                    self._sent += k
+                    return k
+                self._cond.wait(0.05)
+
+    def _unreserve(self, k: int) -> None:
+        if k:
+            with self._cond:
+                self._sent -= k
+                self._cond.notify_all()
+
+    def _note_in_flight(self) -> None:
+        with self._cond:
+            self.max_in_flight = max(self.max_in_flight, self._sent - self._acked)
+
+    def write_batch(self, batch: RecordBatch) -> None:
+        if batch.schema != self.in_schema:
+            raise FlightError("batch schema mismatch on DoExchange stream")
+        self._reserve(1)
+        self._note_in_flight()
+        try:
+            self._conn.send_data(encode_batch(batch))
+        except TimeoutError as e:  # socket.timeout subclasses OSError: first
+            self._fail(FlightTimedOut(f"exchange send exceeded the call timeout: {e}"))
+            self._raise_if_failed()
+        except (ConnectionError, OSError) as e:
+            self._fail(FlightUnavailable(f"exchange send failed: {e}"))
+            self._raise_if_failed()
+
+    def write_batches(self, batches: Iterable[RecordBatch]) -> None:
+        """Windowed *and* coalesced: grab the free permits, send that many
+        frames in one ``sendmsg`` burst."""
+        it = iter(batches)
+        while True:
+            first = next(it, None)
+            if first is None:
+                return
+            k = self._reserve(self.window)
+            chunk = [first]
+            while len(chunk) < k:
+                nxt = next(it, None)
+                if nxt is None:
+                    break
+                chunk.append(nxt)
+            self._unreserve(k - len(chunk))  # iterator ran dry mid-grant
+            self._note_in_flight()
+            for b in chunk:
+                if b.schema != self.in_schema:
+                    self._unreserve(len(chunk))
+                    raise FlightError("batch schema mismatch on DoExchange stream")
+            try:
+                self._conn.send_data_many(encode_batch(b) for b in chunk)
+            except TimeoutError as e:
+                self._fail(FlightTimedOut(f"exchange send exceeded the call timeout: {e}"))
+                self._raise_if_failed()
+            except (ConnectionError, OSError) as e:
+                self._fail(FlightUnavailable(f"exchange send failed: {e}"))
+                self._raise_if_failed()
+
+    def done_writing(self) -> None:
+        with self._cond:
+            if self._eos_written:
+                return
+            self._eos_written = True
+        try:
+            self._conn.send_data(encode_eos())
+        except TimeoutError as e:
+            self._fail(FlightTimedOut(f"exchange send exceeded the call timeout: {e}"))
+            self._raise_if_failed()
+        except (ConnectionError, OSError) as e:
+            self._fail(FlightUnavailable(f"exchange send failed: {e}"))
+            self._raise_if_failed()
+
+    def _release(self, clean: bool) -> None:
+        if clean:
+            # stream completed in protocol order: the channel is reusable
+            self._client._reset_deadline(self._conn, self._options)
+            self._client._checkin(self._conn)
+        else:
+            # frames may be in flight in either direction: never pool
+            self._conn.close()
+
+
+class InprocExchangeStream(ExchangeStreamBase):
+    """The in-proc twin: a worker thread stands in for the peer server.
+
+    Runs through the *same* middleware stack and service registry as the
+    TCP path (auth middleware guards in-proc exchanges too, metrics count
+    them), with bounded queues standing in for the socket — the input
+    queue's bound is the window, so backpressure semantics match."""
+
+    def __init__(self, server, descriptor: FlightDescriptor, in_schema: Schema,
+                 token: str | None = None, options: CallOptions | None = None):
+        super().__init__(in_schema, resolve_window(options))
+        self._server = server
+        self._descriptor = descriptor
+        self._token = token
+        self._options = options
+        self._inq: queue.Queue = queue.Queue(maxsize=self.window)
+        self.max_in_flight = 0
+        self._ready = threading.Event()
+        self._worker = threading.Thread(
+            target=self._run, daemon=True, name="flight-exchange-inproc")
+        self._worker.start()
+        # TCP parity: auth/resolution failures refuse at open, not mid-read
+        self._ready.wait()
+        self._raise_if_failed()
+
+    def _run(self) -> None:
+        srv = self._server
+        req = {
+            "method": "DoExchange",
+            "descriptor": self._descriptor.to_json(),
+            "token": self._token,
+            "options": self._options.to_json() if self._options else {},
+        }
+        state = {"in": 0, "rows_in": 0, "out": 0, "rows_out": 0}
+
+        def inputs() -> Iterator[RecordBatch]:
+            while True:
+                try:
+                    item = self._inq.get(timeout=0.1)
+                except queue.Empty:
+                    # backstop against an abandoned stream: once the client
+                    # disposed (or failed) and the queue drained, no _EOS is
+                    # coming — exit instead of leaking this thread forever
+                    if self._disposed or self._err is not None:
+                        return
+                    continue
+                if item is _EOS:
+                    return
+                state["in"] += 1
+                state["rows_in"] += item.num_rows
+                yield item
+
+        def declare(s: Schema) -> None:
+            with self._cond:
+                self._out_schema = s
+                self._cond.notify_all()
+
+        try:
+            with srv.middleware.wrap(srv._call_context("DoExchange", req)):
+                service, params = srv.resolve_exchange(self._descriptor)
+                service.check_params(params)  # pre-open refusal, like TCP
+                self._ready.set()
+                drive_exchange(service, self.in_schema, params, inputs(),
+                               declare=declare, emit=self._emit, state=state)
+            with self._cond:
+                self.stats = {
+                    "service": service.name,
+                    "batches_in": state["in"],
+                    "rows_in": state["rows_in"],
+                    "batches_out": state["out"],
+                    "rows_out": state["rows_out"],
+                }
+                self._finished = True
+                self._cond.notify_all()
+            self._emit(_EOS)
+        except FlightError as e:
+            self._fail(e)
+        except Exception as e:  # service bug: surface as a typed error
+            self._fail(FlightError(f"exchange failed: {e}"))
+        finally:
+            self._ready.set()
+
+    def write_batch(self, batch: RecordBatch) -> None:
+        if batch.schema != self.in_schema:
+            raise FlightError("batch schema mismatch on DoExchange stream")
+        self._put(batch)
+
+    def done_writing(self) -> None:
+        with self._cond:
+            if self._eos_written:
+                return
+            self._eos_written = True
+        self._put(_EOS)
+
+    def _put(self, item) -> None:
+        while True:
+            self._raise_if_failed()
+            try:
+                self._inq.put(item, timeout=0.05)
+                self.max_in_flight = max(self.max_in_flight, self._inq.qsize())
+                return
+            except queue.Full:
+                continue
+
+    def _release(self, clean: bool) -> None:
+        if not clean:
+            # wake a worker blocked on input it will never receive: drop
+            # whatever the feeder queued, then deliver the poison pill (the
+            # worker's own 0.1 s disposal poll is the backstop if a racing
+            # feeder put lands after this drain)
+            while True:
+                try:
+                    self._inq.get_nowait()
+                except queue.Empty:
+                    break
+            try:
+                self._inq.put_nowait(_EOS)
+            except queue.Full:
+                pass
+
+
+def open_exchange(client, command, schema: Schema,
+                  batches: Iterable[RecordBatch] | None = None,
+                  options: CallOptions | None = None):
+    """One-call exchange: open the stream for ``command`` (a service name,
+    ``ExchangeCommand`` or descriptor) and, when ``batches`` is given, feed
+    them on a relay thread.  Iterate the returned stream for the outputs."""
+    stream = client.do_exchange_stream(
+        as_exchange_descriptor(command), schema, options=options)
+    if batches is not None:
+        stream.feed(batches)
+    return stream
+
+
+class Pipeline:
+    """Chained cross-server exchanges (Mallard's server→server pipelines).
+
+    ``stages`` is a list of ``(client, command)`` pairs — each client a
+    ``FlightClient`` (TCP or in-proc), each command a service name,
+    ``ExchangeCommand`` or full descriptor.  ``run`` opens stage 1, feeds it
+    from the source iterator on a relay thread, and as soon as its output
+    schema frame arrives opens stage 2 fed by stage 1's output iterator,
+    and so on: batches flow A→transform→B link by link, each link bounded
+    by its own in-flight window — the pipeline never materializes a
+    dataset client-side.  A failure anywhere aborts every downstream link
+    and the final reader raises the original typed error."""
+
+    def __init__(self, stages, options: CallOptions | None = None):
+        if not stages:
+            raise FlightError("pipeline needs at least one stage")
+        self._stages = [(client, as_exchange_descriptor(cmd))
+                        for client, cmd in stages]
+        self._options = options
+        self.streams: list[ExchangeStreamBase] = []
+
+    def run(self, schema: Schema, batches: Iterable[RecordBatch]):
+        """Start every link; returns the last stage's stream (iterate it)."""
+        self.streams = []
+        it: Iterable[RecordBatch] = batches
+        cur_schema = schema
+        for client, desc in self._stages:
+            stream = client.do_exchange_stream(desc, cur_schema,
+                                               options=self._options)
+            stream.feed(it)
+            self.streams.append(stream)
+            cur_schema = stream.out_schema  # blocks until the frame lands
+            it = iter(stream)
+        return self.streams[-1]
+
+    def run_all(self, schema: Schema, batches: Iterable[RecordBatch]) -> Table:
+        return self.run(schema, batches).read_all()
+
+    def stats(self) -> list[dict]:
+        """Per-stage server stats (available once the run completes)."""
+        return [s.stats or {} for s in self.streams]

@@ -28,6 +28,27 @@ from typing import Callable
 from .errors import FlightError, FlightUnauthenticated
 
 
+def _exchange_service_label(request: dict) -> str:
+    """Which exchange service a DoExchange request names (metrics key).
+
+    Best-effort: a label must never fail the call, so malformed descriptors
+    degrade to ``"?"`` (the serve path rejects them with a typed error)."""
+    d = request.get("descriptor") or {}
+    path = d.get("path")
+    if path:
+        return "path:" + "/".join(path)
+    raw = d.get("command")
+    if raw:
+        from .protocol import ExchangeCommand, parse_command  # lazy: keeps import light
+
+        try:
+            cmd = parse_command(raw.encode("latin1") if isinstance(raw, str) else raw)
+        except Exception:
+            return "?"
+        return cmd.service if isinstance(cmd, ExchangeCommand) else type(cmd).__name__
+    return "?"
+
+
 @dataclass
 class CallContext:
     """What middleware sees about one RPC."""
@@ -102,7 +123,13 @@ class MetricsMiddleware(ServerMiddleware):
         self.errors: dict[str, int] = {}
         self.seconds: dict[str, float] = {}
         self.actions: dict[str, int] = {}  # DoAction broken out by type
+        # DoExchange broken out by service: call/error/latency per transform
+        self.exchanges: dict[str, dict] = {}
         self._lock = threading.Lock()
+
+    def _exchange_entry(self, label: str) -> dict:
+        return self.exchanges.setdefault(
+            label, {"calls": 0, "errors": 0, "seconds": 0.0})
 
     def on_call(self, ctx: CallContext) -> None:
         ctx.state["metrics_t0"] = time.perf_counter()
@@ -111,6 +138,10 @@ class MetricsMiddleware(ServerMiddleware):
             if ctx.method == "DoAction":
                 kind = (ctx.request.get("action") or {}).get("type", "?")
                 self.actions[kind] = self.actions.get(kind, 0) + 1
+            elif ctx.method == "DoExchange":
+                label = _exchange_service_label(ctx.request)
+                ctx.state["metrics_exchange"] = label
+                self._exchange_entry(label)["calls"] += 1
 
     def on_complete(self, ctx: CallContext, error: Exception | None) -> None:
         dt = time.perf_counter() - ctx.state.get("metrics_t0", time.perf_counter())
@@ -118,6 +149,12 @@ class MetricsMiddleware(ServerMiddleware):
             self.seconds[ctx.method] = self.seconds.get(ctx.method, 0.0) + dt
             if error is not None:
                 self.errors[ctx.method] = self.errors.get(ctx.method, 0) + 1
+            label = ctx.state.get("metrics_exchange")
+            if label is not None:
+                e = self._exchange_entry(label)
+                e["seconds"] += dt
+                if error is not None:
+                    e["errors"] += 1
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -126,6 +163,10 @@ class MetricsMiddleware(ServerMiddleware):
                 "errors": dict(self.errors),
                 "seconds": {k: round(v, 6) for k, v in self.seconds.items()},
                 "actions": dict(self.actions),
+                "exchanges": {
+                    k: {**v, "seconds": round(v["seconds"], 6)}
+                    for k, v in self.exchanges.items()
+                },
             }
 
 

@@ -20,7 +20,11 @@ layer down):
   message: the ``stage`` phase rides a DoPut descriptor (payload lands
   staged, invisible to readers), while ``commit``/``abort`` bytes are the
   bodies of the ``txn-commit``/``txn-abort`` DoAction verbs that flip all
-  staged data visible atomically or discard it (see docs/wire-format.md).
+  staged data visible atomically or discard it (see docs/wire-format.md);
+* ``ExchangeCommand``   — names a registered streaming-exchange transform
+  service (``core/flight/services.py``) plus its per-call params; carried by
+  a DoExchange descriptor, it routes the bidirectional stream through the
+  server's ``ExchangeServiceRegistry``.
 
 ``parse_command`` also accepts the two legacy JSON encodings (range-ticket
 dicts and bare ``QueryPlan`` JSON) so pre-redesign tickets keep redeeming;
@@ -57,7 +61,7 @@ from .errors import (  # noqa: F401  (re-exported: historical home of the errors
 COMMAND_MAGIC = 0xC2  # first byte of every binary command (JSON starts with '{')
 COMMAND_VERSION = 1
 
-_CMD_RANGE, _CMD_QUERY, _CMD_STAGED_PUT = 1, 2, 3
+_CMD_RANGE, _CMD_QUERY, _CMD_STAGED_PUT, _CMD_EXCHANGE = 1, 2, 3, 4
 _HEAD = struct.Struct("<BBB")        # magic, version, type
 _U16, _U32 = struct.Struct("<H"), struct.Struct("<I")
 _RANGE_TAIL = struct.Struct("<qqi")  # start, stop, shard (-1 = none)
@@ -185,7 +189,49 @@ class StagedPutCommand:
         return {"dataset": self.dataset, "txn_id": self.txn_id, "phase": self.phase}
 
 
-Command = Union[RangeReadCommand, QueryCommand, StagedPutCommand]
+@dataclass(frozen=True)
+class ExchangeCommand:
+    """Names a streaming-exchange transform service + its per-call params.
+
+    Carried by a ``DoExchange`` descriptor; the server resolves ``service``
+    in its ``ExchangeServiceRegistry`` (services.py) and runs the
+    bidirectional stream through it.  ``params_bytes`` is a JSON object
+    (``b""`` = no params) — kept as bytes so the command round-trips
+    byte-exact and params stay opaque to the control plane."""
+
+    service: str
+    params_bytes: bytes = b""
+
+    @classmethod
+    def for_service(cls, service: str, **params: Any) -> "ExchangeCommand":
+        return cls(service,
+                   json.dumps(params, sort_keys=True).encode() if params else b"")
+
+    @property
+    def params(self) -> dict:
+        if not self.params_bytes:
+            return {}
+        try:
+            o = json.loads(self.params_bytes.decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise FlightInvalidArgument(f"unparseable exchange params: {e}") from e
+        if not isinstance(o, dict):
+            raise FlightInvalidArgument("exchange params must be a JSON object")
+        return o
+
+    def to_bytes(self) -> bytes:
+        return (
+            _HEAD.pack(COMMAND_MAGIC, COMMAND_VERSION, _CMD_EXCHANGE)
+            + _pack_str(self.service)
+            + _U32.pack(len(self.params_bytes))
+            + self.params_bytes
+        )
+
+    def to_dict(self) -> dict:
+        return {"service": self.service, "params": self.params}
+
+
+Command = Union[RangeReadCommand, QueryCommand, StagedPutCommand, ExchangeCommand]
 
 
 def parse_command(raw: bytes) -> Command:
@@ -223,6 +269,13 @@ def parse_command(raw: bytes) -> Command:
                         f"unknown staged-put phase byte {phase_byte}",
                         detail={"phase": phase_byte})
                 return StagedPutCommand(dataset, txn_id, _STAGED_PHASES[phase_byte])
+            if kind == _CMD_EXCHANGE:
+                service, pos = _unpack_str(raw, pos)
+                (n,) = _U32.unpack_from(raw, pos)
+                pos += _U32.size
+                if pos + n > len(raw):
+                    raise FlightInvalidArgument("truncated command: params run past buffer")
+                return ExchangeCommand(service, raw[pos : pos + n])
             raise FlightInvalidArgument(f"unknown command type {kind}", detail={"type": kind})
         except (struct.error, IndexError, UnicodeDecodeError) as e:
             # truncated/garbled binary must surface as a typed refusal, not
@@ -261,7 +314,9 @@ class CallOptions:
     * ``wire_codec``  — IPC metadata codec for this call's data stream
       ("binary"/"json"); the server re-encodes instead of using its default.
     * ``coalesce``    — override the server's frame-coalescing choice.
-    * ``read_window`` — per-stream backpressure window for scheduler reads.
+    * ``read_window`` — per-stream backpressure window: scheduler reads use
+      it client-side, and streaming DoExchange sends it to the server too
+      (bounding the server's input queue and ack granularity — exchange.py).
     * ``headers``     — opaque key/values surfaced to server middleware.
     """
 
@@ -277,6 +332,8 @@ class CallOptions:
             o["wire_codec"] = self.wire_codec
         if self.coalesce is not None:
             o["coalesce"] = self.coalesce
+        if self.read_window is not None:
+            o["read_window"] = self.read_window
         if self.headers:
             o["headers"] = dict(self.headers)
         return o

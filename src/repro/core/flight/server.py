@@ -58,6 +58,21 @@ Transactional staged DoPut (the two-phase cluster write protocol):
   readable and stops holding memory after ``stage_ttl`` seconds;
 * ``server-stats`` surfaces ``staged_bytes`` / ``staged_txns`` /
   ``txn_commits`` / ``txn_aborts`` / ``txn_gc_reaped``.
+
+Streaming DoExchange (the microservice plane — exchange.py / services.py):
+
+* descriptors carrying an ``ExchangeCommand`` route the bidirectional
+  stream through the server's ``ExchangeServiceRegistry`` (``services``
+  attr; stock echo/filter/project/repartition plus registered callables);
+  path descriptors keep the legacy per-batch ``do_exchange_impl`` hook;
+* the serve loop (``_run_exchange``) is pipelined: output frames buffer
+  and **flush when a read would block** (coalesced sendmsg bursts without
+  starving a lockstep peer), and consumption acks ride the output
+  direction so the client's bounded in-flight window provides
+  backpressure — see docs/wire-format.md ("DoExchange framing");
+* mid-stream failures are sent as typed error control frames the client
+  rehydrates, then the connection is torn down (frames may be in flight
+  in both directions — an exchange error never bleeds into a later RPC).
 """
 from __future__ import annotations
 
@@ -82,7 +97,12 @@ from ..ipc import (
 )
 from ..recordbatch import RecordBatch
 from ..schema import Schema
-from .errors import FlightError, FlightInvalidArgument, FlightNotFound, FlightUnauthenticated
+from .errors import (
+    FlightError,
+    FlightInvalidArgument,
+    FlightNotFound,
+    FlightUnauthenticated,
+)
 from .middleware import (
     AuthTokenMiddleware,
     CallContext,
@@ -93,6 +113,7 @@ from .middleware import (
 from .protocol import (
     Action,
     ActionResult,
+    ExchangeCommand,
     FlightDescriptor,
     FlightEndpoint,
     FlightInfo,
@@ -103,7 +124,15 @@ from .protocol import (
     Ticket,
     parse_command,
 )
-from .transport import KIND_CTRL, KIND_DATA, FrameConnection, SocketListener
+from .exchange import DEFAULT_WINDOW, ack_interval
+from .services import ExchangeService, ExchangeServiceRegistry, drive_exchange
+from .transport import (
+    COALESCE_BYTES,
+    KIND_CTRL,
+    KIND_DATA,
+    FrameConnection,
+    SocketListener,
+)
 
 _PUT_DEDUP_WINDOW = 32   # recent content hashes remembered per dataset
 _TXN_FINISH_WINDOW = 64  # recent committed/aborted txn ids (idempotency)
@@ -144,6 +173,26 @@ class _StagedTxn:
     prepared: bool = False
 
 
+class _LegacyExchangeService(ExchangeService):
+    """Adapter: path exchange descriptors run ``do_exchange_impl`` per batch.
+
+    The output schema is whatever the handler returns, so it cannot be
+    declared up front — ``out_schema`` returns ``None`` and the serve loop
+    defers the schema frame to the first output batch."""
+
+    def __init__(self, server: "FlightServerBase", descriptor: FlightDescriptor):
+        self._server = server
+        self._descriptor = descriptor
+        self.name = descriptor.key
+
+    def out_schema(self, in_schema, params):
+        return None  # deferred: sent with the first output batch
+
+    def transform(self, in_schema, batches, params):
+        for b in batches:
+            yield self._server.do_exchange_impl(self._descriptor, in_schema, b)
+
+
 class FlightServerBase:
     """Override the ``*_impl`` handlers to build a service."""
 
@@ -155,12 +204,16 @@ class FlightServerBase:
         wire_codec: str = DEFAULT_CODEC,
         coalesce: bool = True,
         middleware: Iterable[ServerMiddleware] | None = None,
+        services: ExchangeServiceRegistry | None = None,
     ):
         self.location_name = location_name
         self.auth_token = auth_token
         self.wire_codec = wire_codec
         self.coalesce = coalesce
         self.encode_calls = 0  # encode_batch invocations on the DoGet path
+        # named streaming-exchange transforms (services.py); a shared
+        # registry object makes one `register` visible on many servers
+        self.services = services if services is not None else ExchangeServiceRegistry()
         self._listener: SocketListener | None = None
         stack: list[ServerMiddleware] = list(middleware or [])
         if auth_token is not None and not any(
@@ -200,7 +253,10 @@ class FlightServerBase:
     def do_exchange_impl(
         self, descriptor: FlightDescriptor, schema: Schema, batch: RecordBatch
     ) -> RecordBatch:
-        """Per-batch bidirectional handler (scoring microservice pattern)."""
+        """Per-batch handler for *path* exchange descriptors (the original
+        scoring-microservice hook).  Command descriptors carrying an
+        ``ExchangeCommand`` route through ``self.services`` instead — see
+        ``resolve_exchange``."""
         raise NotImplementedError
 
     # -- locations -------------------------------------------------------- #
@@ -265,7 +321,8 @@ class FlightServerBase:
                     elif method == "DoPut":
                         self._serve_do_put(conn, FlightDescriptor.from_json(req["descriptor"]))
                     elif method == "DoExchange":
-                        self._serve_do_exchange(conn, FlightDescriptor.from_json(req["descriptor"]))
+                        self._serve_do_exchange(
+                            conn, FlightDescriptor.from_json(req["descriptor"]), opts)
                     elif method == "Handshake":
                         conn.send_ctrl({"ok": True})
                     else:
@@ -338,25 +395,147 @@ class FlightServerBase:
         stats = self.do_put_impl(descriptor, schema, batches)
         conn.send_ctrl({"ok": True, "stats": stats})
 
-    def _serve_do_exchange(self, conn: FrameConnection, descriptor: FlightDescriptor) -> None:
+    # -- streaming DoExchange (the microservice plane; see exchange.py) ---- #
+    def resolve_exchange(self, descriptor: FlightDescriptor) -> tuple[ExchangeService, dict]:
+        """Which transform serves this exchange descriptor.
+
+        ``ExchangeCommand`` descriptors route through the ``services``
+        registry (unknown names are a typed ``FlightNotFound`` refused
+        before the stream opens); path descriptors keep the legacy
+        per-batch ``do_exchange_impl`` semantics via an adapter."""
+        if descriptor.command is not None:
+            cmd = descriptor.parsed_command()
+            if isinstance(cmd, ExchangeCommand):
+                return self.services.get(cmd.service), cmd.params
+            raise FlightInvalidArgument(
+                f"DoExchange takes an ExchangeCommand or path descriptor, "
+                f"not {type(cmd).__name__}")
+        return _LegacyExchangeService(self, descriptor), {}
+
+    def _serve_do_exchange(self, conn: FrameConnection, descriptor: FlightDescriptor,
+                           opts: dict | None = None) -> None:
+        opts = opts or {}
+        codec = opts.get("wire_codec") or self.wire_codec
+        if codec not in (CODEC_BINARY, CODEC_JSON):
+            raise FlightInvalidArgument(f"unknown wire codec {codec!r}",
+                                        detail={"wire_codec": codec})
+        coalesce = self.coalesce if opts.get("coalesce") is None else opts["coalesce"]
+        window = max(1, int(opts.get("read_window") or DEFAULT_WINDOW))
+        # service resolution and param validation failures (unknown name,
+        # malformed command, malformed params) refuse *before* the ok frame:
+        # the client has not started streaming and the channel stays clean.
+        # Schema-dependent validation (project's unknown-column check) needs
+        # the input schema and surfaces as a typed mid-stream error instead
+        service, params = self.resolve_exchange(descriptor)
+        service.check_params(params)
         conn.send_ctrl({"ok": True})
+        try:
+            self._run_exchange(conn, service, params, codec, coalesce, window)
+        except (ConnectionError, OSError):
+            raise  # peer died: nothing to report, nobody to report it to
+        except Exception as e:
+            # mid-stream failure: input frames may still be in flight, so
+            # the channel cannot be reused — send the typed error as a
+            # control frame (the client rehydrates it mid-read) and tear
+            # the connection down.  Non-Flight exceptions (a service
+            # callable bug) surface as the base typed error, matching the
+            # inproc path, instead of killing the handler thread raw
+            err = e if isinstance(e, FlightError) else FlightError(f"exchange failed: {e}")
+            try:
+                conn.send_ctrl(err.to_wire())
+            except (ConnectionError, OSError):
+                pass
+            conn.close()
+            raise ConnectionError(f"exchange aborted: {err}") from e
+
+    def _run_exchange(self, conn: FrameConnection, service: ExchangeService,
+                      params: dict, codec: str, coalesce: bool, window: int) -> None:
+        """The pipelined exchange loop, single-threaded by design.
+
+        The serve thread alternates between pulling input frames (as the
+        service consumes them) and emitting output frames; pipelining comes
+        from *buffering with flush-before-block*: encoded output frames
+        accumulate while more input is already waiting (one coalesced
+        ``sendmsg`` per ~budget), and flush the moment a read would block —
+        so a lockstep (window=1) peer always sees its response before the
+        server waits for its next batch, while a windowed peer gets
+        syscall-amortized bursts.  Backpressure is the client-side window:
+        the server acks batches as the service consumes them (``{"ack": n}``
+        control frames riding the output direction), and the client writer
+        blocks once ``window`` batches are unacked — so at most ``window``
+        batches are ever queued in the socket, and a serial server never
+        needs its own input queue."""
         kind, meta, body = conn.recv_frame()
+        if kind != KIND_DATA:
+            raise FlightInvalidArgument("exchange: expected a schema data frame first")
         msg = decode_message(meta, body)
         if msg.kind != "schema":
-            raise FlightError("exchange: expected schema first")
+            raise FlightInvalidArgument(
+                f"exchange: expected schema first, got {msg.kind!r}")
         in_schema = msg.schema
-        out_schema_sent = False
-        while True:
-            k, m, b = conn.recv_frame()
-            dm = decode_message(m, b)
-            if dm.kind == "eos":
-                conn.send_data(encode_eos(self.wire_codec))
+        state = {"in": 0, "acked": 0, "rows_in": 0, "out": 0, "rows_out": 0}
+        every = ack_interval(window)
+        pending: list[EncodedMessage] = []
+        pending_bytes = 0
+
+        def flush() -> None:
+            nonlocal pending, pending_bytes
+            if not pending:
                 return
-            out = self.do_exchange_impl(descriptor, in_schema, dm.batch(in_schema))
-            if not out_schema_sent:
-                conn.send_data(encode_schema(out.schema))
-                out_schema_sent = True
-            conn.send_data(encode_batch(out, self.wire_codec))
+            if coalesce and len(pending) > 1:
+                conn.send_data_many(pending)
+            else:
+                for f in pending:
+                    conn.send_data(f)
+            pending = []
+            pending_bytes = 0
+
+        def emit(frame: EncodedMessage) -> None:
+            nonlocal pending_bytes
+            pending.append(frame)
+            pending_bytes += frame.nbytes()
+            if not coalesce or pending_bytes >= COALESCE_BYTES:
+                flush()
+
+        def inputs() -> Iterator[RecordBatch]:
+            while True:
+                if not conn.receive_ready():
+                    flush()  # about to block on the peer: let it see progress
+                k, m, b = conn.recv_frame()
+                if k != KIND_DATA:
+                    raise FlightInvalidArgument(
+                        "exchange: unexpected control frame in the input stream")
+                dm = decode_message(m, b)
+                if dm.kind == "eos":
+                    if state["acked"] != state["in"]:  # final ack frees the writer
+                        conn.send_ctrl({"ack": state["in"]})
+                        state["acked"] = state["in"]
+                    return
+                if dm.kind == "schema":
+                    raise FlightInvalidArgument("exchange: duplicate schema mid-stream")
+                state["in"] += 1
+                state["rows_in"] += dm.batch_meta.rows
+                if state["in"] - state["acked"] >= every:
+                    conn.send_ctrl({"ack": state["in"]})
+                    state["acked"] = state["in"]
+                yield dm.batch(in_schema)
+
+        # `declare` sends directly: it only ever runs with nothing pending
+        # (up front, or immediately before the first output batch), so the
+        # schema frame is never held back by the coalescing buffer
+        drive_exchange(
+            service, in_schema, params, inputs(),
+            declare=lambda s: conn.send_data(encode_schema(s)),
+            emit=lambda ob: emit(encode_batch(ob, codec)),
+            state=state,
+        )
+        emit(encode_eos(codec))
+        flush()
+        conn.send_ctrl({"ok": True, "stats": {
+            "service": service.name,
+            "batches_in": state["in"], "rows_in": state["rows_in"],
+            "batches_out": state["out"], "rows_out": state["rows_out"],
+        }})
 
 
 def _content_digest(schema: Schema, batches: list[RecordBatch]) -> str:
@@ -390,9 +569,10 @@ class InMemoryFlightServer(FlightServerBase):
         dedup_puts: bool = True,
         stage_ttl: float = 60.0,
         middleware: Iterable[ServerMiddleware] | None = None,
+        services: ExchangeServiceRegistry | None = None,
     ):
         super().__init__(location_name, auth_token, wire_codec=wire_codec,
-                         coalesce=coalesce, middleware=middleware)
+                         coalesce=coalesce, middleware=middleware, services=services)
         self._store: dict[str, list[RecordBatch]] = {}
         self._schemas: dict[str, Schema] = {}
         self._lock = threading.Lock()
@@ -536,8 +716,9 @@ class InMemoryFlightServer(FlightServerBase):
         cmd = ticket.command()
         if isinstance(cmd, QueryCommand):
             return self._execute_query(cmd)
-        if isinstance(cmd, StagedPutCommand):
-            raise FlightInvalidArgument("staged-put commands are not redeemable via DoGet")
+        if isinstance(cmd, (StagedPutCommand, ExchangeCommand)):
+            raise FlightInvalidArgument(
+                f"{type(cmd).__name__} tickets are not redeemable via DoGet")
         name = cmd.dataset
         with self._lock:
             if name not in self._store:

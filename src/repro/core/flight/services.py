@@ -1,0 +1,279 @@
+"""Exchange transform services — the microservice side of DoExchange.
+
+The paper's third pillar treats Flight not just as a transport but as the
+substrate for *data microservices*: a client streams RecordBatches in, the
+service streams transformed RecordBatches back, and both directions run
+concurrently.  This module supplies the server-side plumbing for that
+pattern (the streaming wire protocol itself lives in exchange.py / server.py):
+
+* ``ExchangeService`` — one named transform.  ``out_schema`` declares the
+  output schema from the input schema *before any batch arrives* (the wire
+  protocol sends the output schema up front, so a downstream consumer —
+  including the next server in a chained ``Pipeline`` — can open its own
+  stream immediately), and ``transform`` is a generator over the input
+  batches, so services are free to be non-1:1 (filter drops, repartition
+  re-chunks).
+* ``ExchangeServiceRegistry`` — name → service, the fal-teller provider
+  pattern: a ``DoExchange`` descriptor carrying ``ExchangeCommand(name,
+  params)`` (protocol.py, 0xC2 type 4) routes the stream through the
+  registered service.  Unknown names are a typed ``FlightNotFound`` refused
+  before the stream opens.
+* stock services — ``echo``, ``filter`` (query-engine ``Expr`` predicate),
+  ``project`` (column subset), ``repartition`` (re-chunk to a row target);
+  plus ``MapBatchesService``/``ScoreService`` wrappers for server-side
+  callables (a scoring model can't ride the wire, so those are registered
+  at server construction, not named in params).
+
+Every service sees only ``(in_schema, batches, params)`` — no transport,
+no connection — so the same instance serves TCP and in-proc exchanges and
+can be unit-tested with plain lists.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator
+
+from ..recordbatch import RecordBatch, Table
+from ..schema import Schema
+from .errors import FlightError, FlightInvalidArgument, FlightNotFound
+
+
+class ExchangeService:
+    """One named bidirectional transform.  Subclass and register.
+
+    ``transform`` runs with the input stream still arriving — yield early,
+    yield often: every batch yielded before the input EOS overlaps with the
+    client still writing (that concurrency is the paper's "half the cores"
+    claim for DoExchange microservices)."""
+
+    name = "?"
+
+    def check_params(self, params: dict) -> None:
+        """Validate schema-independent params; raise ``FlightInvalidArgument``.
+
+        Runs *before the stream opens* on every transport (TCP refuses
+        before the ok frame, keeping the channel clean and poolable), so
+        malformed params never cost a torn-down connection.  Checks that
+        need the input schema (e.g. project's unknown-column check) belong
+        in ``out_schema`` and surface as typed mid-stream errors."""
+
+    def out_schema(self, in_schema: Schema, params: dict) -> Schema | None:
+        """Output schema, declared before any batch arrives (sent up-front).
+
+        Return ``None`` when the schema genuinely cannot be known until the
+        first output batch exists — the serve loop then defers the schema
+        frame to that batch (chained consumers stall until it lands)."""
+        return in_schema
+
+    def transform(
+        self, in_schema: Schema, batches: Iterator[RecordBatch], params: dict
+    ) -> Iterator[RecordBatch]:
+        raise NotImplementedError
+
+
+class EchoService(ExchangeService):
+    """Identity — the wire-speed baseline every benchmark measures against."""
+
+    name = "echo"
+
+    def transform(self, in_schema, batches, params):
+        yield from batches
+
+
+class FilterService(ExchangeService):
+    """Row filter by a query-engine predicate.
+
+    ``params = {"predicate": Expr.to_json()}`` — the same expression tree
+    the QueryCommand pushdown path executes, so a filter exchange and a
+    filtered DoGet select identical rows.  Batches with no surviving rows
+    are dropped (non-1:1: the ack channel, not output count, drives the
+    sender's window)."""
+
+    name = "filter"
+
+    def _predicate(self, params: dict):
+        from ...query.expr import Expr  # lazy: query imports flight's service layer
+
+        if "predicate" not in params:
+            raise FlightInvalidArgument("filter service needs a 'predicate' param")
+        return Expr.from_json(params["predicate"])
+
+    def check_params(self, params):
+        self._predicate(params)
+
+    def out_schema(self, in_schema, params):
+        return in_schema
+
+    def transform(self, in_schema, batches, params):
+        from ...query.expr import evaluate
+
+        pred = self._predicate(params)
+        for b in batches:
+            mask = evaluate(pred, b)
+            if mask.any():
+                yield b if mask.all() else b.filter(mask)
+
+
+class ProjectService(ExchangeService):
+    """Column subset: ``params = {"columns": [...]}`` (zero-copy select)."""
+
+    name = "project"
+
+    def _columns(self, params: dict) -> list[str]:
+        cols = params.get("columns")
+        if not cols or not isinstance(cols, list):
+            raise FlightInvalidArgument("project service needs a 'columns' list param")
+        return cols
+
+    def check_params(self, params):
+        self._columns(params)
+
+    def out_schema(self, in_schema, params):
+        cols = self._columns(params)
+        missing = [c for c in cols if c not in in_schema.names]
+        if missing:
+            raise FlightInvalidArgument(f"project: unknown column(s) {missing}",
+                                        detail={"missing": missing})
+        return in_schema.select(cols)
+
+    def transform(self, in_schema, batches, params):
+        cols = self._columns(params)
+        for b in batches:
+            yield b.select(cols)
+
+
+class RepartitionService(ExchangeService):
+    """Re-chunk the stream to ``params["rows"]`` rows per output batch.
+
+    Deliberately non-1:1 in both directions (N small inputs → one output,
+    one large input → N outputs): the regression test for the windowed
+    sender never deadlocking on a consumer that buffers before emitting."""
+
+    name = "repartition"
+
+    def _rows(self, params: dict) -> int:
+        rows = params.get("rows")
+        if not isinstance(rows, int) or rows < 1:
+            raise FlightInvalidArgument("repartition service needs a positive 'rows' param")
+        return rows
+
+    def check_params(self, params):
+        self._rows(params)
+
+    def out_schema(self, in_schema, params):
+        return in_schema
+
+    def transform(self, in_schema, batches, params):
+        rows = self._rows(params)
+        held: list[RecordBatch] = []
+        held_rows = 0
+        for b in batches:
+            held.append(b)
+            held_rows += b.num_rows
+            while held_rows >= rows:
+                merged = held[0] if len(held) == 1 else Table(held).combine()
+                yield merged.slice(0, rows)
+                rest = merged.slice(rows)
+                held = [rest] if rest.num_rows else []
+                held_rows = rest.num_rows
+        if held_rows:
+            yield held[0] if len(held) == 1 else Table(held).combine()
+
+
+class MapBatchesService(ExchangeService):
+    """Wrap a server-side callable as a named 1:1 service.
+
+    ``fn(batch) -> batch``; pass ``out_schema_fn(in_schema) -> Schema`` so
+    the output schema can be declared (and sent) up front — without it the
+    schema is *deferred* to the first output batch, which still works but
+    stalls a chained consumer until the first output.  The callable lives
+    on the server — only its *name* rides the ``ExchangeCommand``."""
+
+    def __init__(self, name: str, fn: Callable[[RecordBatch], RecordBatch],
+                 out_schema_fn: Callable[[Schema], Schema] | None = None):
+        self.name = name
+        self._fn = fn
+        self._out_schema_fn = out_schema_fn
+
+    def out_schema(self, in_schema, params):
+        return self._out_schema_fn(in_schema) if self._out_schema_fn else None
+
+    def transform(self, in_schema, batches, params):
+        for b in batches:
+            yield self._fn(b)
+
+
+class ScoreService(MapBatchesService):
+    """The scoring-microservice shape: ``score_fn(batch) -> scores batch``."""
+
+    def __init__(self, score_fn: Callable[[RecordBatch], RecordBatch],
+                 out_schema_fn: Callable[[Schema], Schema] | None = None,
+                 name: str = "score"):
+        super().__init__(name, score_fn, out_schema_fn)
+
+
+def drive_exchange(service: ExchangeService, in_schema: Schema, params: dict,
+                   inputs: Iterator[RecordBatch], declare, emit,
+                   state: dict) -> None:
+    """Drive one exchange service against transport callbacks.
+
+    The single implementation of the serve loop's invariants — declared
+    output schema sent up front and enforced per batch, deferred schema
+    riding the first output, output batch/row counting into ``state``,
+    unread input drained so an early-stopping service never wedges the
+    writer — shared by the TCP server (``_run_exchange``) and the in-proc
+    stream so the two transports cannot drift.  ``declare(schema)`` is
+    called at most once, always before the first ``emit(batch)``."""
+    declared = service.out_schema(in_schema, params)
+    sent_schema = declared is not None
+    if sent_schema:  # schema up front: chained consumers open now
+        declare(declared)
+    for ob in service.transform(in_schema, inputs, params):
+        if declared is not None and ob.schema != declared:
+            raise FlightError(
+                f"service {service.name!r} emitted a batch not matching "
+                f"its declared schema")
+        if not sent_schema:  # deferred schema rides the first output
+            declare(ob.schema)
+            sent_schema = True
+        state["out"] += 1
+        state["rows_out"] += ob.num_rows
+        emit(ob)
+    for _ in inputs:  # drain unread input (early-stopping services)
+        pass
+    if not sent_schema:  # zero outputs from a deferred-schema service
+        declare(in_schema)
+
+
+class ExchangeServiceRegistry:
+    """Name → ``ExchangeService`` (the fal-teller provider-registry shape).
+
+    Servers own one (``FlightServerBase.services``); a cluster shares a
+    single registry object across head and shards so one ``register`` call
+    makes a service reachable on every endpoint."""
+
+    def __init__(self, include_stock: bool = True):
+        self._services: dict[str, ExchangeService] = {}
+        if include_stock:
+            for svc in (EchoService(), FilterService(), ProjectService(),
+                        RepartitionService()):
+                self.register(svc)
+
+    def register(self, service: ExchangeService) -> ExchangeService:
+        if not service.name or service.name == "?":
+            raise FlightInvalidArgument("exchange service needs a name")
+        self._services[service.name] = service
+        return service
+
+    def get(self, name: str) -> ExchangeService:
+        svc = self._services.get(name)
+        if svc is None:
+            raise FlightNotFound(
+                f"no such exchange service: {name!r}",
+                detail={"service": name, "registered": sorted(self._services)})
+        return svc
+
+    def names(self) -> list[str]:
+        return sorted(self._services)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._services

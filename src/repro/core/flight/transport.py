@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import json
 import os
+import select
 import socket
 import struct
 import threading
@@ -191,6 +192,19 @@ class FrameConnection:
         out = bytes(self._rbuf[self._rpos : self._rpos + n])
         self._rpos += n
         return out
+
+    def receive_ready(self) -> bool:
+        """True when ``recv_frame`` has bytes to consume without blocking
+        (user-space buffer or kernel socket buffer).  Lets callers flush
+        pending output exactly when a read is about to block — the
+        streaming-exchange coalescing heuristic (exchange.py)."""
+        if self._buffered():
+            return True
+        try:
+            r, _, _ = select.select([self.sock], [], [], 0)
+        except (OSError, ValueError):  # closed socket
+            return True  # let recv_frame surface the real error
+        return bool(r)
 
     def recv_frame(self) -> tuple[int, dict, Buffer | None]:
         head = self._take(FRAME.size)

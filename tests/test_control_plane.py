@@ -81,6 +81,22 @@ class TestCommands:
         assert parse_command(cmd.to_bytes()) == cmd
         assert cmd.to_bytes()[0] == 0xC2
 
+    def test_exchange_command_golden_bytes(self):
+        """Pin 0xC2 type 4: service string + u32-length JSON params."""
+        from repro.core.flight import ExchangeCommand
+
+        cmd = ExchangeCommand.for_service("filter", threshold=3)
+        assert cmd.to_bytes().hex() == (
+            "c2"            # COMMAND_MAGIC
+            "01"            # version 1
+            "04"            # type: Exchange
+            "0600" "66696c746572"   # u16 len + "filter"
+            "10000000"              # u32 params length = 16
+            + b'{"threshold": 3}'.hex()
+        )
+        assert parse_command(cmd.to_bytes()) == cmd
+        assert parse_command(cmd.to_bytes()).params == {"threshold": 3}
+
     def test_legacy_json_ticket_still_parses(self):
         raw = json.dumps({"dataset": "ds", "start": 1, "stop": 3, "shard": 0}).encode()
         cmd = parse_command(raw)

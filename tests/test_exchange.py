@@ -1,0 +1,696 @@
+"""Streaming DoExchange: pipelined bidirectional streams, service registry,
+window semantics, typed mid-stream errors, cluster fan-out, pipelines."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    ExchangeCommand,
+    ExchangeService,
+    ExchangeServiceRegistry,
+    FlightClient,
+    FlightClusterClient,
+    FlightClusterServer,
+    FlightDescriptor,
+    FlightError,
+    FlightExchange,
+    FlightInvalidArgument,
+    FlightNotFound,
+    FlightUnauthenticated,
+    InMemoryFlightServer,
+    MapBatchesService,
+    Pipeline,
+    ScoreService,
+    Ticket,
+    open_exchange,
+    parse_command,
+)
+from repro.core.flight.transport import dial
+from repro.core.ipc import encode_batch
+from repro.query import col
+
+
+def make_batches(n=8, rows=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "a": rng.integers(0, 100, rows).astype(np.int64),
+        "b": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+def server_stats(client):
+    return json.loads(client.do_action("server-stats")[0].body)
+
+
+@pytest.fixture()
+def server():
+    srv = InMemoryFlightServer().serve_tcp()
+    srv.add_dataset("ds", make_batches())
+    yield srv
+    srv.shutdown()
+
+
+@pytest.fixture(params=["inproc", "tcp"])
+def client(request, server):
+    if request.param == "inproc":
+        return FlightClient(server)
+    return FlightClient(f"tcp://127.0.0.1:{server.port}")
+
+
+# --------------------------------------------------------------------------
+# ExchangeCommand serialization (0xC2 type 4)
+# --------------------------------------------------------------------------
+
+
+class TestExchangeCommand:
+    def test_golden_bytes(self):
+        """Pin the versioned binary layout: any change is a wire break."""
+        cmd = ExchangeCommand("echo")
+        assert cmd.to_bytes().hex() == (
+            "c2"            # COMMAND_MAGIC
+            "01"            # version 1
+            "04"            # type: Exchange
+            "0400" "6563686f"  # u16 len + "echo"
+            "00000000"      # u32 params length = 0
+        )
+        assert parse_command(cmd.to_bytes()) == cmd
+
+    def test_params_roundtrip(self):
+        cmd = ExchangeCommand.for_service("filter", threshold=3, flag=True)
+        back = parse_command(cmd.to_bytes())
+        assert back == cmd
+        assert back.params == {"threshold": 3, "flag": True}
+        assert ExchangeCommand("echo").params == {}
+
+    def test_truncated_params_rejected(self):
+        raw = ExchangeCommand.for_service("f", x=1).to_bytes()
+        with pytest.raises(FlightInvalidArgument):
+            parse_command(raw[:-2])
+
+    def test_malformed_params_rejected(self):
+        with pytest.raises(FlightInvalidArgument):
+            ExchangeCommand("f", b"not json").params
+
+    def test_not_redeemable_via_do_get(self, client):
+        with pytest.raises(FlightInvalidArgument):
+            client.do_get(Ticket.for_command(ExchangeCommand("echo"))).read_all()
+
+
+# --------------------------------------------------------------------------
+# streaming exchange: services end to end
+# --------------------------------------------------------------------------
+
+
+class TestStreamingExchange:
+    def test_echo_roundtrip(self, client):
+        batches = make_batches()
+        stream = open_exchange(client, "echo", batches[0].schema, batches)
+        out = list(stream)
+        assert out == batches
+        assert stream.stats["batches_in"] == 8
+        assert stream.stats["batches_out"] == 8
+
+    def test_out_schema_arrives_before_any_batch(self, client):
+        batches = make_batches(2)
+        stream = client.do_exchange_stream(
+            FlightDescriptor.for_command(
+                ExchangeCommand.for_service("project", columns=["b"])),
+            batches[0].schema)
+        # schema is declared up front: readable before one batch is written
+        assert stream.out_schema.names == ["b"]
+        stream.feed(batches)
+        assert [b.schema.names for b in stream] == [["b"], ["b"]]
+
+    def test_filter_matches_query_engine(self, client, server):
+        batches = make_batches()
+        pred = (col("a") > 50).to_json()
+        stream = open_exchange(
+            client, ExchangeCommand.for_service("filter", predicate=pred),
+            batches[0].schema, batches)
+        got = sum(b.num_rows for b in stream)
+        want = sum(int((b.column("a").to_numpy() > 50).sum()) for b in batches)
+        assert got == want > 0
+
+    def test_repartition_rechunks(self, client):
+        batches = make_batches(8, rows=100)
+        stream = open_exchange(
+            client, ExchangeCommand.for_service("repartition", rows=333),
+            batches[0].schema, batches)
+        sizes = [b.num_rows for b in stream]
+        assert sizes == [333, 333, 134]
+
+    def test_registered_map_batches_service(self, server):
+        server.services.register(MapBatchesService(
+            "double_a",
+            lambda b: RecordBatch.from_numpy(
+                {"a": b.column("a").to_numpy() * 2}),
+            out_schema_fn=lambda s: s.select(["a"]),
+        ))
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(3)
+        out = list(open_exchange(c, "double_a", batches[0].schema, batches))
+        np.testing.assert_array_equal(
+            out[0].column("a").to_numpy(), batches[0].column("a").to_numpy() * 2)
+
+    def test_score_service_shape(self, server):
+        server.services.register(ScoreService(
+            lambda b: RecordBatch.from_numpy(
+                {"score": b.column("b").to_numpy().astype(np.float64) ** 2})))
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(4)
+        stream = open_exchange(c, "score", batches[0].schema, batches)
+        out = list(stream)
+        assert all(b.schema.names == ["score"] for b in out)
+        assert stream.stats["service"] == "score"
+
+    def test_legacy_path_descriptor_uses_do_exchange_impl(self, client):
+        batches = make_batches(3)
+        stream = open_exchange(client, FlightDescriptor.for_path("echo"),
+                               batches[0].schema, batches)
+        assert list(stream) == batches
+
+    def test_zero_batch_exchange(self, client):
+        batches = make_batches(1)
+        stream = open_exchange(client, "echo", batches[0].schema, [])
+        assert list(stream) == []
+        assert stream.stats["batches_in"] == 0
+
+    def test_stream_as_context_manager(self, client):
+        batches = make_batches(3)
+        with open_exchange(client, "echo", batches[0].schema, batches) as stream:
+            assert len(list(stream)) == 3
+        assert stream.stats["batches_out"] == 3
+        # exception inside the block aborts instead of hanging
+        with pytest.raises(RuntimeError, match="user bail"):
+            with open_exchange(client, "echo", batches[0].schema, batches):
+                raise RuntimeError("user bail")
+
+    def test_read_all_and_close(self, client):
+        batches = make_batches(4)
+        stream = open_exchange(client, "echo", batches[0].schema, batches)
+        table = stream.read_all()
+        assert table.num_rows == 400
+        assert stream.close()["batches_out"] == 4  # idempotent after drain
+
+    def test_deprecated_shim_ping_pong(self, client):
+        """FlightExchange survives as a lockstep window=1 shim."""
+        batches = make_batches(3)
+        ex = client.do_exchange(FlightDescriptor.for_path("echo"), batches[0].schema)
+        for b in batches:
+            assert ex.exchange(b) == b
+        ex.close()
+        assert "deprecat" in (FlightExchange.__doc__ or "").lower()
+        assert "docs/wire-format.md" in FlightExchange.__doc__
+
+
+# --------------------------------------------------------------------------
+# window semantics
+# --------------------------------------------------------------------------
+
+
+class SlowConsume(ExchangeService):
+    """Consumes everything before emitting — worst case for windowing."""
+
+    name = "slow_consume"
+
+    def transform(self, in_schema, batches, params):
+        held = list(batches)
+        yield from held
+
+
+class TestWindowSemantics:
+    def test_window_1_degenerates_to_lockstep(self, server):
+        from repro.core.flight import CallOptions
+
+        batches = make_batches(6)
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        stream = open_exchange(c, "echo", batches[0].schema, batches,
+                               options=CallOptions(read_window=1))
+        assert list(stream) == batches
+        assert stream.max_in_flight <= 1  # never more than one unacked batch
+
+    @settings(max_examples=10, deadline=None)
+    @given(window=st.integers(1, 8), n=st.integers(0, 12))
+    def test_windowed_roundtrip_any_interleaving(self, window, n):
+        from repro.core.flight import CallOptions
+
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            batches = make_batches(max(n, 1), rows=16)[:n]
+            schema = make_batches(1)[0].schema
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            stream = open_exchange(c, "echo", schema, batches,
+                                   options=CallOptions(read_window=window))
+            assert list(stream) == batches
+            assert stream.max_in_flight <= window
+        finally:
+            srv.shutdown()
+
+    def test_eos_safe_out_of_order(self, server):
+        """EOS may be written before any output is read — and the reader may
+        drain outputs long after the server finished."""
+        batches = make_batches(5)
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        stream = c.do_exchange_stream(
+            FlightDescriptor.for_command(ExchangeCommand("echo")),
+            batches[0].schema)
+        for b in batches:
+            stream.write_batch(b)
+        stream.done_writing()  # input closed before one output batch read
+        assert list(stream) == batches
+
+    def test_window_smaller_than_buffering_service_no_deadlock(self, server):
+        """A service that consumes all input before emitting must not
+        deadlock a small window (acks are driven by consumption, not by
+        output production)."""
+        from repro.core.flight import CallOptions
+
+        server.services.register(SlowConsume())
+        batches = make_batches(10)
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        stream = open_exchange(c, "slow_consume", batches[0].schema, batches,
+                               options=CallOptions(read_window=2))
+        assert list(stream) == batches
+
+    def test_early_stopping_service_drains_input(self, server):
+        """A service that stops reading early must not wedge the writer or
+        poison the connection for the next RPC."""
+
+        class Head2(ExchangeService):
+            name = "head2"
+
+            def transform(self, in_schema, batches, params):
+                for i, b in enumerate(batches):
+                    if i == 2:
+                        return
+                    yield b
+
+        server.services.register(Head2())
+        batches = make_batches(12)
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        stream = open_exchange(c, "head2", batches[0].schema, batches)
+        assert list(stream) == batches[:2]
+        # connection was pooled clean: the next RPC on this client works
+        assert len(list(open_exchange(c, "echo", batches[0].schema, batches))) == 12
+
+
+# --------------------------------------------------------------------------
+# errors: typed, mid-stream, channel hygiene
+# --------------------------------------------------------------------------
+
+
+class Boom(ExchangeService):
+    name = "boom"
+
+    def transform(self, in_schema, batches, params):
+        for i, b in enumerate(batches):
+            if i == 2:
+                raise FlightInvalidArgument("boom at batch 2",
+                                            detail={"batch": 2})
+            yield b
+
+
+class TestExchangeErrors:
+    def test_unknown_service_typed_refusal_channel_clean(self, client):
+        batches = make_batches(1)
+        with pytest.raises(FlightNotFound):
+            client.do_exchange_stream(
+                FlightDescriptor.for_command(ExchangeCommand("nope")),
+                batches[0].schema)
+        # the refusal happened before the stream: same client keeps working
+        assert len(list(open_exchange(client, "echo", batches[0].schema, batches))) == 1
+
+    def test_malformed_params_refused_at_open_both_transports(self, client):
+        """check_params runs before the stream opens on every transport —
+        a filter with no predicate refuses typed with the channel clean."""
+        batches = make_batches(1)
+        with pytest.raises(FlightInvalidArgument):
+            client.do_exchange_stream(
+                FlightDescriptor.for_command(ExchangeCommand("filter")),
+                batches[0].schema)
+        assert len(list(open_exchange(client, "echo", batches[0].schema, batches))) == 1
+
+    def test_aborted_inproc_stream_worker_exits(self, server):
+        """abort() must not leak the in-proc worker thread blocked on input."""
+        import time
+
+        from repro.core.flight import CallOptions
+
+        c = FlightClient(server)
+        batches = make_batches(10)
+        stream = c.do_exchange_stream(
+            FlightDescriptor.for_command(ExchangeCommand("echo")),
+            batches[0].schema, options=CallOptions(read_window=2))
+        stream.write_batch(batches[0])  # worker alive, waiting for more input
+        stream.abort()
+        deadline = time.monotonic() + 2.0
+        while stream._worker.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert not stream._worker.is_alive()
+
+    def test_non_exchange_command_rejected(self, client):
+        batches = make_batches(1)
+        with pytest.raises(FlightInvalidArgument):
+            client.do_exchange_stream(
+                FlightDescriptor.for_command(
+                    Ticket.for_range("ds", 0, 1).raw), batches[0].schema)
+
+    def test_mid_stream_error_rehydrates_typed(self, server):
+        server.services.register(Boom())
+        batches = make_batches(8)
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        stream = open_exchange(c, "boom", batches[0].schema, batches)
+        with pytest.raises(FlightInvalidArgument) as ei:
+            list(stream)
+        assert ei.value.detail == {"batch": 2}
+        # server survives; a fresh exchange on the same client succeeds
+        assert len(list(open_exchange(c, "echo", batches[0].schema, batches))) == 8
+
+    def test_mid_stream_error_inproc(self, server):
+        server.services.register(Boom())
+        c = FlightClient(server)
+        batches = make_batches(8)
+        stream = open_exchange(c, "boom", batches[0].schema, batches)
+        with pytest.raises(FlightInvalidArgument):
+            list(stream)
+
+    def test_malformed_first_frame_typed_control_frame(self, server):
+        """A batch where the schema should be gets a typed error frame, not
+        a bare failure after the ok (the old behavior left the client
+        mid-stream with an untyped 'internal' error)."""
+        batches = make_batches(1)
+        conn = dial("127.0.0.1", server.port)
+        try:
+            conn.send_ctrl({
+                "method": "DoExchange",
+                "descriptor": FlightDescriptor.for_command(
+                    ExchangeCommand("echo")).to_json(),
+                "token": None,
+            })
+            assert conn.recv_ctrl() == {"ok": True}
+            # protocol violation: batch before schema
+            conn.send_data(encode_batch(batches[0]))
+            with pytest.raises(FlightInvalidArgument):
+                while True:
+                    conn.recv_ctrl()  # raises on the typed error frame
+        finally:
+            conn.close()
+
+    def test_eos_as_first_frame_is_invalid(self, server):
+        from repro.core.ipc import encode_eos
+
+        conn = dial("127.0.0.1", server.port)
+        try:
+            conn.send_ctrl({
+                "method": "DoExchange",
+                "descriptor": FlightDescriptor.for_command(
+                    ExchangeCommand("echo")).to_json(),
+                "token": None,
+            })
+            assert conn.recv_ctrl() == {"ok": True}
+            conn.send_data(encode_eos())
+            with pytest.raises(FlightInvalidArgument):
+                while True:
+                    conn.recv_ctrl()
+        finally:
+            conn.close()
+
+    def test_writer_schema_mismatch_raises(self, client):
+        batches = make_batches(1)
+        other = RecordBatch.from_numpy({"z": np.arange(4, dtype=np.int64)})
+        stream = client.do_exchange_stream(
+            FlightDescriptor.for_command(ExchangeCommand("echo")),
+            batches[0].schema)
+        with pytest.raises(FlightError):
+            stream.write_batch(other)
+        stream.abort()
+
+    def test_non_flight_service_bug_surfaces_typed_over_tcp(self, server):
+        """A service callable raising a plain exception must reach the TCP
+        client as a typed error frame (like inproc), not kill the handler
+        thread and surface as a generic connection loss."""
+
+        class Buggy(ExchangeService):
+            name = "buggy"
+
+            def transform(self, in_schema, batches, params):
+                for b in batches:
+                    raise ValueError("user bug")
+                    yield b
+
+        server.services.register(Buggy())
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(3)
+        stream = open_exchange(c, "buggy", batches[0].schema, batches)
+        with pytest.raises(FlightError, match="exchange failed.*user bug"):
+            list(stream)
+        # server healthy afterwards, and the failure was counted
+        assert len(list(open_exchange(c, "echo", batches[0].schema, batches))) == 3
+        assert server_stats(c)["verbs"]["exchanges"]["buggy"]["errors"] == 1
+
+    def test_close_while_feeder_active(self, server):
+        """close() during an active feed() must finish the call cleanly
+        (drain + join the feeder) instead of racing it with its own EOS."""
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(12)
+        stream = open_exchange(c, "echo", batches[0].schema, batches)
+        next(iter(stream))  # consume a little, then close mid-flight
+        stats = stream.close()
+        assert stats["batches_in"] == 12
+        # connection was pooled clean: the next exchange works
+        assert len(list(open_exchange(c, "echo", batches[0].schema, batches))) == 12
+
+    def test_feeder_failure_aborts_reader(self, server):
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(3)
+
+        def bad_iter():
+            yield batches[0]
+            raise ValueError("source exploded")
+
+        stream = open_exchange(c, "echo", batches[0].schema, bad_iter())
+        with pytest.raises(FlightError):
+            list(stream)
+
+
+# --------------------------------------------------------------------------
+# middleware: auth + per-exchange metrics
+# --------------------------------------------------------------------------
+
+
+class TestExchangeMiddleware:
+    def test_auth_guards_exchange_tcp_and_inproc(self):
+        srv = InMemoryFlightServer(auth_token="s3cret").serve_tcp()
+        try:
+            batches = make_batches(2)
+            desc = FlightDescriptor.for_command(ExchangeCommand("echo"))
+            bad = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            with pytest.raises(FlightUnauthenticated):
+                bad.do_exchange_stream(desc, batches[0].schema)
+            bad_inproc = FlightClient(srv)
+            with pytest.raises(FlightUnauthenticated):
+                stream = bad_inproc.do_exchange_stream(desc, batches[0].schema)
+                stream.feed(batches)
+                list(stream)
+            good = FlightClient(f"tcp://127.0.0.1:{srv.port}", token="s3cret")
+            assert len(list(open_exchange(good, "echo", batches[0].schema, batches))) == 2
+            verbs = server_stats(good)["verbs"]
+            # the rejected calls were *counted* — middleware saw them
+            assert verbs["exchanges"]["echo"]["calls"] >= 3
+            assert verbs["exchanges"]["echo"]["errors"] >= 2
+        finally:
+            srv.shutdown()
+
+    def test_per_exchange_metrics_in_server_stats(self, server):
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(2)
+        list(open_exchange(c, "echo", batches[0].schema, batches))
+        list(open_exchange(c, ExchangeCommand.for_service("project", columns=["a"]),
+                           batches[0].schema, batches))
+        ex = server_stats(c)["verbs"]["exchanges"]
+        assert ex["echo"]["calls"] == 1 and ex["echo"]["errors"] == 0
+        assert ex["project"]["calls"] == 1
+        assert ex["echo"]["seconds"] >= 0
+
+    def test_error_metrics_counted(self, server):
+        server.services.register(Boom())
+        c = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        batches = make_batches(4)
+        with pytest.raises(FlightInvalidArgument):
+            list(open_exchange(c, "boom", batches[0].schema, batches))
+        ex = server_stats(c)["verbs"]["exchanges"]
+        assert ex["boom"]["errors"] == 1
+
+
+# --------------------------------------------------------------------------
+# cluster fan-out
+# --------------------------------------------------------------------------
+
+
+class TestClusterExchange:
+    @pytest.mark.parametrize("transport", ["inproc", "tcp"])
+    def test_fan_out_across_shards(self, transport):
+        cluster = FlightClusterServer(num_shards=4)
+        if transport == "tcp":
+            cluster.serve_tcp()
+            cc = FlightClusterClient(f"tcp://127.0.0.1:{cluster.port}")
+        else:
+            cc = FlightClusterClient(cluster)
+        try:
+            batches = make_batches(8)
+            table, stats = cc.exchange(
+                ExchangeCommand.for_service("project", columns=["a"]), batches)
+            assert table.num_rows == 800
+            assert table.schema.names == ["a"]
+            assert stats.streams == 4
+        finally:
+            cluster.shutdown()
+
+    def test_shared_registry_reaches_every_shard(self):
+        """One register on the cluster makes the service reachable on every
+        shard endpoint a fanned-out exchange lands on."""
+        cluster = FlightClusterServer(num_shards=3)
+        cluster.services.register(MapBatchesService(
+            "negate", lambda b: RecordBatch.from_numpy(
+                {"a": -b.column("a").to_numpy(),
+                 "b": b.column("b").to_numpy()})))
+        try:
+            cc = FlightClusterClient(cluster)
+            batches = make_batches(6)
+            table, stats = cc.exchange("negate", batches)
+            assert stats.streams == 3
+            assert table.num_rows == 600
+            got = np.sort(np.concatenate([b.column("a").to_numpy() for b in table]))
+            want = np.sort(-np.concatenate([b.column("a").to_numpy() for b in batches]))
+            np.testing.assert_array_equal(got, want)
+        finally:
+            cluster.shutdown()
+
+    def test_empty_input_is_typed_error(self):
+        cluster = FlightClusterServer(num_shards=2)
+        try:
+            with pytest.raises(FlightInvalidArgument):
+                FlightClusterClient(cluster).exchange("echo", [])
+        finally:
+            cluster.shutdown()
+
+    def test_cluster_exchange_auth(self):
+        cluster = FlightClusterServer(num_shards=2, auth_token="tk").serve_tcp()
+        try:
+            batches = make_batches(4)
+            bad = FlightClusterClient(f"tcp://127.0.0.1:{cluster.port}")
+            with pytest.raises(FlightError):
+                bad.exchange("echo", batches)
+            good = FlightClusterClient(f"tcp://127.0.0.1:{cluster.port}", token="tk")
+            table, _ = good.exchange("echo", batches)
+            assert table.num_rows == 400
+        finally:
+            cluster.shutdown()
+
+
+# --------------------------------------------------------------------------
+# chained pipelines (Mallard-style)
+# --------------------------------------------------------------------------
+
+
+class TestPipeline:
+    def test_two_server_chain_tcp(self):
+        """A→filter→B: server A's output stream is server B's input, end to
+        end over TCP, no client-side materialization."""
+        a = InMemoryFlightServer("a").serve_tcp()
+        b = InMemoryFlightServer("b").serve_tcp()
+        try:
+            batches = make_batches(8)
+            pred = (col("a") > 50).to_json()
+            pipe = Pipeline([
+                (FlightClient(f"tcp://127.0.0.1:{a.port}"),
+                 ExchangeCommand.for_service("filter", predicate=pred)),
+                (FlightClient(f"tcp://127.0.0.1:{b.port}"),
+                 ExchangeCommand.for_service("repartition", rows=64)),
+            ])
+            table = pipe.run_all(batches[0].schema, batches)
+            want = sum(int((x.column("a").to_numpy() > 50).sum()) for x in batches)
+            assert table.num_rows == want > 0
+            assert all(x.num_rows == 64 for x in list(table)[:-1])
+            stages = pipe.stats()
+            assert stages[0]["service"] == "filter"
+            assert stages[1]["service"] == "repartition"
+            assert stages[1]["rows_in"] == want
+        finally:
+            a.shutdown()
+            b.shutdown()
+
+    def test_three_stage_chain_mixed_transports(self):
+        a = InMemoryFlightServer("a").serve_tcp()
+        b = InMemoryFlightServer("b")
+        try:
+            batches = make_batches(6)
+            pipe = Pipeline([
+                (FlightClient(f"tcp://127.0.0.1:{a.port}"),
+                 ExchangeCommand.for_service("project", columns=["a"])),
+                (FlightClient(b), "echo"),
+                (FlightClient(f"tcp://127.0.0.1:{a.port}"),
+                 ExchangeCommand.for_service("repartition", rows=150)),
+            ])
+            table = pipe.run_all(batches[0].schema, batches)
+            assert table.num_rows == 600
+            assert table.schema.names == ["a"]
+        finally:
+            a.shutdown()
+            b.shutdown()
+
+    def test_stage_error_propagates_to_final_reader(self):
+        a = InMemoryFlightServer("a").serve_tcp()
+        a.services.register(Boom())
+        b = InMemoryFlightServer("b").serve_tcp()
+        try:
+            batches = make_batches(8)
+            pipe = Pipeline([
+                (FlightClient(f"tcp://127.0.0.1:{a.port}"), "boom"),
+                (FlightClient(f"tcp://127.0.0.1:{b.port}"), "echo"),
+            ])
+            with pytest.raises(FlightError):
+                pipe.run_all(batches[0].schema, batches)
+        finally:
+            a.shutdown()
+            b.shutdown()
+
+    def test_pipeline_streams_without_materializing(self):
+        """Many more batches than any window: the chain must keep flowing
+        (a materializing implementation would need the whole dataset in
+        memory before stage 2 — this would deadlock bounded queues if any
+        link waited for its input to complete)."""
+        from repro.core.flight import CallOptions
+
+        a = InMemoryFlightServer("a").serve_tcp()
+        b = InMemoryFlightServer("b").serve_tcp()
+        try:
+            batches = make_batches(40, rows=50)
+            pipe = Pipeline([
+                (FlightClient(f"tcp://127.0.0.1:{a.port}"), "echo"),
+                (FlightClient(f"tcp://127.0.0.1:{b.port}"), "echo"),
+            ], options=CallOptions(read_window=2))
+            table = pipe.run_all(batches[0].schema, batches)
+            assert table.num_rows == 40 * 50
+        finally:
+            a.shutdown()
+            b.shutdown()
+
+
+class TestRegistry:
+    def test_stock_services_present(self):
+        reg = ExchangeServiceRegistry()
+        assert {"echo", "filter", "project", "repartition"} <= set(reg.names())
+
+    def test_unknown_service_typed(self):
+        reg = ExchangeServiceRegistry()
+        with pytest.raises(FlightNotFound):
+            reg.get("nope")
+
+    def test_unnamed_service_rejected(self):
+        reg = ExchangeServiceRegistry()
+        with pytest.raises(FlightInvalidArgument):
+            reg.register(ExchangeService())

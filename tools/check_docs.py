@@ -28,6 +28,7 @@ DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 EXAMPLES = [
     ROOT / "examples" / "cluster_quickstart.py",
     ROOT / "examples" / "query_cluster.py",
+    ROOT / "examples" / "microservice_pipeline.py",
 ]
 
 _FENCE = re.compile(r"^```(\w+[^\n]*)\n(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
