@@ -90,9 +90,15 @@ def _best_of(fn, repeats: int = 3) -> float:
 
 
 def _lockstep(client: FlightClient, schema, batches) -> None:
-    ex = client.do_exchange(FlightDescriptor.for_path("echo"), schema)
+    # manual window=1 ping-pong over the streaming API: write one batch,
+    # block for its response — the baseline the pipelined mode beats
+    ex = client.do_exchange_stream(FlightDescriptor.for_path("echo"), schema,
+                                   options=CallOptions(read_window=1))
+    it = iter(ex)
     for b in batches:
-        ex.exchange(b)
+        ex.write_batch(b)
+        next(it)
+    ex.done_writing()
     ex.close()
 
 

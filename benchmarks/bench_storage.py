@@ -1,0 +1,154 @@
+"""Storage provider plane: memory vs disk-cold vs disk-warm DoGet + recovery.
+
+The provider split (core/flight/storage.py) claims the serving layer pays
+for durability only where it must: a disk-backed dataset costs one
+mmap+decode+encode pass on the *first* DoGet after a (re)start, after which
+the encode-once cache serves the identical wire bytes a memory-backed
+server would — so the steady-state read path is storage-agnostic.  This
+suite measures that claim over loopback TCP:
+
+* ``storage_memory``     — the baseline: DoGet against the historical
+  in-memory store (warm encode cache);
+* ``storage_disk_cold``  — a server *freshly constructed* on an existing
+  disk root: the read pays catalog recovery, part-file mmap, zero-copy
+  decode and the one-time encode;
+* ``storage_disk_warm``  — the same server's steady state: every batch
+  served from the encode-once cache, zero disk traffic
+  (``warm_vs_memory`` on this row is the acceptance ratio — expect ~1x,
+  flag > 2x);
+* ``storage_recovery``   — server construction alone on a root holding the
+  dataset plus a prepared staged txn: the restart-recovery cost of the
+  durable 2PC plane (catalog listing + stage scan, no batch decode for
+  the catalog itself).
+
+``run.py`` emits ``BENCH_storage.json`` and CI uploads it.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from repro.core.flight import (
+    FlightClient,
+    FlightDescriptor,
+    InMemoryFlightServer,
+    StagedPutCommand,
+    Ticket,
+)
+
+from .common import Timing, records_batch
+
+BATCH_BYTES = 64 << 10
+RECORD_BYTES = 32
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _best_of(fn, repeats: int = 3) -> float:
+    return min(_timed(fn) for _ in range(repeats))
+
+
+def _drain(client: FlightClient, name: str) -> int:
+    return sum(b.num_rows for b in client.do_get(Ticket.for_range(name, 0, -1)))
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    n_batches = 32 if quick else 128
+    rows = BATCH_BYTES // RECORD_BYTES
+    batches = [records_batch(rows, seed=s) for s in range(n_batches)]
+    schema = batches[0].schema
+    nbytes = sum(b.nbytes() for b in batches)
+    total_rows = rows * n_batches
+    root = tempfile.mkdtemp(prefix="bench_storage_")
+    spec = f"disk:{root}/store"
+    try:
+        # -- memory baseline ------------------------------------------------ #
+        srv = InMemoryFlightServer().serve_tcp()
+        srv.add_dataset("ds", batches)
+        c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+        assert _drain(c, "ds") == total_rows  # warm the encode cache
+        secs = _best_of(lambda: _drain(c, "ds"))
+        mem_secs = secs
+        out.append(Timing("storage_memory", secs, nbytes, extra={
+            "backend": "memory", "n_batches": n_batches,
+            "mbps": round(nbytes / secs / 1e6, 1)}))
+        srv.shutdown()
+
+        # -- disk: spill once, then measure a fresh server's cold read ------ #
+        writer = InMemoryFlightServer(storage=spec)
+        spill_secs = _timed(lambda: writer.add_dataset("ds", batches))
+        # leave a prepared staged txn behind for the recovery row
+        wclient = FlightClient(writer)
+        w = wclient.do_put(FlightDescriptor.for_command(
+            StagedPutCommand("staged-ds", "bench-txn", "stage")), schema)
+        w.write_batches(batches[: max(1, n_batches // 8)])
+        w.close()
+        writer.shutdown()
+        out.append(Timing("storage_disk_spill", spill_secs, nbytes, extra={
+            "backend": "disk", "n_batches": n_batches,
+            "mbps": round(nbytes / spill_secs / 1e6, 1)}))
+
+        cold_srv: list[InMemoryFlightServer] = []
+
+        def cold_read() -> None:
+            s = InMemoryFlightServer(storage=spec).serve_tcp()
+            cold_srv.append(s)
+            n = _drain(FlightClient(f"tcp://127.0.0.1:{s.port}"), "ds")
+            assert n == total_rows, n
+
+        # cold is a one-shot cost per process: report each repeat's fresh
+        # server, best-of like every other row (page cache stays warm —
+        # this measures the software path, not the platter)
+        cold_secs = float("inf")
+        for _ in range(3):
+            cold_secs = min(cold_secs, _timed(cold_read))
+            cold_srv.pop().shutdown()
+
+        out.append(Timing("storage_disk_cold", cold_secs, nbytes, extra={
+            "backend": "disk", "n_batches": n_batches,
+            "mbps": round(nbytes / cold_secs / 1e6, 1),
+            "cold_vs_memory": round(cold_secs / mem_secs, 2)}))
+
+        srv2 = InMemoryFlightServer(storage=spec).serve_tcp()
+        c2 = FlightClient(f"tcp://127.0.0.1:{srv2.port}")
+        assert _drain(c2, "ds") == total_rows  # pay the cold pass here
+        warm_secs = _best_of(lambda: _drain(c2, "ds"))
+        pstats = srv2.storage.stats()
+        out.append(Timing("storage_disk_warm", warm_secs, nbytes, extra={
+            "backend": "disk", "n_batches": n_batches,
+            "mbps": round(nbytes / warm_secs / 1e6, 1),
+            "warm_vs_memory": round(warm_secs / mem_secs, 2),
+            "spills": pstats["spills"], "mmap_reads": pstats["mmap_reads"],
+            "disk_bytes": pstats["disk_bytes"]}))
+        srv2.shutdown()
+
+        # -- restart recovery: construction on a populated root ------------- #
+        rec_srv: list[InMemoryFlightServer] = []
+        rec_secs = _best_of(lambda: rec_srv.append(InMemoryFlightServer(storage=spec)))
+        recovered = rec_srv[-1]
+        rstats = recovered.storage.stats()
+        out.append(Timing("storage_recovery", rec_secs, 0, extra={
+            "backend": "disk",
+            "recovered_datasets": rstats["recovered_datasets"],
+            "recovered_stages": rstats["recovered_stages"],
+            "staged_txns": len(recovered._staged)}))
+        for s in rec_srv:
+            s.shutdown()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_bench_json
+
+    timings = run()
+    for t in timings:
+        print(t.csv() + (f" {t.extra}" if t.extra else ""))
+    print(f"# wrote {emit_bench_json('storage', timings)}")

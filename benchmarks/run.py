@@ -19,7 +19,7 @@ def main() -> None:
 
     from . import (bench_cluster, bench_endpoints, bench_exchange, bench_export,
                    bench_kernels, bench_protocols, bench_query, bench_serde,
-                   bench_transfer, bench_wire)
+                   bench_storage, bench_transfer, bench_wire)
     from .common import emit_bench_json
     suites = {
         "transfer": bench_transfer,    # Fig 2/3
@@ -30,10 +30,12 @@ def main() -> None:
         "cluster": bench_cluster,      # shard scaling (Fig 2 over N servers)
         "wire": bench_wire,            # data plane: codec × coalescing × size
         "exchange": bench_exchange,    # Fig 11: streaming DoExchange microservices
+        "storage": bench_storage,      # provider plane: disk vs memory DoGet
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
-    json_suites = {"cluster", "wire", "query", "exchange"}  # recorded to BENCH_<name>.json
+    # recorded to BENCH_<name>.json
+    json_suites = {"cluster", "wire", "query", "exchange", "storage"}
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

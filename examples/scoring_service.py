@@ -30,11 +30,14 @@ reqs = [[int(t) for t in rng.integers(1, cfg.vocab, rng.integers(4, 60))]
         for _ in range(64)]
 schema = RecordBatch.from_pydict({"tokens": [reqs[0]]}).schema
 
-ex = client.do_exchange(FlightDescriptor.for_path("score"), schema)
+# pipelined streaming exchange: the feeder thread pushes request batches
+# while this thread drains scored results (no per-batch round trips)
+ex = client.do_exchange_stream(FlightDescriptor.for_path("score"), schema)
 t0 = time.perf_counter()
+ex.feed([RecordBatch.from_pydict({"tokens": reqs[s:s + 16]}, schema)
+         for s in range(0, len(reqs), 16)])
 n = 0
-for s in range(0, len(reqs), 16):
-    out = ex.exchange(RecordBatch.from_pydict({"tokens": reqs[s:s + 16]}, schema))
+for out in ex:
     n += out.num_rows
 ex.close()
 dt = time.perf_counter() - t0

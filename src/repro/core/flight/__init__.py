@@ -51,11 +51,24 @@ from .protocol import (  # noqa: F401
     Ticket,
     parse_command,
 )
-from .scheduler import ParallelStreamScheduler, TransferStats  # noqa: F401
+from .scheduler import (  # noqa: F401
+    FlightClientProtocol,
+    ParallelStreamScheduler,
+    TransferStats,
+)
 from .server import (  # noqa: F401
     FlightServerBase,
     InMemoryFlightServer,
+    ServerConfig,
     parse_txn_body,
+)
+from .storage import (  # noqa: F401
+    DiskStorageProvider,
+    MemoryStorageProvider,
+    RemoteFlightProvider,
+    StagedEntry,
+    StorageProvider,
+    make_provider,
 )
 from .services import (  # noqa: F401
     EchoService,

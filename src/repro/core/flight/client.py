@@ -468,6 +468,13 @@ class FlightExchange:
     ("DoExchange framing")."""
 
     def __init__(self, client: FlightClient, descriptor: FlightDescriptor, schema: Schema):
+        import warnings
+
+        warnings.warn(
+            "FlightExchange (and FlightClient.do_exchange) is deprecated; "
+            "use FlightClient.do_exchange_stream for pipelined, windowed "
+            "bidirectional exchange",
+            DeprecationWarning, stacklevel=3)
         opts = client._options(None)
         opts = replace(opts, read_window=1) if opts is not None else CallOptions(read_window=1)
         self._stream = client.do_exchange_stream(descriptor, schema, options=opts)

@@ -33,6 +33,7 @@ readable (and the shards' TTL reaper GCs it).
 from __future__ import annotations
 
 import json
+import os
 import threading
 import uuid
 import zlib
@@ -62,9 +63,24 @@ from .protocol import (
     Ticket,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats
-from .server import FlightServerBase, InMemoryFlightServer, parse_txn_body
+from .server import FlightServerBase, InMemoryFlightServer, ServerConfig, parse_txn_body
 
 _MIX = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing constant
+
+
+def _shard_storage(storage, shard_id: int):
+    """Resolve a cluster-level storage spec into one shard's spec.
+
+    A callable gets the shard id (full control); a ``disk:<root>`` string
+    becomes ``disk:<root>/shard-<i>`` so every shard owns a disjoint subtree
+    of one cluster root — which is also what makes cluster restart recovery
+    line up shard-for-shard.  Anything else passes through unchanged."""
+    if callable(storage):
+        return storage(shard_id)
+    if isinstance(storage, str) and storage.startswith("disk:"):
+        root = storage[len("disk:"):]
+        return "disk:" + os.path.join(root, f"shard-{shard_id}")
+    return storage
 
 
 # --------------------------------------------------------------------------
@@ -177,6 +193,8 @@ class FlightClusterServer(FlightServerBase):
         auth_token: str | None = None,
         batches_per_endpoint: int = 0,
         shard_factory=None,
+        shard_config: ServerConfig | None = None,
+        storage=None,
     ):
         super().__init__(location_name, auth_token)
         if num_shards < 1:
@@ -185,16 +203,31 @@ class FlightClusterServer(FlightServerBase):
         # shard_factory(shard_id, location_name) -> InMemoryFlightServer lets
         # benchmarks/tests substitute instrumented or wire-paced shards
         if shard_factory is None:
+            # `storage` wins over shard_config.storage; either way the spec
+            # is re-scoped per shard (see _shard_storage) so disk-backed
+            # shards never share a root
+            spec = storage if storage is not None else getattr(
+                shard_config, "storage", None)
+
             def shard_factory(i: int, loc_name: str) -> InMemoryFlightServer:
+                # only forward knobs actually set at the cluster level —
+                # an explicit kwarg would override the same shard_config field
+                extra = {}
+                if spec is not None:
+                    extra["storage"] = _shard_storage(spec, i)
+                if auth_token is not None:
+                    extra["auth_token"] = auth_token
+                if batches_per_endpoint:
+                    extra["batches_per_endpoint"] = batches_per_endpoint
                 return InMemoryFlightServer(
                     location_name=loc_name,
-                    auth_token=auth_token,
-                    batches_per_endpoint=batches_per_endpoint,
                     shard_id=i,
+                    config=shard_config,
                     # head and shards share one exchange-service registry, so
                     # registering a transform once makes it reachable on
                     # every endpoint a fanned-out exchange lands on
                     services=self.services,
+                    **extra,
                 )
         self.shards = [
             shard_factory(i, f"{location_name}-shard{i}") for i in range(num_shards)
@@ -203,6 +236,12 @@ class FlightClusterServer(FlightServerBase):
             s.shard_id = i
         self._datasets: dict[str, Schema] = {}
         self._dlock = threading.Lock()
+        # catalog recovery: durable shard backends (disk roots) re-surface
+        # their datasets at construction — fold their union into the head's
+        # catalog so a restarted cluster answers GetFlightInfo immediately
+        for s in self.shards:
+            for name in s.storage.list():
+                self._datasets.setdefault(name, s.storage.schema(name))
 
     @property
     def num_shards(self) -> int:
@@ -231,7 +270,8 @@ class FlightClusterServer(FlightServerBase):
 
     def dataset(self, name: str) -> list[RecordBatch]:
         """All shards' batches in shard order (the head DoGet gather order)."""
-        return [b for s in self.shards if name in s._store for b in s.dataset(name)]
+        return [b for s in self.shards if s.storage.exists(name)
+                for b in s.dataset(name)]
 
     # -- handlers ----------------------------------------------------------- #
     def _info_for(self, name: str) -> FlightInfo:
@@ -246,7 +286,7 @@ class FlightClusterServer(FlightServerBase):
             except FlightError:
                 continue
             if info.total_records <= 0 and not any(
-                e.ticket.range()["stop"] > e.ticket.range()["start"] for e in info.endpoints
+                c.stop > c.start for c in (e.ticket.command() for e in info.endpoints)
             ):
                 continue  # empty shard: nothing to stream
             endpoints += info.endpoints
@@ -288,7 +328,7 @@ class FlightClusterServer(FlightServerBase):
         out_schema = schema.select(plan.projection) if plan.projection else schema
         endpoints = []
         for i, shard in enumerate(self.shards):
-            if name not in shard._store:
+            if not shard.storage.exists(name):
                 continue  # shard never received a slice of this dataset
             endpoints.append(FlightEndpoint(
                 Ticket.for_command(QueryCommand(cmd.plan_bytes, 0, -1, shard=i)),
@@ -435,7 +475,7 @@ class FlightClusterServer(FlightServerBase):
         if dataset is not None:
             with self._dlock:
                 self._datasets.setdefault(
-                    dataset, self.shards[staged_ids[0]]._schemas[dataset])
+                    dataset, self.shards[staged_ids[0]].storage.schema(dataset))
         return {
             "txn_id": txn_id,
             "committed": True,

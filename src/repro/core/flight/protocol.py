@@ -422,6 +422,12 @@ class Ticket:
         Use ``command()`` and the typed ``Command`` union instead — the
         binary layouts and their JSON fallbacks are specified in
         docs/wire-format.md ("0xC2 — the Command union")."""
+        import warnings
+
+        warnings.warn(
+            "Ticket.range() is deprecated; use Ticket.command() and the "
+            "typed Command union instead",
+            DeprecationWarning, stacklevel=2)
         return self.command().to_dict()
 
     def to_json(self) -> dict:

@@ -21,19 +21,19 @@ Fault handling exploits tickets being idempotent range reads:
   hedged mode trades the bounded window for whole-endpoint buffers — size
   endpoints accordingly when enabling it.
 
-The scheduler never imports the client module: anything with
-``do_get(ticket) -> iterable`` / ``do_put(descriptor, schema) -> writer``
-works, supplied through ``client_factory(location) -> client``.
+The scheduler never imports the client module: anything satisfying
+``FlightClientProtocol`` — verb methods that uniformly accept
+``options: CallOptions | None = None`` — works, supplied through
+``client_factory(location) -> client``.
 """
 from __future__ import annotations
 
-import inspect
 import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Callable, Iterator
+from typing import Callable, Iterable, Iterator, Protocol, runtime_checkable
 
 from ..recordbatch import RecordBatch, Table
 from ..schema import Schema
@@ -48,6 +48,25 @@ from .protocol import (
     FlightUnavailableError,
     Location,
 )
+
+
+@runtime_checkable
+class FlightClientProtocol(Protocol):
+    """The formal client call contract the scheduler programs against.
+
+    Every verb method accepts ``options: CallOptions | None = None`` —
+    uniformly, by keyword — so the scheduler forwards its ``call_options``
+    on every call instead of probing each client's signature.  Anything
+    structurally matching works: ``FlightClient``, a test fake, a wrapper.
+    ``do_exchange_stream`` is optional (checked explicitly at the exchange
+    call site) so read/write-only clients stay valid scheduler targets.
+    """
+
+    def do_get(self, ticket, options: CallOptions | None = None) -> Iterable:
+        ...
+
+    def do_put(self, descriptor, schema, options: CallOptions | None = None):
+        ...
 
 
 @dataclass
@@ -99,52 +118,30 @@ class ParallelStreamScheduler:
         self.window = max(1, window)
         self.hedge_after = hedge_after
         self.put_retries = max(0, put_retries)
-        self._clients: dict[str, object] = {}
+        self._clients: dict[str, FlightClientProtocol] = {}
         self._client_lock = threading.Lock()
         self._stat_lock = threading.Lock()
-        self._options_support: dict[tuple[type, str], bool] = {}
         self.retries = 0
         self.hedges = 0
 
-    def _takes_options(self, client, method: str = "do_get") -> bool:
-        """Signature probe, cached per (client type, method) — never wraps
-        the live call in ``except TypeError`` (that would mask real bugs and
-        re-issue the RPC on an abandoned connection)."""
-        key = (type(client), method)
-        cached = self._options_support.get(key)
-        if cached is None:
-            try:
-                params = inspect.signature(getattr(client, method)).parameters
-                cached = "options" in params or any(
-                    p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
-                )
-            except (AttributeError, TypeError, ValueError):
-                cached = False
-            self._options_support[key] = cached
-        return cached
+    def _do_get(self, client: FlightClientProtocol, ticket):
+        """Issue DoGet.  ``FlightClientProtocol`` makes ``options`` part of
+        the contract, so it is always forwarded — no signature probing."""
+        return client.do_get(ticket, options=self.call_options)
 
-    def _do_get(self, client, ticket):
-        """Issue DoGet, forwarding CallOptions when the client understands
-        them (the scheduler's client contract is only ``do_get(ticket)``)."""
-        if self.call_options is not None and self._takes_options(client):
-            return client.do_get(ticket, options=self.call_options)
-        return client.do_get(ticket)
-
-    def _do_put(self, client, descriptor, schema):
-        """Open a DoPut stream, forwarding CallOptions when understood."""
-        if self.call_options is not None and self._takes_options(client, "do_put"):
-            return client.do_put(descriptor, schema, options=self.call_options)
-        return client.do_put(descriptor, schema)
+    def _do_put(self, client: FlightClientProtocol, descriptor, schema):
+        """Open a DoPut stream, forwarding CallOptions unconditionally."""
+        return client.do_put(descriptor, schema, options=self.call_options)
 
     def _do_exchange(self, client, descriptor, schema):
-        """Open a streaming exchange, forwarding CallOptions when understood."""
+        """Open a streaming exchange.  ``do_exchange_stream`` is the one
+        optional protocol method (read/write-only clients are still valid),
+        so its absence is a typed refusal rather than an AttributeError."""
         opener = getattr(client, "do_exchange_stream", None)
         if opener is None:
             raise FlightError(
                 f"client {type(client).__name__} does not support streaming exchange")
-        if self.call_options is not None and self._takes_options(client, "do_exchange_stream"):
-            return opener(descriptor, schema, options=self.call_options)
-        return opener(descriptor, schema)
+        return opener(descriptor, schema, options=self.call_options)
 
     def _bump(self, counter: str, n: int = 1) -> None:
         with self._stat_lock:

@@ -81,7 +81,8 @@ import json
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from collections.abc import Mapping
+from dataclasses import dataclass, field, replace
 from itertools import chain
 from typing import Iterable, Iterator
 
@@ -126,6 +127,7 @@ from .protocol import (
 )
 from .exchange import DEFAULT_WINDOW, ack_interval
 from .services import ExchangeService, ExchangeServiceRegistry, drive_exchange
+from .storage import StorageProvider, make_provider
 from .transport import (
     COALESCE_BYTES,
     KIND_CTRL,
@@ -136,6 +138,57 @@ from .transport import (
 
 _PUT_DEDUP_WINDOW = 32   # recent content hashes remembered per dataset
 _TXN_FINISH_WINDOW = 64  # recent committed/aborted txn ids (idempotency)
+
+_UNSET = object()  # legacy-kwarg sentinel: distinguishes "not passed" from a value
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    """One bundle for ``InMemoryFlightServer``'s construction knobs.
+
+    Replaces the sprawling per-kwarg signature: build a config once and hand
+    it to many servers (cluster shards, benchmark sweeps).  The legacy
+    keyword arguments are still accepted for one release and route through
+    this dataclass — an explicitly passed kwarg overrides the same field of
+    a ``config`` also given.
+
+    ``storage`` selects the dataset backend (storage.py): ``None``/
+    ``"memory"``, ``"disk:<root>"``, ``"remote:<uri>"``, or a ready
+    ``StorageProvider`` instance.
+    """
+
+    auth_token: str | None = None
+    wire_codec: str = DEFAULT_CODEC
+    coalesce: bool = True
+    cache_encoded: bool = True
+    batches_per_endpoint: int = 0
+    endpoints_per_query: int = 4
+    dedup_puts: bool = True
+    stage_ttl: float = 60.0
+    storage: "str | StorageProvider | None" = None
+
+
+class _ProviderMapping(Mapping):
+    """Read-only dict-shaped view over a provider (``_store``/``_schemas``
+    back-compat: external code historically peeked at those dicts)."""
+
+    def __init__(self, provider: StorageProvider, getter):
+        self._provider = provider
+        self._getter = getter
+
+    def __getitem__(self, name):
+        if not self._provider.exists(name):
+            raise KeyError(name)
+        return self._getter(name)
+
+    def __contains__(self, name):
+        return self._provider.exists(name)
+
+    def __iter__(self):
+        return iter(self._provider.list())
+
+    def __len__(self):
+        return len(self._provider.list())
 
 
 def parse_txn_body(raw: bytes) -> dict:
@@ -162,13 +215,18 @@ def parse_txn_body(raw: bytes) -> dict:
 
 @dataclass
 class _StagedTxn:
-    """One transaction's staged-but-invisible payload on this server."""
+    """Bookkeeping for one staged-but-invisible transaction.
+
+    The payload itself lives in the storage provider (durably, for the disk
+    backend); the server only tracks counters, the in-txn dedup digests,
+    and the TTL/prepared state that drive the 2PC protocol."""
 
     dataset: str
     schema: Schema
-    batches: list[RecordBatch] = field(default_factory=list)
-    digests: set = field(default_factory=set)  # in-txn stream dedup (retries)
+    batches: int = 0
+    rows: int = 0
     nbytes: int = 0
+    digests: set = field(default_factory=set)  # in-txn stream dedup (retries)
     expires_at: float = 0.0
     prepared: bool = False
 
@@ -305,17 +363,21 @@ class FlightServerBase:
             method = req.get("method")
             opts = req.get("options") or {}
             try:
+                # unary verbs buffer their reply and send it *after* the
+                # middleware chain unwinds: once the client holds the answer,
+                # every on_complete hook (metrics, logging) has already fired
+                reply: dict | None = None
                 with self.middleware.wrap(self._call_context(method or "?", req)):
                     if method == "GetFlightInfo":
                         info = self.get_flight_info_impl(
                             FlightDescriptor.from_json(req["descriptor"]))
-                        conn.send_ctrl({"info": info.to_json()})
+                        reply = {"info": info.to_json()}
                     elif method == "ListFlights":
                         infos = self.list_flights_impl()
-                        conn.send_ctrl({"infos": [i.to_json() for i in infos]})
+                        reply = {"infos": [i.to_json() for i in infos]}
                     elif method == "DoAction":
                         results = self.do_action_impl(Action.from_json(req["action"]))
-                        conn.send_ctrl({"results": [r.to_json() for r in results]})
+                        reply = {"results": [r.to_json() for r in results]}
                     elif method == "DoGet":
                         self._serve_do_get(conn, Ticket.from_json(req["ticket"]), opts)
                     elif method == "DoPut":
@@ -324,9 +386,11 @@ class FlightServerBase:
                         self._serve_do_exchange(
                             conn, FlightDescriptor.from_json(req["descriptor"]), opts)
                     elif method == "Handshake":
-                        conn.send_ctrl({"ok": True})
+                        reply = {"ok": True}
                     else:
                         raise FlightInvalidArgument(f"unknown method {method!r}")
+                if reply is not None:
+                    conn.send_ctrl(reply)
             except FlightError as e:
                 conn.send_ctrl(e.to_wire())
 
@@ -553,35 +617,62 @@ def _content_digest(schema: Schema, batches: list[RecordBatch]) -> str:
 
 
 class InMemoryFlightServer(FlightServerBase):
-    """Dataset store: descriptor path[0] -> list[RecordBatch]."""
+    """Dataset store: descriptor path[0] -> list[RecordBatch].
+
+    The store itself lives behind a pluggable ``StorageProvider``
+    (storage.py) — memory (default, the historical behavior), ``disk:<root>``
+    (Arrow-IPC spill files, mmap-backed re-serve, durable staging +
+    restart recovery), or ``remote:<uri>`` (forward to another Flight
+    endpoint).  The serving layer — verbs, encode-once cache, the 2PC
+    staging protocol — is identical across backends."""
 
     def __init__(
         self,
         location_name: str = "local",
-        auth_token: str | None = None,
-        batches_per_endpoint: int = 0,
+        auth_token=_UNSET,
+        batches_per_endpoint=_UNSET,
         shard_id: int | None = None,
         *,
-        wire_codec: str = DEFAULT_CODEC,
-        coalesce: bool = True,
-        cache_encoded: bool = True,
-        endpoints_per_query: int = 4,
-        dedup_puts: bool = True,
-        stage_ttl: float = 60.0,
+        config: ServerConfig | None = None,
+        wire_codec=_UNSET,
+        coalesce=_UNSET,
+        cache_encoded=_UNSET,
+        endpoints_per_query=_UNSET,
+        dedup_puts=_UNSET,
+        stage_ttl=_UNSET,
+        storage=_UNSET,
         middleware: Iterable[ServerMiddleware] | None = None,
         services: ExchangeServiceRegistry | None = None,
     ):
-        super().__init__(location_name, auth_token, wire_codec=wire_codec,
-                         coalesce=coalesce, middleware=middleware, services=services)
-        self._store: dict[str, list[RecordBatch]] = {}
-        self._schemas: dict[str, Schema] = {}
+        # legacy kwargs (accepted for one release) route through ServerConfig;
+        # an explicitly passed kwarg wins over the same field of `config`
+        cfg = config if config is not None else ServerConfig()
+        overrides = {
+            k: v for k, v in {
+                "auth_token": auth_token,
+                "batches_per_endpoint": batches_per_endpoint,
+                "wire_codec": wire_codec,
+                "coalesce": coalesce,
+                "cache_encoded": cache_encoded,
+                "endpoints_per_query": endpoints_per_query,
+                "dedup_puts": dedup_puts,
+                "stage_ttl": stage_ttl,
+                "storage": storage,
+            }.items() if v is not _UNSET
+        }
+        if overrides:
+            cfg = replace(cfg, **overrides)
+        self.config = cfg
+        super().__init__(location_name, cfg.auth_token, wire_codec=cfg.wire_codec,
+                         coalesce=cfg.coalesce, middleware=middleware, services=services)
+        self._provider = make_provider(cfg.storage)
         self._lock = threading.Lock()
-        self.batches_per_endpoint = batches_per_endpoint  # 0 = single endpoint
+        self.batches_per_endpoint = cfg.batches_per_endpoint  # 0 = single endpoint
         self.shard_id = shard_id  # set by cluster.py: stamped into tickets
-        self.endpoints_per_query = endpoints_per_query  # GetFlightInfo(QueryCommand) fan-out
+        self.endpoints_per_query = cfg.endpoints_per_query  # GetFlightInfo(QueryCommand) fan-out
         # encode-once cache: dataset -> (schema msg, per-batch msgs), built on
         # first DoGet, invalidated whenever the dataset changes
-        self.cache_encoded = cache_encoded
+        self.cache_encoded = cfg.cache_encoded
         self._encoded: dict[str, tuple[EncodedMessage, tuple[EncodedMessage, ...]]] = {}
         self._versions: dict[str, int] = {}  # bumped on every dataset mutation
         self.cache_hits = 0
@@ -591,12 +682,12 @@ class InMemoryFlightServer(FlightServerBase):
         self.query_rows_in = 0
         self.query_rows_out = 0
         # DoPut dedup guard: dataset -> recent payload content hashes
-        self.dedup_puts = dedup_puts
+        self.dedup_puts = cfg.dedup_puts
         self._recent_puts: dict[str, OrderedDict[str, dict]] = {}
         self.put_dedup_hits = 0
         # transactional staged puts: txn_id -> staged payload, plus a window
         # of finished txns so duplicate commit/abort rounds are idempotent
-        self.stage_ttl = stage_ttl
+        self.stage_ttl = cfg.stage_ttl
         self._staged: dict[str, _StagedTxn] = {}
         self._finished_txns: OrderedDict[str, tuple[str, dict]] = {}
         self._reaper: threading.Thread | None = None
@@ -604,6 +695,31 @@ class InMemoryFlightServer(FlightServerBase):
         self.txn_commits = 0
         self.txn_aborts = 0
         self.txn_gc_reaped = 0
+        # restart recovery: a durable provider hands back the stages a
+        # previous process left behind — prepared ones stay GC-exempt and
+        # commit/abort from the coordinator finishes the interrupted 2PC
+        for txn_id, e in self._provider.staged_txns().items():
+            self._staged[txn_id] = _StagedTxn(
+                e.dataset, e.schema, e.batches, e.rows, e.nbytes,
+                expires_at=time.monotonic() + self.stage_ttl,
+                prepared=e.prepared)
+        if self._staged:
+            with self._lock:
+                self._ensure_reaper()
+
+    @property
+    def storage(self) -> StorageProvider:
+        return self._provider
+
+    # back-compat read views: external code (and a long tail of tests)
+    # historically peeked at the server's store/schema dicts
+    @property
+    def _store(self) -> Mapping:
+        return _ProviderMapping(self._provider, self._provider.read_batches)
+
+    @property
+    def _schemas(self) -> Mapping:
+        return _ProviderMapping(self._provider, self._provider.schema)
 
     # -- direct (in-proc) API ------------------------------------------- #
     def add_dataset(
@@ -613,19 +729,18 @@ class InMemoryFlightServer(FlightServerBase):
         if schema is None:
             schema = batches[0].schema
         with self._lock:
-            self._store[name] = list(batches)
-            self._schemas[name] = schema
+            self._provider.replace(name, schema, list(batches))
             self._encoded.pop(name, None)
             self._recent_puts.pop(name, None)
             self._versions[name] = self._versions.get(name, 0) + 1
 
     def dataset(self, name: str) -> list[RecordBatch]:
-        return self._store[name]
+        return self._provider.read_batches(name)
 
     # -- handlers ---------------------------------------------------------- #
     def _info_for(self, name: str) -> FlightInfo:
-        batches = self._store[name]
-        n = len(batches)
+        info = self._provider.info(name)
+        n = info["batches"]
         per = self.batches_per_endpoint or n or 1
         extra = {} if self.shard_id is None else {"shard": self.shard_id}
         endpoints = [
@@ -637,11 +752,11 @@ class InMemoryFlightServer(FlightServerBase):
             for i in range(0, max(n, 1), per)
         ]
         return FlightInfo(
-            self._schemas[name],
+            self._provider.schema(name),
             FlightDescriptor.for_path(name),
             endpoints,
-            total_records=sum(b.num_rows for b in batches),
-            total_bytes=sum(b.nbytes() for b in batches),
+            total_records=info["rows"],
+            total_bytes=info["bytes"],
         )
 
     def _plan_query_info(self, cmd: QueryCommand, descriptor: FlightDescriptor) -> FlightInfo:
@@ -651,11 +766,11 @@ class InMemoryFlightServer(FlightServerBase):
         ranges, so a ranged query descriptor only ever touches its slice."""
         plan = cmd.plan
         with self._lock:
-            if plan.dataset not in self._store:
+            if not self._provider.exists(plan.dataset):
                 raise FlightNotFound(f"no such dataset: {plan.dataset}",
                                      detail={"dataset": plan.dataset})
-            n = len(self._store[plan.dataset])
-            schema = self._schemas[plan.dataset]
+            n = self._provider.info(plan.dataset)["batches"]
+            schema = self._provider.schema(plan.dataset)
         out_schema = schema.select(plan.projection) if plan.projection else schema
         lo = min(max(cmd.start, 0), n)
         hi = n if cmd.stop < 0 else min(cmd.stop, n)
@@ -676,7 +791,7 @@ class InMemoryFlightServer(FlightServerBase):
 
     def list_flights_impl(self) -> list[FlightInfo]:
         with self._lock:
-            return [self._info_for(name) for name in self._store]
+            return [self._info_for(name) for name in self._provider.list()]
 
     def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
         if descriptor.path is None:
@@ -688,7 +803,7 @@ class InMemoryFlightServer(FlightServerBase):
                 f"{type(cmd).__name__}")
         name = descriptor.path[0]
         with self._lock:
-            if name not in self._store:
+            if not self._provider.exists(name):
                 raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             return self._info_for(name)
 
@@ -698,12 +813,12 @@ class InMemoryFlightServer(FlightServerBase):
 
         plan = cmd.plan
         with self._lock:
-            if plan.dataset not in self._store:
+            if not self._provider.exists(plan.dataset):
                 raise FlightNotFound(f"no such dataset: {plan.dataset}",
                                      detail={"dataset": plan.dataset})
             stop = cmd.stop if cmd.stop >= 0 else None
-            batches = self._store[plan.dataset][cmd.start : stop]
-            schema = self._schemas[plan.dataset]
+            batches = self._provider.read_batches(plan.dataset, cmd.start, stop)
+            schema = self._provider.schema(plan.dataset)
         out_schema = schema.select(plan.projection) if plan.projection else schema
         results = list(execute(plan, batches))
         with self._lock:
@@ -721,11 +836,11 @@ class InMemoryFlightServer(FlightServerBase):
                 f"{type(cmd).__name__} tickets are not redeemable via DoGet")
         name = cmd.dataset
         with self._lock:
-            if name not in self._store:
+            if not self._provider.exists(name):
                 raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             stop = cmd.stop if cmd.stop >= 0 else None
-            batches = self._store[name][cmd.start : stop]
-            schema = self._schemas[name]
+            batches = self._provider.read_batches(name, cmd.start, stop)
+            schema = self._provider.schema(name)
         return schema, iter(batches)
 
     def do_get_encoded(
@@ -747,7 +862,8 @@ class InMemoryFlightServer(FlightServerBase):
             # enter (or poison) the cache.
             plan = cmd.plan
             with self._lock:
-                schema = self._schemas.get(plan.dataset)
+                schema = (self._provider.schema(plan.dataset)
+                          if self._provider.exists(plan.dataset) else None)
             if schema is None or not plan.is_passthrough(schema.names):
                 return None
             name, start, stop = plan.dataset, cmd.start, cmd.stop
@@ -757,18 +873,19 @@ class InMemoryFlightServer(FlightServerBase):
             return None
         stop_ix = stop if stop >= 0 else None
         with self._lock:
-            if name not in self._store:
+            if not self._provider.exists(name):
                 raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             entry = self._encoded.get(name)
             if entry is not None:
                 self.cache_hits += 1
                 return entry[0], list(entry[1][start:stop_ix])
             self.cache_misses += 1
-            batches = list(self._store[name])
-            schema = self._schemas[name]
+            batches = self._provider.read_batches(name)
+            schema = self._provider.schema(name)
             version = self._versions.get(name, 0)
         # encode outside the lock: a multi-GB first build must not stall
-        # every other RPC on this server
+        # every other RPC on this server.  For the disk provider the batches
+        # are mmap-backed views, so this pass is the only value-data read.
         schema_msg = encode_schema(schema)
         msgs = []
         for b in batches:
@@ -778,7 +895,7 @@ class InMemoryFlightServer(FlightServerBase):
         with self._lock:
             # cache only if the dataset didn't change while we encoded; the
             # stale-but-consistent snapshot still serves this request
-            if self._versions.get(name, 0) == version and name in self._store:
+            if self._versions.get(name, 0) == version and self._provider.exists(name):
                 self._encoded[name] = entry
         return entry[0], list(entry[1][start:stop_ix])
 
@@ -819,6 +936,7 @@ class InMemoryFlightServer(FlightServerBase):
                        if s.expires_at <= now and not s.prepared]
             for txn_id in expired:
                 self._staged.pop(txn_id)
+                self._provider.discard_stage(txn_id)
                 self._finish_txn(txn_id, "expired", {})
                 self.txn_gc_reaped += 1
 
@@ -843,6 +961,7 @@ class InMemoryFlightServer(FlightServerBase):
         also makes stage-leg retries unsafe, exactly as for plain puts)."""
         digest = _content_digest(schema, received) if self.dedup_puts else None
         nbytes = sum(b.nbytes() for b in received)
+        rows = sum(b.num_rows for b in received)
         with self._lock:
             outcome = self._finished_txns.get(cmd.txn_id)
             if outcome is not None:
@@ -865,14 +984,16 @@ class InMemoryFlightServer(FlightServerBase):
                 if digest in txn.digests:  # retried stage stream: idempotent
                     self.put_dedup_hits += 1
                     return {"staged": True, "txn_id": cmd.txn_id, "deduped": True,
-                            "batches": len(received),
-                            "rows": sum(b.num_rows for b in received),
+                            "batches": len(received), "rows": rows,
                             "bytes": nbytes}
                 txn.digests.add(digest)
-            txn.batches.extend(received)
+            # payload lands in the provider (durably, for the disk backend)
+            self._provider.stage(cmd.txn_id, cmd.dataset, schema, received)
+            txn.batches += len(received)
+            txn.rows += rows
             txn.nbytes += nbytes
         return {"staged": True, "txn_id": cmd.txn_id, "batches": len(received),
-                "rows": sum(b.num_rows for b in received), "bytes": nbytes}
+                "rows": rows, "bytes": nbytes}
 
     def _txn_prepare(self, o: dict) -> dict:
         """Phase-1 vote: is this txn's stage present and healthy here?
@@ -896,9 +1017,12 @@ class InMemoryFlightServer(FlightServerBase):
                 return {"txn_id": txn_id, "staged": False}
             txn.prepared = True
             txn.expires_at = time.monotonic() + self.stage_ttl
+            # durable backends persist the yes vote: a prepared stage must
+            # survive a restart and stay GC-exempt in the next process too
+            self._provider.mark_prepared(txn_id)
             return {"txn_id": txn_id, "staged": True,
-                    "batches": len(txn.batches),
-                    "rows": sum(b.num_rows for b in txn.batches),
+                    "batches": txn.batches,
+                    "rows": txn.rows,
                     "bytes": txn.nbytes}
 
     def _txn_commit(self, o: dict) -> dict:
@@ -924,15 +1048,16 @@ class InMemoryFlightServer(FlightServerBase):
                     f"no staged txn {txn_id!r} (never staged, or GC'd after "
                     f"{self.stage_ttl}s)", detail={"txn_id": txn_id})
             name = txn.dataset
-            self._store.setdefault(name, []).extend(txn.batches)
-            self._schemas.setdefault(name, txn.schema)
+            # the provider makes the staged payload part of the dataset —
+            # on disk, an atomic rename of the staged part files
+            self._provider.commit_stage(txn_id)
             self._encoded.pop(name, None)  # visibility flip invalidates cache
             self._versions[name] = self._versions.get(name, 0) + 1
             stats = {
                 "txn_id": txn_id,
                 "dataset": name,
-                "batches": len(txn.batches),
-                "rows": sum(b.num_rows for b in txn.batches),
+                "batches": txn.batches,
+                "rows": txn.rows,
                 "bytes": txn.nbytes,
             }
             self._finish_txn(txn_id, "committed", stats)
@@ -958,6 +1083,7 @@ class InMemoryFlightServer(FlightServerBase):
             txn = self._staged.pop(txn_id, None)
             if txn is None:
                 return {"txn_id": txn_id, "aborted": False}
+            self._provider.discard_stage(txn_id)
             self._finish_txn(txn_id, "aborted", {"dataset": txn.dataset})
             self.txn_aborts += 1
         return {"txn_id": txn_id, "aborted": True}
@@ -982,9 +1108,7 @@ class InMemoryFlightServer(FlightServerBase):
                     # retried put of an already-committed payload: idempotent
                     self.put_dedup_hits += 1
                     return {**recent[digest], "deduped": True}
-            self._store.setdefault(name, [])
-            self._store[name].extend(received)
-            self._schemas.setdefault(name, schema)
+            self._provider.append(name, schema, received)
             self._encoded.pop(name, None)
             self._versions[name] = self._versions.get(name, 0) + 1
             stats = {
@@ -1000,6 +1124,7 @@ class InMemoryFlightServer(FlightServerBase):
 
     def shutdown(self) -> None:
         self._reaper_stop.set()
+        self._provider.close()
         super().shutdown()
 
     def do_action_impl(self, action: Action) -> list[ActionResult]:
@@ -1015,15 +1140,27 @@ class InMemoryFlightServer(FlightServerBase):
         if action.type == "drop":
             name = action.body.decode()
             with self._lock:
-                self._store.pop(name, None)
+                self._provider.drop(name)
                 self._encoded.pop(name, None)
                 self._recent_puts.pop(name, None)
                 self._versions[name] = self._versions.get(name, 0) + 1
             return [ActionResult(b"dropped")]
         if action.type == "list-names":
             with self._lock:
-                names = ",".join(self._store)
+                names = ",".join(self._provider.list())
             return [ActionResult(names.encode())]
+        if action.type == "aggregate":
+            # filtered aggregation where the data lives — only scalars cross
+            # the wire (absorbed from the retired FlightQueryService shim)
+            from ...query.engine import QueryPlan, aggregate  # lazy import cycle
+
+            plan = QueryPlan.deserialize(action.body)
+            with self._lock:
+                if not self._provider.exists(plan.dataset):
+                    raise FlightNotFound(f"no such dataset: {plan.dataset}",
+                                         detail={"dataset": plan.dataset})
+                batches = self._provider.read_batches(plan.dataset)
+            return [ActionResult(json.dumps(aggregate(plan, batches)).encode())]
         if action.type == "health":
             return [ActionResult(b"ok")]
         if action.type == "server-stats":
@@ -1044,19 +1181,14 @@ class InMemoryFlightServer(FlightServerBase):
                     "txn_commits": self.txn_commits,
                     "txn_aborts": self.txn_aborts,
                     "txn_gc_reaped": self.txn_gc_reaped,
+                    "storage": self._provider.stats(),
                     "verbs": self.metrics.snapshot(),
                 }
             return [ActionResult(json.dumps(stats).encode())]
         if action.type == "stats":
             with self._lock:
-                stats = {
-                    name: {
-                        "batches": len(bs),
-                        "rows": sum(b.num_rows for b in bs),
-                        "bytes": sum(b.nbytes() for b in bs),
-                    }
-                    for name, bs in self._store.items()
-                }
+                stats = {name: self._provider.info(name)
+                         for name in self._provider.list()}
             return [ActionResult(json.dumps(stats).encode())]
         raise FlightError(f"unknown action {action.type!r}")
 

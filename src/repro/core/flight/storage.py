@@ -1,0 +1,611 @@
+"""Storage provider plane — pluggable dataset backends behind the server.
+
+``InMemoryFlightServer`` used to *be* its store: datasets lived in dicts, a
+restart lost the world, and PR 4's transactional staging was RAM-only.  This
+module splits storage out behind a ``StorageProvider`` interface (the
+fal-teller provider pattern: a small ``read/write/append/drop/info/list``
+contract plus staging hooks), so the serving layer — verbs, middleware,
+encode-once cache, the 2PC protocol — is backend-agnostic:
+
+* ``MemoryStorageProvider`` — the historical behavior: dataset name ->
+  ``list[RecordBatch]``, zero-copy, nothing survives the process.
+* ``DiskStorageProvider``   — datasets spill to Arrow-IPC stream files (the
+  0xB1 binary codec from ``core/ipc.py``) and re-serve **mmap-backed**:
+  decoded batches are views into the page cache, so feeding the server's
+  encode-once cache never materializes a second copy of value data.
+  Transactional stages land as files under ``.staging/<txn>/`` and commit
+  is an ``os.rename`` into the dataset directory — which is what makes the
+  two-phase put *durable*: a server recreated on the same root recovers
+  both committed datasets and prepared-but-uncommitted stages.
+* ``RemoteFlightProvider``  — forwards every call to another Flight
+  endpoint (tiered serving: a front server whose "store" is a remote
+  cluster; reads proxy DoGet, writes proxy DoPut, staging proxies the
+  staged-put/txn actions).
+
+Concurrency contract: providers are driven by exactly one server, which
+holds its store lock across every mutating call — providers need no
+internal locking beyond what their own lazily-built caches require.
+
+On-disk layout (``DiskStorageProvider(root)``)::
+
+    root/
+      datasets/<quoted-name>/part-00000000-<nonce>.arrow   # IPC stream files
+      .staging/<quoted-txn>/meta.json                      # {dataset, prepared}
+      .staging/<quoted-txn>/part-00000000-<nonce>.arrow    # staged streams
+      .tmp/                                                # write-then-rename
+
+Every part file is a complete IPC stream (schema + batches + EOS); a
+dataset's batch order is its part files in name order, each part's batches
+in stream order.  Writes go to ``.tmp`` first and ``os.rename`` into place,
+so a reader (or a crash) never observes a half-written part.  Committing a
+txn renames its staged part files into the dataset directory — data is
+never re-copied on commit.  See docs/providers.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import uuid
+from dataclasses import dataclass, field
+from typing import Iterable
+from urllib.parse import quote, unquote
+
+import numpy as np
+
+from ..buffer import Buffer
+from ..ipc import read_stream_with_schema, write_stream
+from ..recordbatch import RecordBatch
+from ..schema import Schema
+from .errors import FlightInvalidArgument, FlightNotFound
+
+_PART_FMT = "part-{seq:08d}-{nonce}.arrow"
+
+
+@dataclass
+class StagedEntry:
+    """One recovered/live staged transaction as a provider reports it."""
+
+    dataset: str
+    schema: Schema
+    batches: int = 0
+    rows: int = 0
+    nbytes: int = 0
+    prepared: bool = False
+
+
+class StorageProvider:
+    """Backend contract for a Flight server's dataset store.
+
+    All methods are called under the owning server's store lock (see module
+    docstring).  ``name`` is an opaque dataset key; providers must accept
+    any string.  Unknown datasets raise ``FlightNotFound`` from the read
+    side (``schema``/``read_batches``/``info``); ``drop`` is idempotent.
+    """
+
+    kind = "?"
+
+    # -- catalog ---------------------------------------------------------- #
+    def list(self) -> list[str]:
+        raise NotImplementedError
+
+    def exists(self, name: str) -> bool:
+        raise NotImplementedError
+
+    def schema(self, name: str) -> Schema:
+        raise NotImplementedError
+
+    def info(self, name: str) -> dict:
+        """``{"batches", "rows", "bytes"}`` for one dataset."""
+        raise NotImplementedError
+
+    # -- data ------------------------------------------------------------- #
+    def read_batches(self, name: str, start: int = 0,
+                     stop: int | None = None) -> list[RecordBatch]:
+        raise NotImplementedError
+
+    def append(self, name: str, schema: Schema,
+               batches: Iterable[RecordBatch]) -> None:
+        raise NotImplementedError
+
+    def replace(self, name: str, schema: Schema,
+                batches: Iterable[RecordBatch]) -> None:
+        """``add_dataset`` semantics: drop whatever exists, then append."""
+        self.drop(name)
+        self.append(name, schema, batches)
+
+    def drop(self, name: str) -> None:
+        raise NotImplementedError
+
+    # -- durable transactional staging ------------------------------------ #
+    # The *protocol* (votes, idempotency windows, TTL GC) lives in the
+    # server; providers supply the durability primitives underneath it.
+    def stage(self, txn_id: str, dataset: str, schema: Schema,
+              batches: list[RecordBatch]) -> None:
+        raise NotImplementedError
+
+    def commit_stage(self, txn_id: str) -> None:
+        """Make the txn's staged payload part of its dataset (atomically for
+        single-stream stages on disk: one ``os.rename``)."""
+        raise NotImplementedError
+
+    def discard_stage(self, txn_id: str) -> None:
+        raise NotImplementedError
+
+    def mark_prepared(self, txn_id: str) -> None:
+        """Durably record a phase-1 yes vote (no-op for volatile backends)."""
+
+    def staged_txns(self) -> dict[str, StagedEntry]:
+        """Stages this provider holds — including ones recovered from a
+        previous process for durable backends."""
+        return {}
+
+    # -- introspection ----------------------------------------------------- #
+    def stats(self) -> dict:
+        """Provider-kind block surfaced under ``server-stats["storage"]``."""
+        return {"kind": self.kind, "datasets": len(self.list())}
+
+    def close(self) -> None:
+        """Release backend handles (sockets, mmaps).  Idempotent."""
+
+
+# --------------------------------------------------------------------------
+# memory
+# --------------------------------------------------------------------------
+
+
+class MemoryStorageProvider(StorageProvider):
+    """The historical in-process store: ``name -> list[RecordBatch]``."""
+
+    kind = "memory"
+
+    def __init__(self):
+        self._store: dict[str, list[RecordBatch]] = {}
+        self._schemas: dict[str, Schema] = {}
+        self._staged: dict[str, tuple[str, Schema, list[RecordBatch]]] = {}
+
+    def list(self) -> list[str]:
+        return list(self._store)
+
+    def exists(self, name: str) -> bool:
+        return name in self._store
+
+    def _require(self, name: str) -> list[RecordBatch]:
+        if name not in self._store:
+            raise FlightNotFound(f"no such dataset: {name}", detail={"dataset": name})
+        return self._store[name]
+
+    def schema(self, name: str) -> Schema:
+        self._require(name)
+        return self._schemas[name]
+
+    def info(self, name: str) -> dict:
+        bs = self._require(name)
+        return {"batches": len(bs), "rows": sum(b.num_rows for b in bs),
+                "bytes": sum(b.nbytes() for b in bs)}
+
+    def read_batches(self, name, start=0, stop=None):
+        return self._require(name)[start:stop]
+
+    def append(self, name, schema, batches) -> None:
+        self._store.setdefault(name, []).extend(batches)
+        self._schemas.setdefault(name, schema)
+
+    def replace(self, name, schema, batches) -> None:
+        self._store[name] = list(batches)
+        self._schemas[name] = schema
+
+    def drop(self, name) -> None:
+        self._store.pop(name, None)
+        self._schemas.pop(name, None)
+
+    def stage(self, txn_id, dataset, schema, batches) -> None:
+        entry = self._staged.get(txn_id)
+        if entry is None:
+            self._staged[txn_id] = (dataset, schema, list(batches))
+        else:
+            entry[2].extend(batches)
+
+    def commit_stage(self, txn_id) -> None:
+        if txn_id not in self._staged:
+            raise FlightNotFound(f"no staged txn {txn_id!r}",
+                                 detail={"txn_id": txn_id})
+        dataset, schema, batches = self._staged.pop(txn_id)
+        self.append(dataset, schema, batches)
+
+    def discard_stage(self, txn_id) -> None:
+        self._staged.pop(txn_id, None)
+
+    def staged_txns(self) -> dict[str, StagedEntry]:
+        return {
+            t: StagedEntry(ds, sch, len(bs), sum(b.num_rows for b in bs),
+                           sum(b.nbytes() for b in bs))
+            for t, (ds, sch, bs) in self._staged.items()
+        }
+
+
+# --------------------------------------------------------------------------
+# disk
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class _DiskDataset:
+    """Decoded view of one on-disk dataset (batches are mmap-backed)."""
+
+    schema: Schema
+    batches: list[RecordBatch] = field(default_factory=list)
+
+
+class DiskStorageProvider(StorageProvider):
+    """Arrow-IPC part files under ``root`` — spill on write, mmap on read.
+
+    Writes are write-to-``.tmp``-then-rename, so parts are all-or-nothing.
+    Reads mmap each part once and keep the *decoded* batches cached: their
+    buffers are zero-copy views into the mapping, so the cache costs
+    metadata, not data — the page cache owns the bytes, and datasets larger
+    than RAM page in on demand.  Counters: ``spills``/``spill_bytes``
+    (part files written), ``mmap_reads`` (part files mapped).
+    """
+
+    kind = "disk"
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = os.fspath(root)
+        self._datasets_dir = os.path.join(self.root, "datasets")
+        self._staging_dir = os.path.join(self.root, ".staging")
+        self._tmp_dir = os.path.join(self.root, ".tmp")
+        for d in (self._datasets_dir, self._staging_dir, self._tmp_dir):
+            os.makedirs(d, exist_ok=True)
+        # decoded mmap-backed batches per dataset, dropped on any mutation
+        self._decoded: dict[str, _DiskDataset] = {}
+        self._mmaps: list[np.memmap] = []  # keep mappings alive explicitly
+        self.spills = 0
+        self.spill_bytes = 0
+        self.mmap_reads = 0
+        self.recovered_datasets = len(self.list())
+        self.recovered_stages = len(self._stage_dirs())
+
+    # -- paths ------------------------------------------------------------- #
+    def _dataset_dir(self, name: str) -> str:
+        return os.path.join(self._datasets_dir, quote(name, safe=""))
+
+    def _parts(self, d: str) -> list[str]:
+        if not os.path.isdir(d):
+            return []
+        return sorted(f for f in os.listdir(d) if f.endswith(".arrow"))
+
+    def _next_seq(self, d: str) -> int:
+        parts = self._parts(d)
+        return int(parts[-1].split("-")[1]) + 1 if parts else 0
+
+    def _write_part(self, dest_dir: str, seq: int, schema: Schema,
+                    batches: list[RecordBatch]) -> str:
+        payload = write_stream(batches, schema=schema)
+        tmp = os.path.join(self._tmp_dir, uuid.uuid4().hex)
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.makedirs(dest_dir, exist_ok=True)
+        dest = os.path.join(
+            dest_dir, _PART_FMT.format(seq=seq, nonce=uuid.uuid4().hex[:6]))
+        os.rename(tmp, dest)
+        self.spills += 1
+        self.spill_bytes += len(payload)
+        return dest
+
+    def _load(self, name: str) -> _DiskDataset:
+        entry = self._decoded.get(name)
+        if entry is not None:
+            return entry
+        d = self._dataset_dir(name)
+        parts = self._parts(d)
+        if not parts:
+            raise FlightNotFound(f"no such dataset: {name}", detail={"dataset": name})
+        schema, batches = None, []
+        for p in parts:
+            s, bs = self._mmap_stream(os.path.join(d, p))
+            schema = schema or s
+            batches.extend(bs)
+        entry = _DiskDataset(schema, batches)
+        self._decoded[name] = entry
+        return entry
+
+    def _mmap_stream(self, path: str) -> tuple[Schema, list[RecordBatch]]:
+        mm = np.memmap(path, dtype=np.uint8, mode="r")
+        self._mmaps.append(mm)
+        self.mmap_reads += 1
+        return read_stream_with_schema(Buffer(mm))
+
+    # -- catalog ----------------------------------------------------------- #
+    def list(self) -> list[str]:
+        return sorted(
+            unquote(n) for n in os.listdir(self._datasets_dir)
+            if self._parts(os.path.join(self._datasets_dir, n))
+        )
+
+    def exists(self, name: str) -> bool:
+        return bool(self._parts(self._dataset_dir(name)))
+
+    def schema(self, name: str) -> Schema:
+        return self._load(name).schema
+
+    def info(self, name: str) -> dict:
+        bs = self._load(name).batches
+        return {"batches": len(bs), "rows": sum(b.num_rows for b in bs),
+                "bytes": sum(b.nbytes() for b in bs)}
+
+    # -- data --------------------------------------------------------------- #
+    def read_batches(self, name, start=0, stop=None):
+        return self._load(name).batches[start:stop]
+
+    def append(self, name, schema, batches) -> None:
+        d = self._dataset_dir(name)
+        self._write_part(d, self._next_seq(d), schema, list(batches))
+        self._decoded.pop(name, None)
+
+    def replace(self, name, schema, batches) -> None:
+        self.drop(name)
+        self.append(name, schema, batches)
+
+    def drop(self, name) -> None:
+        d = self._dataset_dir(name)
+        if os.path.isdir(d):
+            shutil.rmtree(d)
+        self._decoded.pop(name, None)
+
+    # -- staging ------------------------------------------------------------ #
+    def _txn_dir(self, txn_id: str) -> str:
+        return os.path.join(self._staging_dir, quote(txn_id, safe=""))
+
+    def _stage_dirs(self) -> list[str]:
+        return sorted(
+            os.path.join(self._staging_dir, n)
+            for n in os.listdir(self._staging_dir)
+            if os.path.isdir(os.path.join(self._staging_dir, n))
+        )
+
+    def _meta(self, txn_dir: str) -> dict:
+        try:
+            with open(os.path.join(txn_dir, "meta.json")) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+
+    def stage(self, txn_id, dataset, schema, batches) -> None:
+        d = self._txn_dir(txn_id)
+        os.makedirs(d, exist_ok=True)
+        meta_path = os.path.join(d, "meta.json")
+        if not os.path.exists(meta_path):
+            with open(meta_path, "w") as f:
+                json.dump({"dataset": dataset, "prepared": False}, f)
+        self._write_part(d, self._next_seq(d), schema, list(batches))
+
+    def mark_prepared(self, txn_id) -> None:
+        d = self._txn_dir(txn_id)
+        meta = self._meta(d)
+        if meta:
+            meta["prepared"] = True
+            with open(os.path.join(d, "meta.json"), "w") as f:
+                json.dump(meta, f)
+
+    def commit_stage(self, txn_id) -> None:
+        """Rename staged part files into the dataset directory — the commit
+        never re-reads or re-writes payload bytes.  A single-stream stage
+        (one part file) is one atomic ``os.rename``."""
+        d = self._txn_dir(txn_id)
+        meta = self._meta(d)
+        if "dataset" not in meta:
+            raise FlightNotFound(f"no staged txn {txn_id!r} on disk",
+                                 detail={"txn_id": txn_id})
+        dest = self._dataset_dir(meta["dataset"])
+        os.makedirs(dest, exist_ok=True)
+        seq = self._next_seq(dest)
+        for p in self._parts(d):
+            os.rename(os.path.join(d, p),
+                      os.path.join(dest, _PART_FMT.format(
+                          seq=seq, nonce=uuid.uuid4().hex[:6])))
+            seq += 1
+        shutil.rmtree(d)
+        self._decoded.pop(meta["dataset"], None)
+
+    def discard_stage(self, txn_id) -> None:
+        d = self._txn_dir(txn_id)
+        if os.path.isdir(d):
+            shutil.rmtree(d)
+
+    def staged_txns(self) -> dict[str, StagedEntry]:
+        out: dict[str, StagedEntry] = {}
+        for d in self._stage_dirs():
+            meta = self._meta(d)
+            parts = self._parts(d)
+            if "dataset" not in meta or not parts:
+                continue
+            schema, batches = None, []
+            for p in parts:
+                s, bs = self._mmap_stream(os.path.join(d, p))
+                schema = schema or s
+                batches.extend(bs)
+            out[unquote(os.path.basename(d))] = StagedEntry(
+                meta["dataset"], schema, len(batches),
+                sum(b.num_rows for b in batches),
+                sum(b.nbytes() for b in batches),
+                prepared=bool(meta.get("prepared")),
+            )
+        return out
+
+    # -- introspection ------------------------------------------------------- #
+    def disk_bytes(self) -> int:
+        total = 0
+        for base in (self._datasets_dir, self._staging_dir):
+            for dirpath, _dirs, files in os.walk(base):
+                for f in files:
+                    try:
+                        total += os.path.getsize(os.path.join(dirpath, f))
+                    except OSError:
+                        pass
+        return total
+
+    def stats(self) -> dict:
+        return {
+            "kind": self.kind,
+            "root": self.root,
+            "datasets": len(self.list()),
+            "disk_bytes": self.disk_bytes(),
+            "spills": self.spills,
+            "spill_bytes": self.spill_bytes,
+            "mmap_reads": self.mmap_reads,
+            "staged_txns_on_disk": len(self._stage_dirs()),
+            "recovered_datasets": self.recovered_datasets,
+            "recovered_stages": self.recovered_stages,
+        }
+
+    def close(self) -> None:
+        self._decoded.clear()
+        self._mmaps.clear()
+
+
+# --------------------------------------------------------------------------
+# remote Flight proxy
+# --------------------------------------------------------------------------
+
+
+class RemoteFlightProvider(StorageProvider):
+    """A provider whose backend is *another Flight endpoint* (tiered serving).
+
+    Reads redeem range tickets against the remote, writes open DoPut
+    streams, and the staging hooks forward the staged-put/txn protocol —
+    so a front server can serve (and transactionally ingest into) a
+    dataset that physically lives on a remote server or cluster.  Staging
+    durability is the remote's concern: ``staged_txns`` reports nothing,
+    because recovery belongs to the endpoint that owns the bytes.
+    """
+
+    kind = "remote"
+
+    def __init__(self, target, token: str | None = None):
+        # lazy import: client.py imports server.py which imports storage.py
+        from .client import FlightClient
+
+        self.target = getattr(target, "uri", target)
+        self._client = (target if isinstance(target, FlightClient)
+                        else FlightClient(target, token=token))
+        self._txn_datasets: dict[str, str] = {}
+        self.proxied_reads = 0
+        self.proxied_writes = 0
+
+    # -- catalog ----------------------------------------------------------- #
+    def list(self) -> list[str]:
+        from .protocol import Action
+
+        names = self._client.do_action(Action("list-names"))[0].body.decode()
+        return [n for n in names.split(",") if n]
+
+    def exists(self, name: str) -> bool:
+        return name in self.list()
+
+    def schema(self, name: str) -> Schema:
+        from .protocol import FlightDescriptor
+
+        return self._client.get_flight_info(FlightDescriptor.for_path(name)).schema
+
+    def info(self, name: str) -> dict:
+        from .protocol import Action
+
+        stats = json.loads(self._client.do_action(Action("stats"))[0].body)
+        if name not in stats:
+            raise FlightNotFound(f"no such dataset: {name}", detail={"dataset": name})
+        return stats[name]
+
+    # -- data --------------------------------------------------------------- #
+    def read_batches(self, name, start=0, stop=None):
+        from .protocol import Ticket
+
+        self.proxied_reads += 1
+        stop_ix = -1 if stop is None else stop
+        return list(self._client.do_get(Ticket.for_range(name, start, stop_ix)))
+
+    def _put(self, descriptor, schema, batches) -> None:
+        w = self._client.do_put(descriptor, schema)
+        w.write_batches(list(batches))
+        w.close()
+        self.proxied_writes += 1
+
+    def append(self, name, schema, batches) -> None:
+        from .protocol import FlightDescriptor
+
+        self._put(FlightDescriptor.for_path(name), schema, batches)
+
+    def replace(self, name, schema, batches) -> None:
+        self.drop(name)
+        self.append(name, schema, batches)
+
+    def drop(self, name) -> None:
+        from .protocol import Action
+
+        self._client.do_action(Action("drop", name.encode()))
+
+    # -- staging ------------------------------------------------------------ #
+    def stage(self, txn_id, dataset, schema, batches) -> None:
+        from .protocol import FlightDescriptor, StagedPutCommand
+
+        self._txn_datasets[txn_id] = dataset
+        self._put(FlightDescriptor.for_command(
+            StagedPutCommand(dataset, txn_id, "stage")), schema, batches)
+
+    def _txn_action(self, verb: str, txn_id: str) -> None:
+        from .protocol import Action
+
+        body = json.dumps({
+            "txn_id": txn_id,
+            "dataset": self._txn_datasets.get(txn_id, ""),
+        }).encode()
+        self._client.do_action(Action(verb, body))
+
+    def mark_prepared(self, txn_id) -> None:
+        self._txn_action("txn-prepare", txn_id)
+
+    def commit_stage(self, txn_id) -> None:
+        self._txn_action("txn-commit", txn_id)
+        self._txn_datasets.pop(txn_id, None)
+
+    def discard_stage(self, txn_id) -> None:
+        self._txn_action("txn-abort", txn_id)
+        self._txn_datasets.pop(txn_id, None)
+
+    # -- introspection ------------------------------------------------------- #
+    def stats(self) -> dict:
+        return {
+            "kind": self.kind,
+            "target": str(self.target),
+            "datasets": len(self.list()),
+            "proxied_reads": self.proxied_reads,
+            "proxied_writes": self.proxied_writes,
+        }
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+
+
+def make_provider(storage) -> StorageProvider:
+    """Resolve a ``ServerConfig.storage`` value into a provider.
+
+    * ``None`` / ``"memory"``  -> ``MemoryStorageProvider``
+    * ``"disk:<root>"``        -> ``DiskStorageProvider(root)``
+    * ``"remote:<uri>"``       -> ``RemoteFlightProvider(uri)``
+    * a ``StorageProvider``    -> returned as-is
+    """
+    if storage is None or storage == "memory":
+        return MemoryStorageProvider()
+    if isinstance(storage, StorageProvider):
+        return storage
+    if isinstance(storage, str):
+        if storage.startswith("disk:"):
+            return DiskStorageProvider(storage[len("disk:"):])
+        if storage.startswith("remote:"):
+            return RemoteFlightProvider(storage[len("remote:"):])
+        raise FlightInvalidArgument(
+            f"unknown storage spec {storage!r} "
+            f"(want 'memory', 'disk:<root>', 'remote:<uri>', or a provider)")
+    raise FlightInvalidArgument(f"cannot build a storage provider from {storage!r}")

@@ -314,7 +314,12 @@ def write_stream(
     return b"".join(out)
 
 
-def read_stream(data: bytes | Buffer) -> list[RecordBatch]:
+def read_stream_with_schema(data: bytes | Buffer) -> tuple[Schema, list[RecordBatch]]:
+    """Decode a whole stream, returning its schema alongside the batches.
+
+    Batch buffers are zero-copy views into ``data`` — hand in a Buffer over
+    an mmap and the decoded batches serve straight off the page cache (the
+    disk storage provider's re-serve path, ``core/flight/storage.py``)."""
     buf = data if isinstance(data, Buffer) else Buffer.from_bytes(data)
     pos, schema, batches = 0, None, []
     while pos < buf.nbytes:
@@ -335,4 +340,10 @@ def read_stream(data: bytes | Buffer) -> list[RecordBatch]:
             batches.append(msg.batch(schema))
         else:
             break
-    return batches
+    if schema is None:
+        raise ValueError("stream carries no schema message")
+    return schema, batches
+
+
+def read_stream(data: bytes | Buffer) -> list[RecordBatch]:
+    return read_stream_with_schema(data)[1]

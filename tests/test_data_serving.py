@@ -73,8 +73,9 @@ class TestScoring:
         try:
             c = FlightClient(f"tcp://127.0.0.1:{svc.port}")
             req = RecordBatch.from_pydict({"tokens": [[1, 2, 3], [4, 5]]})
-            ex = c.do_exchange(FlightDescriptor.for_path("score"), req.schema)
-            out = ex.exchange(req)
+            ex = c.do_exchange_stream(FlightDescriptor.for_path("score"), req.schema)
+            ex.feed([req])
+            (out,) = list(ex)
             ex.close()
             assert out.schema.names == ["next_token", "logprob"]
             assert out.num_rows == 2

@@ -196,9 +196,10 @@ class TestStreamingExchange:
         assert stream.close()["batches_out"] == 4  # idempotent after drain
 
     def test_deprecated_shim_ping_pong(self, client):
-        """FlightExchange survives as a lockstep window=1 shim."""
+        """FlightExchange survives as a lockstep window=1 shim — and warns."""
         batches = make_batches(3)
-        ex = client.do_exchange(FlightDescriptor.for_path("echo"), batches[0].schema)
+        with pytest.warns(DeprecationWarning, match="do_exchange_stream"):
+            ex = client.do_exchange(FlightDescriptor.for_path("echo"), batches[0].schema)
         for b in batches:
             assert ex.exchange(b) == b
         ex.close()

@@ -78,8 +78,9 @@ class TestVerbs:
 
     def test_do_exchange_echo(self, client):
         b = make_batches(1, 10)[0]
-        ex = client.do_exchange(FlightDescriptor.for_path("echo"), b.schema)
-        assert ex.exchange(b) == b
+        ex = client.do_exchange_stream(FlightDescriptor.for_path("echo"), b.schema)
+        ex.feed([b])
+        assert list(ex) == [b]
         ex.close()
 
     def test_ticket_range_reads_are_idempotent(self, client):
@@ -130,8 +131,7 @@ class TestStragglerMitigation:
         orig = server.do_get_impl
 
         def sometimes_slow(ticket):
-            r = ticket.range()
-            if r["start"] == 0 and slow_first["n"] == 0:
+            if ticket.command().start == 0 and slow_first["n"] == 0:
                 slow_first["n"] += 1
                 time.sleep(1.5)
             return orig(ticket)

@@ -1,0 +1,386 @@
+"""Storage provider plane: backend conformance, durable staging, recovery.
+
+One parametrized conformance suite runs the same contract over all three
+backends (memory, disk, remote-Flight proxy); the disk-specific classes
+cover what only a durable backend can promise — byte-identical re-serve
+after a restart and recovery of a prepared-but-uncommitted 2PC stage
+(the durability gap the RAM-only staging of the transactions PR left open).
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    Action,
+    DiskStorageProvider,
+    FlightClient,
+    FlightClusterClient,
+    FlightClusterServer,
+    FlightDescriptor,
+    FlightInvalidArgument,
+    FlightNotFound,
+    InMemoryFlightServer,
+    MemoryStorageProvider,
+    RemoteFlightProvider,
+    ServerConfig,
+    StagedPutCommand,
+    StorageProvider,
+    Ticket,
+    make_provider,
+)
+from repro.core.ipc import write_stream
+
+
+def make_batches(n=4, rows=200, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "k": rng.integers(0, 40, rows).astype(np.int64),
+        "v": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+def stage_via_client(target, dataset, txn_id, batches):
+    client = target if isinstance(target, FlightClient) else FlightClient(target)
+    desc = FlightDescriptor.for_command(StagedPutCommand(dataset, txn_id, "stage"))
+    w = client.do_put(desc, batches[0].schema)
+    w.write_batches(batches)
+    return w.close()
+
+
+def txn_action(client, verb, txn_id, dataset="ds"):
+    body = json.dumps({"txn_id": txn_id, "dataset": dataset}).encode()
+    return json.loads(client.do_action(Action(verb, body))[0].body)
+
+
+# --------------------------------------------------------------------------
+# backend conformance: one contract, three implementations
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(params=["memory", "disk", "remote"])
+def provider(request, tmp_path):
+    if request.param == "memory":
+        yield MemoryStorageProvider()
+    elif request.param == "disk":
+        p = DiskStorageProvider(tmp_path / "store")
+        yield p
+        p.close()
+    else:
+        backing = InMemoryFlightServer()
+        p = RemoteFlightProvider(FlightClient(backing))
+        yield p
+        backing.shutdown()
+
+
+class TestProviderConformance:
+    def test_append_read_round_trip(self, provider):
+        bs = make_batches(3)
+        provider.append("ds", bs[0].schema, bs)
+        assert provider.exists("ds")
+        assert provider.list() == ["ds"]
+        assert provider.read_batches("ds") == bs
+        assert provider.schema("ds") == bs[0].schema
+
+    def test_info_counts(self, provider):
+        bs = make_batches(3, rows=100)
+        provider.append("ds", bs[0].schema, bs)
+        info = provider.info("ds")
+        assert info["batches"] == 3 and info["rows"] == 300
+        assert info["bytes"] == sum(b.nbytes() for b in bs)
+
+    def test_read_slicing(self, provider):
+        bs = make_batches(5)
+        provider.append("ds", bs[0].schema, bs)
+        assert provider.read_batches("ds", 1, 3) == bs[1:3]
+        assert provider.read_batches("ds", 3) == bs[3:]
+
+    def test_append_extends_replace_resets(self, provider):
+        a, b = make_batches(2, seed=1), make_batches(3, seed=2)
+        provider.append("ds", a[0].schema, a)
+        provider.append("ds", a[0].schema, b)
+        assert provider.info("ds")["batches"] == 5
+        provider.replace("ds", b[0].schema, b)
+        assert provider.read_batches("ds") == b
+
+    def test_unknown_dataset_raises_typed(self, provider):
+        for op in (provider.schema, provider.info, provider.read_batches):
+            with pytest.raises(FlightNotFound):
+                op("ghost")
+
+    def test_drop_is_idempotent(self, provider):
+        bs = make_batches(1)
+        provider.append("ds", bs[0].schema, bs)
+        provider.drop("ds")
+        provider.drop("ds")  # second drop: no error
+        assert not provider.exists("ds")
+        assert provider.list() == []
+
+    def test_stage_commit_appends_atomically(self, provider):
+        base, staged = make_batches(2, seed=3), make_batches(2, seed=4)
+        provider.append("ds", base[0].schema, base)
+        provider.stage("t1", "ds", staged[0].schema, staged)
+        assert provider.read_batches("ds") == base  # invisible until commit
+        provider.commit_stage("t1")
+        assert provider.read_batches("ds") == base + staged
+
+    def test_stage_discard_leaves_no_trace(self, provider):
+        staged = make_batches(2, seed=5)
+        provider.stage("t1", "new-ds", staged[0].schema, staged)
+        provider.discard_stage("t1")
+        assert not provider.exists("new-ds")
+        # committing after discard is a typed error on every backend (the
+        # remote proxy surfaces the backing server's commit-after-abort)
+        with pytest.raises((FlightNotFound, FlightInvalidArgument)):
+            provider.commit_stage("t1")
+
+    def test_commit_unknown_txn_raises(self, provider):
+        with pytest.raises(FlightNotFound):
+            provider.commit_stage("never-staged")
+
+    def test_stats_carry_kind(self, provider):
+        assert provider.stats()["kind"] == provider.kind
+
+
+class TestMakeProvider:
+    def test_specs(self, tmp_path):
+        assert isinstance(make_provider(None), MemoryStorageProvider)
+        assert isinstance(make_provider("memory"), MemoryStorageProvider)
+        disk = make_provider(f"disk:{tmp_path / 'd'}")
+        assert isinstance(disk, DiskStorageProvider)
+        ready = MemoryStorageProvider()
+        assert make_provider(ready) is ready
+
+    def test_bad_specs_rejected(self):
+        with pytest.raises(FlightInvalidArgument):
+            make_provider("s3://nope")
+        with pytest.raises(FlightInvalidArgument):
+            make_provider(42)
+
+
+# --------------------------------------------------------------------------
+# server over a disk backend: durability end to end
+# --------------------------------------------------------------------------
+
+
+class TestDiskBackedServer:
+    def test_restart_reserves_byte_identical(self, tmp_path):
+        """Golden check: the stream a restarted server serves is the same
+        *bytes* the original server served, not merely equal batches."""
+        spec = f"disk:{tmp_path / 'store'}"
+        bs = make_batches(4)
+        srv = InMemoryFlightServer(storage=spec)
+        srv.add_dataset("ds", bs)
+        before = [write_stream([b]) for b in FlightClient(srv).do_get(
+            Ticket.for_range("ds", 0, -1))]
+        srv.shutdown()
+
+        srv2 = InMemoryFlightServer(storage=spec)
+        got = list(FlightClient(srv2).do_get(Ticket.for_range("ds", 0, -1)))
+        after = [write_stream([b]) for b in got]
+        srv2.shutdown()
+        assert before == after
+        assert got == bs
+
+    def test_restart_recovers_catalog_and_stats(self, tmp_path):
+        spec = f"disk:{tmp_path / 'store'}"
+        srv = InMemoryFlightServer(storage=spec)
+        srv.add_dataset("a", make_batches(1, seed=1))
+        srv.add_dataset("b", make_batches(2, seed=2))
+        srv.shutdown()
+
+        srv2 = InMemoryFlightServer(storage=spec)
+        infos = {i.descriptor.key: i for i in srv2.list_flights_impl()}
+        assert sorted(infos) == ["path:a", "path:b"]
+        stats = json.loads(srv2.do_action_impl(Action("server-stats"))[0].body)
+        assert stats["storage"]["kind"] == "disk"
+        assert stats["storage"]["recovered_datasets"] == 2
+        assert stats["storage"]["disk_bytes"] > 0
+        srv2.shutdown()
+
+    def test_warm_reads_hit_encode_cache_not_disk(self, tmp_path):
+        srv = InMemoryFlightServer(storage=f"disk:{tmp_path / 'store'}")
+        srv.add_dataset("ds", make_batches(4))
+        c = FlightClient(f"tcp://127.0.0.1:{srv.serve_tcp().port}")
+        t = Ticket.for_range("ds", 0, -1)
+        list(c.do_get(t))
+        maps_after_cold = srv.storage.stats()["mmap_reads"]
+        for _ in range(3):
+            list(c.do_get(t))
+        assert srv.storage.stats()["mmap_reads"] == maps_after_cold
+        assert srv.cache_hits >= 3  # warm path served from the encoded cache
+        srv.shutdown()
+
+    def test_prepared_stage_survives_restart(self, tmp_path):
+        """The PR 4 durability gap: a server that voted yes in phase 1 and
+        then died must still honor the coordinator's commit after restart."""
+        spec = f"disk:{tmp_path / 'store'}"
+        staged = make_batches(3, seed=7)
+        srv = InMemoryFlightServer(storage=spec)
+        stage_via_client(srv, "ds", "t-prep", staged)
+        ack = txn_action(FlightClient(srv), "txn-prepare", "t-prep")
+        assert ack["staged"]
+        srv.shutdown()  # dies mid-2PC, after the yes vote
+
+        srv2 = InMemoryFlightServer(storage=spec)
+        stats = json.loads(srv2.do_action_impl(Action("server-stats"))[0].body)
+        assert stats["staged_txns"] == 1
+        assert not srv2.storage.exists("ds")  # still invisible
+        ack = txn_action(FlightClient(srv2), "txn-commit", "t-prep")
+        assert ack["committed"] and ack["rows"] == sum(b.num_rows for b in staged)
+        assert srv2.dataset("ds") == staged
+        srv2.shutdown()
+
+    def test_unprepared_stage_recovered_then_abortable(self, tmp_path):
+        spec = f"disk:{tmp_path / 'store'}"
+        srv = InMemoryFlightServer(storage=spec)
+        stage_via_client(srv, "ds", "t-orphan", make_batches(2, seed=8))
+        srv.shutdown()
+
+        srv2 = InMemoryFlightServer(storage=spec)
+        ack = txn_action(FlightClient(srv2), "txn-abort", "t-orphan")
+        assert ack["aborted"]
+        assert srv2.storage.stats()["staged_txns_on_disk"] == 0
+        srv2.shutdown()
+
+    def test_cluster_restart_recovers_all_shards(self, tmp_path):
+        spec = f"disk:{tmp_path / 'cluster'}"
+        bs = make_batches(6, seed=9)
+        cl = FlightClusterServer(num_shards=3, storage=spec)
+        cl.add_dataset("ds", bs)
+        t1, _ = FlightClusterClient(cl).read("ds")
+        cl.shutdown()
+
+        cl2 = FlightClusterServer(num_shards=3, storage=spec)
+        t2, stats = FlightClusterClient(cl2).read("ds")
+        assert stats.streams == 3  # every shard recovered its slice
+        assert t1.combine() == t2.combine()
+        cl2.shutdown()
+
+    def test_shard_roots_are_disjoint(self, tmp_path):
+        cl = FlightClusterServer(num_shards=2, storage=f"disk:{tmp_path / 'c'}")
+        roots = {s.storage.root for s in cl.shards}
+        assert len(roots) == 2
+        cl.shutdown()
+
+
+# --------------------------------------------------------------------------
+# remote proxy in front of a backing server
+# --------------------------------------------------------------------------
+
+
+class TestRemoteProxyServer:
+    def test_front_server_serves_remote_datasets(self):
+        backing = InMemoryFlightServer()
+        bs = make_batches(3, seed=11)
+        backing.add_dataset("ds", bs)
+        front = InMemoryFlightServer(
+            storage=RemoteFlightProvider(FlightClient(backing)))
+        c = FlightClient(front)
+        assert [i.descriptor.key for i in c.list_flights()] == ["path:ds"]
+        got = list(c.do_get(Ticket.for_range("ds", 0, -1)))
+        assert got == bs
+        assert front.storage.stats()["proxied_reads"] >= 1
+        # a write through the front lands on the backing store
+        w = c.do_put(FlightDescriptor.for_path("up"), bs[0].schema)
+        w.write_batches(bs[:1])
+        w.close()
+        assert backing.dataset("up") == bs[:1]
+        front.shutdown()
+        backing.shutdown()
+
+
+# --------------------------------------------------------------------------
+# ServerConfig: the collected construction surface
+# --------------------------------------------------------------------------
+
+
+class TestServerConfig:
+    def test_config_object_drives_the_server(self, tmp_path):
+        cfg = ServerConfig(batches_per_endpoint=2, dedup_puts=False,
+                           storage=f"disk:{tmp_path / 's'}")
+        srv = InMemoryFlightServer(config=cfg)
+        assert srv.config is cfg
+        assert srv.batches_per_endpoint == 2
+        assert srv.dedup_puts is False
+        assert srv.storage.kind == "disk"
+        srv.shutdown()
+
+    def test_legacy_kwargs_still_route(self):
+        srv = InMemoryFlightServer(auth_token="tok", batches_per_endpoint=3,
+                                   dedup_puts=False)
+        assert srv.config.auth_token == "tok"
+        assert srv.config.batches_per_endpoint == 3
+        assert srv.config.dedup_puts is False
+        srv.shutdown()
+
+    def test_explicit_kwarg_beats_config_field(self):
+        cfg = ServerConfig(batches_per_endpoint=2)
+        srv = InMemoryFlightServer(config=cfg, batches_per_endpoint=5)
+        assert srv.batches_per_endpoint == 5
+        assert cfg.batches_per_endpoint == 2  # the config object is not mutated
+        srv.shutdown()
+
+    def test_store_views_stay_dict_shaped(self):
+        # the historical `_store`/`_schemas` peeks remain valid read views
+        srv = InMemoryFlightServer()
+        bs = make_batches(2)
+        srv.add_dataset("ds", bs)
+        assert "ds" in srv._store and "ghost" not in srv._store
+        assert srv._store["ds"] == bs
+        assert srv._schemas["ds"] == bs[0].schema
+        assert list(srv._store) == ["ds"] and len(srv._store) == 1
+        with pytest.raises(KeyError):
+            srv._store["ghost"]
+        srv.shutdown()
+
+
+# --------------------------------------------------------------------------
+# control-surface cleanup rode along: deprecations still warn exactly once
+# --------------------------------------------------------------------------
+
+
+class TestDeprecatedSurface:
+    def test_ticket_range_warns(self):
+        t = Ticket.for_range("ds", 0, 4)
+        with pytest.warns(DeprecationWarning, match="Ticket.command"):
+            t.range()
+
+    def test_do_exchange_shim_warns(self):
+        srv = InMemoryFlightServer()
+        c = FlightClient(srv)
+        b = make_batches(1)[0]
+        with pytest.warns(DeprecationWarning, match="do_exchange_stream"):
+            ex = c.do_exchange(FlightDescriptor.for_path("echo"), b.schema)
+        assert ex.exchange(b) == b
+        ex.close()
+        srv.shutdown()
+
+    def test_streaming_api_does_not_warn(self):
+        srv = InMemoryFlightServer()
+        c = FlightClient(srv)
+        b = make_batches(1)[0]
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            ex = c.do_exchange_stream(FlightDescriptor.for_path("echo"), b.schema)
+            ex.feed([b])
+            assert list(ex) == [b]
+            ex.close()
+        srv.shutdown()
+
+    def test_aggregate_action_is_native(self):
+        # the query-service shim folded into the server: `aggregate` answers
+        # on any InMemoryFlightServer, no subclass required
+        from repro.query.engine import QueryPlan
+
+        srv = InMemoryFlightServer()
+        srv.add_dataset("t", make_batches(2, rows=50, seed=13))
+        plan = QueryPlan("t", aggregations=[("sum", "v")])
+        out = json.loads(FlightClient(srv).do_action(
+            Action("aggregate", plan.serialize()))[0].body)
+        expect = float(sum(b.column("v").to_numpy().sum()
+                           for b in srv.dataset("t")))
+        assert out["sum(v)"] == pytest.approx(expect)
+        srv.shutdown()
