@@ -1,0 +1,347 @@
+"""Many-clients concurrency: event-loop vs thread-per-connection serving.
+
+The paper's headline claim is serving *many parallel streams* at wire
+speed; this suite measures the server architecture itself.  A Flight
+server runs in its own process (``io_mode="eventloop"`` — the selector
+core from core/flight/eventloop.py — vs ``io_mode="threads"`` — the
+historical thread-per-connection ``SocketListener``) and N concurrent
+clients hammer it from **separate processes**, so the server's GIL and
+scheduler behaviour is the thing measured, not a shared client/server
+GIL.  Two verbs:
+
+* ``doget`` — the C10k shape: each round a client *opens its share of the
+  N connections concurrently*, issues ``DoGet(ds)`` on each, collects the
+  responses, closes, repeats.  Connections are genuinely open at the same
+  time, so the threads server really holds N live handler threads while
+  the event loop holds N epoll registrations.  Clients are deliberately
+  thin: one warm-up response is frame-parsed to learn the (deterministic)
+  response length and batch count, then steady-state reads just count
+  bytes — client CPU per connection is a connect + send + recv loop, so
+  the server side dominates what the sweep measures;
+* ``exchange`` — real ``open_exchange`` echo clients over persistent
+  bidirectional streams (the microservice plane at fan-in).
+
+Above ``MAX_PROCS`` client processes, each process runs its share of the
+connections (hybrid process x connection) — connection count is what's
+swept.
+
+Both servers are up for the whole run and repeats alternate
+eventloop/threads back-to-back, so machine-load drift hits both modes
+alike; each mode's best repeat is scored (container noise only ever
+subtracts).  Rows record aggregate msgs/s, per-connection p50/p99, and
+mid-run server ``/proc`` samples (open fds, thread count — the
+O(workers)-not-O(clients) claim made observable).  ``ratio`` rows pin
+the event-loop speedup at each client count; the acceptance bar is
+>=1.5x aggregate DoGet msgs/s at the top of the sweep (>=64 clients).
+``run.py`` emits ``BENCH_concurrency.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.core.flight import FlightClient, FlightDescriptor
+
+from .common import Timing
+
+DOGET_COUNTS_QUICK = (1, 4, 16)
+DOGET_COUNTS_FULL = (1, 16, 64, 256)
+EXCHANGE_COUNTS_QUICK = (1, 4, 16)
+EXCHANGE_COUNTS_FULL = (1, 16, 64)
+DURATION_QUICK = 1.2
+DURATION_FULL = 2.0
+REPEATS_QUICK = 2
+REPEATS_FULL = 3
+# Hybrid cap: beyond this many client processes, each multiplexes several
+# connections.  8 measured best on small CI boxes: more processes spend the
+# shared cores on client-side scheduler churn, which dilutes the server
+# difference the sweep exists to show (and burst-opening a proc's whole
+# connection share keeps the concurrency genuine).
+MAX_PROCS = 8
+BATCH_ROWS = 128        # 4 KiB batches: RPC-rate-bound, not bandwidth-bound
+DATASET_BATCHES = 1     # one batch per stream: the RPC itself is the cost
+
+_SERVER = """
+import os, sys, threading
+import numpy as np
+from repro.core import RecordBatch
+from repro.core.flight import InMemoryFlightServer
+
+srv = InMemoryFlightServer(io_mode=sys.argv[1]).serve_tcp()
+rng = np.random.default_rng(0)
+srv.add_dataset("ds", [RecordBatch.from_numpy({
+    f"f{i}": rng.integers(0, 1 << 40, %(rows)d).astype(np.int64)
+    for i in range(4)}) for _ in range(%(nbatches)d)])
+print(srv.port, os.getpid(), flush=True)
+threading.Event().wait()
+""" % {"rows": BATCH_ROWS, "nbatches": DATASET_BATCHES}
+
+# Thin burst-churn DoGet client: argv = port n_conns duration ticket_json.
+# Prints "ready", blocks for "go", runs rounds of n_conns concurrently-open
+# connections for the window, prints {"msgs": total, "conns": n, "secs": s}.
+_DOGET_CLIENT = """
+import json, socket, struct, sys, time
+
+port, n_conns, duration = int(sys.argv[1]), int(sys.argv[2]), float(sys.argv[3])
+ticket = json.loads(sys.argv[4])
+FRAME = struct.Struct("<IBIQ")
+MAGIC = 0xF117A77C
+meta = json.dumps({"method": "DoGet", "ticket": ticket}).encode()
+REQ = FRAME.pack(MAGIC, 0, len(meta), 0) + meta
+
+def connect():
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.connect(("127.0.0.1", port))
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return s
+
+def parse_stream(s):
+    # one full frame parse: learns the fixed response length + batch count
+    f = s.makefile("rb", 1 << 16)
+    s.sendall(REQ)
+    n = 0; bodyless = 0; total = 0
+    while True:
+        magic, kind, mlen, blen = FRAME.unpack(f.read(17))
+        m = f.read(mlen)
+        if blen:
+            f.read(blen)
+        total += 17 + mlen + blen
+        if kind == 0:  # ctrl: the ok (or error) envelope
+            if b'"error"' in m:
+                raise RuntimeError(m)
+            continue
+        if blen:
+            n += 1     # a batch frame
+        else:
+            bodyless += 1          # schema first, eos last
+            if bodyless == 2:
+                f.detach()
+                return n, total
+
+s = connect()
+MSGS, RESP_LEN = parse_stream(s)
+s.close()
+buf = bytearray(1 << 16)
+
+def one_round():
+    socks = [connect() for _ in range(n_conns)]   # N genuinely open at once
+    for s in socks:
+        s.sendall(REQ)
+    got_msgs = 0
+    for s in socks:
+        got = 0
+        while got < RESP_LEN:  # deterministic length: count, don't parse
+            n = s.recv_into(buf)
+            if not n:
+                raise ConnectionError("short response")
+            got += n
+        s.close()
+        got_msgs += MSGS
+    return got_msgs
+
+one_round()  # warm: encode cache + inline certificate on the server
+print("ready", flush=True)
+sys.stdin.readline()  # "go"
+total = 0
+t0 = time.monotonic()
+t_end = t0 + duration
+while time.monotonic() < t_end:
+    total += one_round()
+print(json.dumps({"msgs": total, "conns": n_conns,
+                  "secs": time.monotonic() - t0}), flush=True)
+"""
+
+# Exchange client: argv = port n_conns duration.  Persistent bidirectional
+# echo streams through the real client stack, one thread per stream.
+_EXCHANGE_CLIENT = """
+import json, sys, threading, time
+import numpy as np
+from repro.core import RecordBatch
+from repro.core.flight import FlightClient, open_exchange
+
+port, n_conns, duration = int(sys.argv[1]), int(sys.argv[2]), float(sys.argv[3])
+rng = np.random.default_rng(0)
+batches = [RecordBatch.from_numpy({
+    f"f{i}": rng.integers(0, 1 << 40, 128).astype(np.int64)
+    for i in range(4)}) for _ in range(4)]
+schema = batches[0].schema
+clients = [FlightClient(f"tcp://127.0.0.1:{port}") for _ in range(n_conns)]
+
+def one_stream(client):
+    return sum(1 for _ in open_exchange(client, "echo", schema, batches))
+
+for c in clients:
+    one_stream(c)  # warm
+msgs = [0] * n_conns
+secs = [0.0] * n_conns
+
+def run(i):
+    c = clients[i]
+    t0 = time.monotonic()
+    t_end = t0 + duration
+    n = 0
+    while time.monotonic() < t_end:
+        n += one_stream(c)
+    msgs[i] = n
+    secs[i] = time.monotonic() - t0
+
+print("ready", flush=True)
+sys.stdin.readline()  # "go"
+workers = [threading.Thread(target=run, args=(i,)) for i in range(n_conns)]
+for w in workers:
+    w.start()
+for w in workers:
+    w.join()
+print(json.dumps({"msgs": sum(msgs), "conns": n_conns,
+                  "secs": max(secs)}), flush=True)
+"""
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _spawn_server(io_mode: str) -> tuple[subprocess.Popen, int, int]:
+    proc = subprocess.Popen([sys.executable, "-c", _SERVER, io_mode],
+                            stdout=subprocess.PIPE, text=True, env=_env())
+    port, pid = (int(x) for x in proc.stdout.readline().split())
+    return proc, port, pid
+
+
+def _proc_sample(pid: int) -> dict:
+    """Server-side /proc observables: open fds and thread count."""
+    sample = {"fds": None, "threads": None}
+    try:
+        sample["fds"] = len(os.listdir(f"/proc/{pid}/fd"))
+        with open(f"/proc/{pid}/status") as f:
+            for line in f:
+                if line.startswith("Threads:"):
+                    sample["threads"] = int(line.split()[1])
+                    break
+    except OSError:
+        pass  # non-procfs platform: samples stay None
+    return sample
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def _sweep(script: str, port: int, pid: int, n_clients: int, duration: float,
+           argv_tail: list[str]) -> dict:
+    n_procs = min(n_clients, MAX_PROCS)
+    per_proc = [n_clients // n_procs] * n_procs
+    for i in range(n_clients % n_procs):
+        per_proc[i] += 1
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", script, str(port), str(k), str(duration)]
+            + argv_tail,
+            stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True,
+            env=_env())
+        for k in per_proc
+    ]
+    try:
+        for p in procs:
+            assert p.stdout.readline().strip() == "ready"
+        for p in procs:  # the barrier: every process is warm before "go"
+            p.stdin.write("go\n")
+            p.stdin.flush()
+        time.sleep(duration / 2)
+        mid = _proc_sample(pid)
+        per_conn: list[float] = []
+        total = 0.0
+        for p in procs:
+            rep = json.loads(p.stdout.readline())
+            rate = rep["msgs"] / rep["secs"]
+            total += rate
+            per_conn += [rate / rep["conns"]] * rep["conns"]
+        for p in procs:
+            p.wait(timeout=30)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+    per_conn.sort()
+    return {
+        "aggregate_msgs_per_s": round(total, 1),
+        "p50_client_msgs_per_s": round(_percentile(per_conn, 0.50), 1),
+        "p99_client_msgs_per_s": round(_percentile(per_conn, 0.99), 1),
+        "server_fds_midrun": mid["fds"],
+        "server_threads_midrun": mid["threads"],
+        "client_procs": n_procs,
+    }
+
+
+def run(quick: bool = True) -> list[Timing]:
+    duration = DURATION_QUICK if quick else DURATION_FULL
+    repeats = REPEATS_QUICK if quick else REPEATS_FULL
+    sweeps = {
+        "doget": DOGET_COUNTS_QUICK if quick else DOGET_COUNTS_FULL,
+        "exchange": EXCHANGE_COUNTS_QUICK if quick else EXCHANGE_COUNTS_FULL,
+    }
+    modes = ("eventloop", "threads")
+    servers = {m: _spawn_server(m) for m in modes}  # both up: drift-neutral
+    best: dict[tuple[str, str, int], dict] = {}
+    out: list[Timing] = []
+    try:
+        _, port0, _ = servers[modes[0]]
+        info = FlightClient(f"tcp://127.0.0.1:{port0}").get_flight_info(
+            FlightDescriptor.for_path("ds"))
+        ticket_json = json.dumps(info.endpoints[0].ticket.to_json())
+        for verb, counts in sweeps.items():
+            script = _DOGET_CLIENT if verb == "doget" else _EXCHANGE_CLIENT
+            tail = [ticket_json] if verb == "doget" else []
+            for n in counts:
+                for _ in range(repeats):  # alternate modes inside the repeat
+                    for mode in modes:
+                        _, port, pid = servers[mode]
+                        res = _sweep(script, port, pid, n, duration, tail)
+                        key = (mode, verb, n)
+                        if (key not in best
+                                or res["aggregate_msgs_per_s"]
+                                > best[key]["aggregate_msgs_per_s"]):
+                            best[key] = res
+    finally:
+        for proc, _, _ in servers.values():
+            proc.kill()
+            proc.wait()
+    for (mode, verb, n), res in sorted(best.items()):
+        out.append(Timing(
+            f"concurrency_{verb}_{mode}_c{n}", duration, 0,
+            extra={"verb": verb, "io_mode": mode, "clients": n,
+                   "duration_s": duration, "repeats": repeats, **res}))
+    # the acceptance rows: event-loop speedup over thread-per-connection
+    for (mode, verb, n), res in sorted(best.items()):
+        if mode != "eventloop":
+            continue
+        th = best.get(("threads", verb, n))
+        if th is None:
+            continue
+        ev_rate = res["aggregate_msgs_per_s"]
+        th_rate = th["aggregate_msgs_per_s"]
+        out.append(Timing(f"concurrency_ratio_{verb}_c{n}", 0.0, 0, extra={
+            "verb": verb, "clients": n,
+            "eventloop_msgs_per_s": ev_rate, "threads_msgs_per_s": th_rate,
+            "eventloop_vs_threads": round(ev_rate / th_rate, 3) if th_rate else None,
+        }))
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_bench_json
+
+    timings = run(quick="--full" not in sys.argv)
+    for t in timings:
+        print(t.csv() + (f" {t.extra}" if t.extra else ""))
+    print(f"# wrote {emit_bench_json('concurrency', timings)}")

@@ -17,6 +17,12 @@ show up as 2x+ normalized drops and still fail comfortably.
 ``--absolute`` compares raw msgs/s instead — useful for same-machine
 trajectories, too flaky across heterogeneous CI runners.
 
+A config that lands below the floor gets **one retry**: the wire suite is
+re-run in-process and the config passes if either run clears the floor.
+A noise spike (CI neighbour stealing the core mid-window) is a one-off,
+so best-of-two absorbs it; a real regression — lost encode cache, codec
+fallback — reproduces and fails both runs.  ``--retries 0`` disables.
+
 Refresh the baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run --only wire
@@ -44,6 +50,16 @@ def load_results(path: Path) -> dict[tuple[str, int], float]:
     return out
 
 
+def results_from_timings(timings) -> dict[tuple[str, int], float]:
+    """Same shape as ``load_results``, from an in-process suite run."""
+    out: dict[tuple[str, int], float] = {}
+    for t in timings:
+        extra = getattr(t, "extra", None) or {}
+        if "config" in extra and "msgs_per_s" in extra:
+            out[(extra["config"], extra["batch_bytes"])] = extra["msgs_per_s"]
+    return out
+
+
 def normalize(results: dict[tuple[str, int], float]) -> dict[str, float]:
     """msgs/s of each config relative to the same-size seed config."""
     out: dict[str, float] = {}
@@ -63,6 +79,12 @@ def main() -> int:
     ap.add_argument("--absolute", action="store_true",
                     help="compare raw msgs/s instead of seed-normalized")
     ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    ap.add_argument("--retries", type=int, default=1,
+                    help="re-run the wire suite this many times for configs "
+                         "below the floor; best run wins (0 disables)")
+    ap.add_argument("--full", action="store_true",
+                    help="retry runs use paper-scale sizes (match the run "
+                         "that produced the bench file)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the committed baseline from this run")
     args = ap.parse_args()
@@ -87,17 +109,45 @@ def main() -> int:
     baseline = json.loads(BASELINE.read_text())
     mode = "absolute" if args.absolute else "normalized"
     old, new = baseline[mode], current[mode]
-    failures = []
+    below: list[tuple[str, float, float | None, float]] = []
     for key, prev in sorted(old.items()):
         got = new.get(key)
-        if got is None:
-            failures.append(f"{key}: missing from this run (baseline {prev})")
-            continue
         floor = prev * (1 - args.tolerance)
+        if got is None:
+            print(f"{key}: missing vs baseline {prev:.3f}")
+            below.append((key, prev, None, floor))
+            continue
         status = "FAIL" if got < floor else "ok"
         print(f"{key}: {got:.3f} vs baseline {prev:.3f} (floor {floor:.3f}) {status}")
         if got < floor:
-            failures.append(f"{key}: {got:.3f} < {floor:.3f} (-{args.tolerance:.0%} of {prev:.3f})")
+            below.append((key, prev, got, floor))
+
+    for attempt in range(args.retries if below else 0):
+        print(f"\n{len(below)} config(s) below floor — re-running the wire "
+              f"suite (retry {attempt + 1}/{args.retries}); a noise spike "
+              "won't reproduce, a real regression will", file=sys.stderr)
+        from .bench_wire import run as run_wire
+        rerun = results_from_timings(run_wire(quick=not args.full))
+        retried = (normalize(rerun) if mode == "normalized"
+                   else {f"{c}_b{s}": m for (c, s), m in rerun.items()})
+        still = []
+        for key, prev, got, floor in below:
+            again = retried.get(key)
+            best = max((v for v in (got, again) if v is not None), default=None)
+            if best is None or best < floor:
+                still.append((key, prev, best, floor))
+            else:
+                print(f"{key}: recovered on retry "
+                      f"({again:.3f} >= floor {floor:.3f})")
+        below = still
+        if not below:
+            break
+
+    failures = [
+        (f"{key}: missing (baseline {prev:.3f})" if got is None else
+         f"{key}: {got:.3f} < {floor:.3f} (-{args.tolerance:.0%} of {prev:.3f})")
+        for key, prev, got, floor in below
+    ]
     if failures:
         print("\nwire msgs/s regression:", *failures, sep="\n  ", file=sys.stderr)
         return 1

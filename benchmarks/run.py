@@ -17,9 +17,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (bench_cluster, bench_endpoints, bench_exchange, bench_export,
-                   bench_kernels, bench_protocols, bench_query, bench_serde,
-                   bench_storage, bench_transfer, bench_wire)
+    from . import (bench_cluster, bench_concurrency, bench_endpoints,
+                   bench_exchange, bench_export, bench_kernels,
+                   bench_protocols, bench_query, bench_serde, bench_storage,
+                   bench_transfer, bench_wire)
     from .common import emit_bench_json
     suites = {
         "transfer": bench_transfer,    # Fig 2/3
@@ -31,11 +32,13 @@ def main() -> None:
         "wire": bench_wire,            # data plane: codec × coalescing × size
         "exchange": bench_exchange,    # Fig 11: streaming DoExchange microservices
         "storage": bench_storage,      # provider plane: disk vs memory DoGet
+        "concurrency": bench_concurrency,  # C10k: event loop vs thread/conn
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
     # recorded to BENCH_<name>.json
-    json_suites = {"cluster", "wire", "query", "exchange", "storage"}
+    json_suites = {"cluster", "wire", "query", "exchange", "storage",
+                   "concurrency"}
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

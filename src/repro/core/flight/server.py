@@ -3,7 +3,12 @@
 ``FlightServerBase`` defines the six verbs (GetFlightInfo, ListFlights,
 DoGet, DoPut, DoAction, DoExchange) against abstract handlers; it can be
 used in-process (zero-copy object handoff) or served over TCP via
-``serve_tcp`` (thread per connection, streaming IPC frames).
+``serve_tcp``.  TCP serving runs on the event-loop core by default
+(``io_mode="eventloop"``: one selector dispatch thread + a small worker
+pool, eventloop.py — server threads stay O(worker pool), not O(clients));
+``io_mode="threads"`` keeps the historical thread-per-connection listener
+one release for bisection.  Both modes speak the identical framed wire
+format and run the identical ``_dispatch_rpc``.
 
 Every RPC is dispatched through a **middleware stack** (see middleware.py):
 auth is just ``AuthTokenMiddleware`` (installed automatically when
@@ -125,6 +130,7 @@ from .protocol import (
     Ticket,
     parse_command,
 )
+from .eventloop import EventLoopListener
 from .exchange import DEFAULT_WINDOW, ack_interval
 from .services import ExchangeService, ExchangeServiceRegistry, drive_exchange
 from .storage import StorageProvider, make_provider
@@ -155,6 +161,12 @@ class ServerConfig:
     ``storage`` selects the dataset backend (storage.py): ``None``/
     ``"memory"``, ``"disk:<root>"``, ``"remote:<uri>"``, or a ready
     ``StorageProvider`` instance.
+
+    ``io_mode`` selects the TCP serving core: ``"eventloop"`` (default —
+    one selector dispatch thread + a small worker pool, eventloop.py) or
+    ``"threads"`` (the historical thread-per-connection ``SocketListener``,
+    retained one release for bisection).  ``io_workers`` sizes the event
+    loop's worker pool (0 = auto: half the cores, floor 2, cap 8).
     """
 
     auth_token: str | None = None
@@ -166,6 +178,8 @@ class ServerConfig:
     dedup_puts: bool = True
     stage_ttl: float = 60.0
     storage: "str | StorageProvider | None" = None
+    io_mode: str = "eventloop"
+    io_workers: int = 0
 
 
 class _ProviderMapping(Mapping):
@@ -261,6 +275,8 @@ class FlightServerBase:
         *,
         wire_codec: str = DEFAULT_CODEC,
         coalesce: bool = True,
+        io_mode: str = "eventloop",
+        io_workers: int = 0,
         middleware: Iterable[ServerMiddleware] | None = None,
         services: ExchangeServiceRegistry | None = None,
     ):
@@ -268,11 +284,13 @@ class FlightServerBase:
         self.auth_token = auth_token
         self.wire_codec = wire_codec
         self.coalesce = coalesce
+        self.io_mode = io_mode
+        self.io_workers = io_workers
         self.encode_calls = 0  # encode_batch invocations on the DoGet path
         # named streaming-exchange transforms (services.py); a shared
         # registry object makes one `register` visible on many servers
         self.services = services if services is not None else ExchangeServiceRegistry()
-        self._listener: SocketListener | None = None
+        self._listener: SocketListener | EventLoopListener | None = None
         stack: list[ServerMiddleware] = list(middleware or [])
         if auth_token is not None and not any(
             isinstance(m, AuthTokenMiddleware) for m in stack
@@ -326,7 +344,17 @@ class FlightServerBase:
 
     # -- TCP serving ------------------------------------------------------ #
     def serve_tcp(self, host: str = "127.0.0.1", port: int = 0) -> "FlightServerBase":
-        self._listener = SocketListener(self._handle_connection, host, port).start()
+        if self.io_mode == "eventloop":
+            self._listener = EventLoopListener(
+                self._dispatch_rpc, host, port,
+                workers=self.io_workers or None,
+                inline_ok=self._rpc_inline_ok).start()
+        elif self.io_mode == "threads":
+            self._listener = SocketListener(self._handle_connection, host, port).start()
+        else:
+            raise FlightInvalidArgument(
+                f"unknown io_mode {self.io_mode!r} (eventloop|threads)",
+                detail={"io_mode": self.io_mode})
         return self
 
     @property
@@ -338,6 +366,20 @@ class FlightServerBase:
         if self._listener is not None:
             self._listener.stop()
             self._listener = None
+
+    def _rpc_inline_ok(self, req: dict) -> bool:
+        """Certify a request for loop-thread dispatch (eventloop.py).
+
+        Inline RPCs run on the event loop's one dispatch thread, so the
+        contract is strict: never read another frame, never block, cheap.
+        The base server can only vouch for ``Handshake``; subclasses widen
+        this where they can *prove* the fast path (see
+        ``InMemoryFlightServer``).  User middleware voids the certificate —
+        its hooks run inside the dispatch and may block."""
+        if any(type(m).__module__ != MiddlewareStack.__module__
+               for m in self.middleware.items):
+            return False
+        return req.get("method") == "Handshake"
 
     # -- dispatch ---------------------------------------------------------- #
     def _check_auth(self, req: dict) -> None:
@@ -352,47 +394,60 @@ class FlightServerBase:
         return CallContext(method=method, headers=headers, request=req)
 
     def _handle_connection(self, conn: FrameConnection) -> None:
-        """One connection = a sequence of RPCs (like an HTTP/2 channel)."""
+        """One connection = a sequence of RPCs (like an HTTP/2 channel).
+
+        The blocking serve loop of the thread-per-connection listener; the
+        event-loop listener instead calls ``_dispatch_rpc`` per opening
+        frame from its worker pool.  Both run the same dispatch."""
         while True:
             try:
                 kind, req, _ = conn.recv_frame()
             except (ConnectionError, OSError):
                 return
-            if kind != KIND_CTRL:
-                raise FlightError("expected control frame opening an RPC")
-            method = req.get("method")
-            opts = req.get("options") or {}
-            try:
-                # unary verbs buffer their reply and send it *after* the
-                # middleware chain unwinds: once the client holds the answer,
-                # every on_complete hook (metrics, logging) has already fired
-                reply: dict | None = None
-                with self.middleware.wrap(self._call_context(method or "?", req)):
-                    if method == "GetFlightInfo":
-                        info = self.get_flight_info_impl(
-                            FlightDescriptor.from_json(req["descriptor"]))
-                        reply = {"info": info.to_json()}
-                    elif method == "ListFlights":
-                        infos = self.list_flights_impl()
-                        reply = {"infos": [i.to_json() for i in infos]}
-                    elif method == "DoAction":
-                        results = self.do_action_impl(Action.from_json(req["action"]))
-                        reply = {"results": [r.to_json() for r in results]}
-                    elif method == "DoGet":
-                        self._serve_do_get(conn, Ticket.from_json(req["ticket"]), opts)
-                    elif method == "DoPut":
-                        self._serve_do_put(conn, FlightDescriptor.from_json(req["descriptor"]))
-                    elif method == "DoExchange":
-                        self._serve_do_exchange(
-                            conn, FlightDescriptor.from_json(req["descriptor"]), opts)
-                    elif method == "Handshake":
-                        reply = {"ok": True}
-                    else:
-                        raise FlightInvalidArgument(f"unknown method {method!r}")
-                if reply is not None:
-                    conn.send_ctrl(reply)
-            except FlightError as e:
-                conn.send_ctrl(e.to_wire())
+            self._dispatch_rpc(conn, kind, req)
+
+    def _dispatch_rpc(self, conn: FrameConnection, kind: int, req: dict) -> None:
+        """Serve one RPC whose opening frame has already been read.
+
+        Raises ``FlightError`` for protocol violations that must kill the
+        connection (non-control opening frame); RPC-level failures are
+        reported to the peer as typed error frames and the channel stays
+        usable."""
+        if kind != KIND_CTRL:
+            raise FlightError("expected control frame opening an RPC")
+        method = req.get("method")
+        opts = req.get("options") or {}
+        try:
+            # unary verbs buffer their reply and send it *after* the
+            # middleware chain unwinds: once the client holds the answer,
+            # every on_complete hook (metrics, logging) has already fired
+            reply: dict | None = None
+            with self.middleware.wrap(self._call_context(method or "?", req)):
+                if method == "GetFlightInfo":
+                    info = self.get_flight_info_impl(
+                        FlightDescriptor.from_json(req["descriptor"]))
+                    reply = {"info": info.to_json()}
+                elif method == "ListFlights":
+                    infos = self.list_flights_impl()
+                    reply = {"infos": [i.to_json() for i in infos]}
+                elif method == "DoAction":
+                    results = self.do_action_impl(Action.from_json(req["action"]))
+                    reply = {"results": [r.to_json() for r in results]}
+                elif method == "DoGet":
+                    self._serve_do_get(conn, Ticket.from_json(req["ticket"]), opts)
+                elif method == "DoPut":
+                    self._serve_do_put(conn, FlightDescriptor.from_json(req["descriptor"]))
+                elif method == "DoExchange":
+                    self._serve_do_exchange(
+                        conn, FlightDescriptor.from_json(req["descriptor"]), opts)
+                elif method == "Handshake":
+                    reply = {"ok": True}
+                else:
+                    raise FlightInvalidArgument(f"unknown method {method!r}")
+            if reply is not None:
+                conn.send_ctrl(reply)
+        except FlightError as e:
+            conn.send_ctrl(e.to_wire())
 
     def _send_stream(
         self, conn: FrameConnection, msgs: Iterable[EncodedMessage], coalesce: bool | None = None
@@ -641,6 +696,8 @@ class InMemoryFlightServer(FlightServerBase):
         dedup_puts=_UNSET,
         stage_ttl=_UNSET,
         storage=_UNSET,
+        io_mode=_UNSET,
+        io_workers=_UNSET,
         middleware: Iterable[ServerMiddleware] | None = None,
         services: ExchangeServiceRegistry | None = None,
     ):
@@ -658,13 +715,17 @@ class InMemoryFlightServer(FlightServerBase):
                 "dedup_puts": dedup_puts,
                 "stage_ttl": stage_ttl,
                 "storage": storage,
+                "io_mode": io_mode,
+                "io_workers": io_workers,
             }.items() if v is not _UNSET
         }
         if overrides:
             cfg = replace(cfg, **overrides)
         self.config = cfg
         super().__init__(location_name, cfg.auth_token, wire_codec=cfg.wire_codec,
-                         coalesce=cfg.coalesce, middleware=middleware, services=services)
+                         coalesce=cfg.coalesce, io_mode=cfg.io_mode,
+                         io_workers=cfg.io_workers, middleware=middleware,
+                         services=services)
         self._provider = make_provider(cfg.storage)
         self._lock = threading.Lock()
         self.batches_per_endpoint = cfg.batches_per_endpoint  # 0 = single endpoint
@@ -898,6 +959,45 @@ class InMemoryFlightServer(FlightServerBase):
             if self._versions.get(name, 0) == version and self._provider.exists(name):
                 self._encoded[name] = entry
         return entry[0], list(entry[1][start:stop_ix])
+
+    def _rpc_inline_ok(self, req: dict) -> bool:
+        """Widen the base certificate: a cache-warm ``DoGet`` is pure
+        memoryview queueing (no encode, no user code, no blocking), so the
+        event loop may serve it on the dispatch thread.  A cold cache, an
+        overridden ``do_get_impl``, a real pushdown query, or a foreign
+        codec all fall back to the worker pool — first request per dataset
+        warms the cache through a worker, the rest inline."""
+        if req.get("method") == "DoGet":
+            if any(type(m).__module__ != MiddlewareStack.__module__
+                   for m in self.middleware.items):
+                return False
+            opts = req.get("options") or {}
+            if (opts.get("wire_codec") or self.wire_codec) != self.wire_codec:
+                return False
+            if (
+                not self.cache_encoded
+                or type(self).do_get_impl is not InMemoryFlightServer.do_get_impl
+                or "do_get_impl" in self.__dict__
+            ):
+                return False
+            try:
+                cmd = Ticket.from_json(req["ticket"]).command()
+            except Exception:
+                return False
+            if isinstance(cmd, RangeReadCommand):
+                name = cmd.dataset
+            elif isinstance(cmd, QueryCommand):
+                name = cmd.plan.dataset
+                with self._lock:
+                    schema = (self._provider.schema(name)
+                              if self._provider.exists(name) else None)
+                if schema is None or not cmd.plan.is_passthrough(schema.names):
+                    return False
+            else:
+                return False
+            with self._lock:
+                return name in self._encoded
+        return super()._rpc_inline_ok(req)
 
     # -- transactional staged puts -------------------------------------- #
     def _ensure_reaper(self) -> None:
@@ -1182,6 +1282,8 @@ class InMemoryFlightServer(FlightServerBase):
                     "txn_aborts": self.txn_aborts,
                     "txn_gc_reaped": self.txn_gc_reaped,
                     "storage": self._provider.stats(),
+                    "io": (self._listener.stats()
+                           if self._listener is not None else None),
                     "verbs": self.metrics.snapshot(),
                 }
             return [ActionResult(json.dumps(stats).encode())]

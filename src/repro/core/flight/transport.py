@@ -41,6 +41,7 @@ import select
 import socket
 import struct
 import threading
+import time
 from typing import Callable, Iterable
 
 import numpy as np
@@ -85,6 +86,7 @@ class FrameConnection:
                 pass
         self._send_lock = threading.Lock()
         self.pool = pool or BufferPool()
+        self._poll = None  # persistent readiness poller (receive_ready)
         self._rbuf = bytearray()  # buffered-receive leftover bytes
         self._rpos = 0
         self._fill_chunk = RECV_CHUNK  # adapted per observed body sizes
@@ -197,14 +199,25 @@ class FrameConnection:
         """True when ``recv_frame`` has bytes to consume without blocking
         (user-space buffer or kernel socket buffer).  Lets callers flush
         pending output exactly when a read is about to block — the
-        streaming-exchange coalescing heuristic (exchange.py)."""
+        streaming-exchange coalescing heuristic (exchange.py).
+
+        The kernel probe goes through a poll object registered once per
+        connection instead of a fresh ``select`` fd-set per call — the
+        probe runs once per streamed batch, so its setup cost is hot-path
+        cost.  Event-loop channels override this entirely (readiness is
+        already known from the last epoll event; zero syscalls)."""
         if self._buffered():
             return True
         try:
-            r, _, _ = select.select([self.sock], [], [], 0)
+            if self._poll is None:
+                if not hasattr(select, "poll"):  # pragma: no cover — non-Linux
+                    r, _, _ = select.select([self.sock], [], [], 0)
+                    return bool(r)
+                self._poll = select.poll()
+                self._poll.register(self.sock, select.POLLIN)
+            return bool(self._poll.poll(0))
         except (OSError, ValueError):  # closed socket
             return True  # let recv_frame surface the real error
-        return bool(r)
 
     def recv_frame(self) -> tuple[int, dict, Buffer | None]:
         head = self._take(FRAME.size)
@@ -243,14 +256,41 @@ class FrameConnection:
         self.sock.close()
 
 
-def dial(host: str, port: int, timeout: float | None = 30.0) -> FrameConnection:
-    sock = socket.create_connection((host, port), timeout=timeout)
-    sock.settimeout(None)
-    return FrameConnection(sock)
+DIAL_ATTEMPTS = 3       # bounded connect retries on ECONNREFUSED
+DIAL_BACKOFF = 0.05     # first retry delay; doubles per attempt
+
+
+def dial(host: str, port: int, timeout: float | None = 30.0,
+         attempts: int = DIAL_ATTEMPTS, backoff: float = DIAL_BACKOFF) -> FrameConnection:
+    """Connect with bounded retry-with-backoff on ``ConnectionRefusedError``.
+
+    A refused connect usually means the server process is mid-startup (the
+    subprocess-server benchmarks and cluster restart tests race the bind);
+    anything else — unreachable host, timeout — fails immediately.  Total
+    added wait is ``backoff * (2^(attempts-1) - 1)`` ≈ 0.15 s at defaults."""
+    attempts = max(1, attempts)
+    for attempt in range(attempts):
+        try:
+            sock = socket.create_connection((host, port), timeout=timeout)
+        except ConnectionRefusedError:
+            if attempt == attempts - 1:
+                raise
+            time.sleep(backoff * (1 << attempt))
+        else:
+            sock.settimeout(None)
+            return FrameConnection(sock)
+    raise ConnectionRefusedError  # pragma: no cover — loop always returns/raises
 
 
 class SocketListener:
-    """Accept loop running handler-per-connection threads (the server side)."""
+    """Accept loop running handler-per-connection threads (the server side).
+
+    The thread-per-connection model: simple, but thread count is O(live
+    clients) and the GIL convoy grows with them — see eventloop.py for the
+    selector core that replaces it (``ServerConfig(io_mode=...)`` picks;
+    this listener is retained one release for bisection)."""
+
+    MAX_TRACKED = 64  # retained Thread objects (diagnostics only), hard cap
 
     def __init__(self, handler: Callable[[FrameConnection], None], host: str = "127.0.0.1", port: int = 0):
         self._handler = handler
@@ -277,10 +317,13 @@ class SocketListener:
             conn = FrameConnection(sock)
             t = threading.Thread(target=self._safe_handle, args=(conn,), daemon=True)
             t.start()
-            # reap finished handlers so long-lived servers don't accrete one
-            # Thread object per connection ever accepted
-            self._threads = [x for x in self._threads if x.is_alive()]
-            self._threads.append(t)
+            # reap finished handlers on every accept AND cap the retained
+            # list: a connection storm between reaps must not accrete one
+            # Thread object per connection ever accepted (the list is
+            # diagnostic — dropping a reference never kills a live handler)
+            alive = [x for x in self._threads if x.is_alive()]
+            alive.append(t)
+            self._threads = alive[-self.MAX_TRACKED:]
 
     def _safe_handle(self, conn: FrameConnection) -> None:
         try:
@@ -294,6 +337,15 @@ class SocketListener:
                 pass
         finally:
             conn.close()
+
+    def open_connections(self) -> int:
+        """Live handler threads (== live connections, up to ``MAX_TRACKED``)."""
+        return sum(1 for t in self._threads if t.is_alive())
+
+    def stats(self) -> dict:
+        return {"io_mode": "threads",
+                "open_connections": self.open_connections(),
+                "workers": None}
 
     def stop(self) -> None:
         self._closing.set()

@@ -1,0 +1,275 @@
+"""Event-loop serving under concurrency: many-client correctness, slow-reader
+backpressure, disconnect cleanup, listener thread bounds, dial retry."""
+import gc
+import json
+import socket
+import struct
+import threading
+import time
+import weakref
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    FlightClient,
+    FlightDescriptor,
+    InMemoryFlightServer,
+    open_exchange,
+)
+from repro.core.flight.eventloop import OUT_HIGH_WATER, EventLoopListener
+from repro.core.flight.transport import (
+    FRAME,
+    FRAME_MAGIC,
+    KIND_CTRL,
+    SocketListener,
+    dial,
+)
+
+
+def make_batches(n=8, rows=200, seed=0):
+    rng = np.random.default_rng(seed)
+    return [RecordBatch.from_numpy({
+        "a": rng.integers(0, 100, rows).astype(np.int64),
+        "b": rng.standard_normal(rows),
+    }) for _ in range(n)]
+
+
+@pytest.fixture()
+def server():
+    srv = InMemoryFlightServer().serve_tcp()
+    srv.add_dataset("ds", make_batches())
+    yield srv
+    srv.shutdown()
+
+
+def get_all(port, ticket, rows_expected, results, idx):
+    try:
+        client = FlightClient(f"tcp://127.0.0.1:{port}")
+        table = client.do_get(ticket).read_all()
+        results[idx] = table.num_rows == rows_expected
+    except Exception as e:  # pragma: no cover - failure detail for the assert
+        results[idx] = e
+
+
+class TestManyClients:
+    def test_64_clients_concurrent_doget(self, server):
+        info = FlightClient(server).get_flight_info(FlightDescriptor.for_path("ds"))
+        ticket = info.endpoints[0].ticket
+        results = [None] * 64
+        threads = [
+            threading.Thread(target=get_all,
+                             args=(server.port, ticket, 1600, results, i))
+            for i in range(64)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert all(r is True for r in results), results
+        # the whole point: serving 64 clients never grew the worker pool
+        assert server._listener.stats()["workers"] <= 8
+
+    def test_concurrent_exchange_clients(self, server):
+        batches = make_batches(4)
+        results = [None] * 8
+
+        def run(i):
+            try:
+                client = FlightClient(f"tcp://127.0.0.1:{server.port}")
+                out = open_exchange(client, "echo", batches[0].schema,
+                                    batches).read_all()
+                results[i] = out.num_rows == 800
+            except Exception as e:  # pragma: no cover
+                results[i] = e
+
+        threads = [threading.Thread(target=run, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert all(r is True for r in results), results
+
+    def test_server_thread_count_o_workers(self, server):
+        before = threading.active_count()
+        clients = [FlightClient(f"tcp://127.0.0.1:{server.port}")
+                   for _ in range(32)]
+        info = clients[0].get_flight_info(FlightDescriptor.for_path("ds"))
+        for c in clients:
+            assert c.do_get(info.endpoints[0].ticket).read_all().num_rows == 1600
+        # 32 held-open connections must not have spawned 32 server threads
+        assert threading.active_count() <= before + server._listener._workers + 1
+        assert server._listener.open_connections() >= 32
+
+
+class TestBackpressure:
+    def test_slow_reader_does_not_block_others(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        # dataset bigger than kernel socket buffers + OUT_HIGH_WATER, so a
+        # never-reading client forces the server's outbox to its high-water
+        # mark and parks that RPC's worker in _flush
+        big = [RecordBatch.from_numpy(
+            {"x": np.arange(1 << 17, dtype=np.int64) + i}) for i in range(12)]
+        assert sum(b.nbytes() for b in big) > OUT_HIGH_WATER
+        srv.add_dataset("big", big)
+        srv.add_dataset("small", make_batches(2))
+        try:
+            info_client = FlightClient(srv)
+            big_ticket = info_client.get_flight_info(
+                FlightDescriptor.for_path("big")).endpoints[0].ticket
+            small_ticket = info_client.get_flight_info(
+                FlightDescriptor.for_path("small")).endpoints[0].ticket
+
+            # raw socket: open the DoGet RPC, then never read a byte
+            stalled = socket.create_connection(("127.0.0.1", srv.port))
+            stalled.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4096)
+            meta = json.dumps(
+                {"method": "DoGet", "ticket": big_ticket.to_json()}).encode()
+            stalled.sendall(FRAME.pack(FRAME_MAGIC, KIND_CTRL, len(meta), 0) + meta)
+            time.sleep(0.5)  # let the server wedge on the stalled outbox
+
+            # other clients stream freely on the remaining workers
+            t0 = time.monotonic()
+            for _ in range(3):
+                client = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+                assert client.do_get(small_ticket).read_all().num_rows == 400
+            assert time.monotonic() - t0 < 10.0
+            stalled.close()
+        finally:
+            srv.shutdown()
+
+    def test_midstream_disconnect_frees_fd_and_buffers(self, server):
+        info = FlightClient(server).get_flight_info(FlightDescriptor.for_path("ds"))
+        ticket = info.endpoints[0].ticket
+        # connect, open a DoGet, read a little, vanish
+        conn = dial("127.0.0.1", server.port)
+        conn.send_ctrl({"method": "DoGet", "ticket": ticket.to_json()})
+        conn.recv_ctrl()   # ok
+        conn.recv_frame()  # schema frame: the stream is live server-side
+        assert server._listener.open_connections() >= 1
+        channels = list(server._listener._conns.values())
+        refs = [weakref.ref(ch) for ch in channels]
+        conn.sock.close()
+        deadline = time.monotonic() + 10
+        while server._listener.open_connections() > 0:
+            assert time.monotonic() < deadline, "fd not reaped after disconnect"
+            time.sleep(0.02)
+        del channels
+        for _ in range(60):
+            gc.collect()
+            if all(r() is None for r in refs):
+                break
+            time.sleep(0.05)
+        # channel gone => its BufferPool and pooled body slabs are released
+        assert all(r() is None for r in refs)
+
+    def test_disconnect_on_partial_frame(self, server):
+        # half a frame header, then hang up: the parser must just drop it
+        raw = socket.create_connection(("127.0.0.1", server.port))
+        raw.sendall(struct.pack("<I", FRAME_MAGIC))
+        raw.close()
+        deadline = time.monotonic() + 10
+        while server._listener.open_connections() > 0:
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+        # server still serves
+        client = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+        assert client.do_get(info.endpoints[0].ticket).read_all().num_rows == 1600
+
+
+class TestListenerChurn:
+    def test_threads_listener_bounded_under_churn(self):
+        handled = []
+
+        def handler(conn):
+            try:
+                conn.recv_frame()
+            except ConnectionError:
+                pass
+            handled.append(1)
+            conn.close()
+
+        lst = SocketListener(handler).start()
+        try:
+            for _ in range(3 * SocketListener.MAX_TRACKED):
+                s = socket.create_connection(("127.0.0.1", lst.port))
+                s.close()
+                assert len(lst._threads) <= SocketListener.MAX_TRACKED
+        finally:
+            lst.stop()
+
+    def test_eventloop_accept_churn(self):
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            before = threading.active_count()
+            for _ in range(100):
+                s = socket.create_connection(("127.0.0.1", srv.port))
+                s.close()
+            deadline = time.monotonic() + 10
+            while srv._listener.open_connections() > 0:
+                assert time.monotonic() < deadline
+                time.sleep(0.02)
+            assert threading.active_count() <= before + srv._listener._workers
+        finally:
+            srv.shutdown()
+
+
+class TestDialRetry:
+    def test_dial_retries_refused_until_server_up(self):
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+        probe.close()  # port now refuses connections until the server binds
+        holder = {}
+
+        def late_start():
+            time.sleep(0.08)
+            holder["srv"] = InMemoryFlightServer().serve_tcp(port=port)
+
+        t = threading.Thread(target=late_start)
+        t.start()
+        try:
+            conn = dial("127.0.0.1", port, attempts=5, backoff=0.05)
+            conn.close()
+        finally:
+            t.join()
+            holder["srv"].shutdown()
+
+    def test_dial_refused_raises_after_bounded_attempts(self):
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+        probe.close()
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionRefusedError):
+            dial("127.0.0.1", port, attempts=2, backoff=0.01)
+        assert time.monotonic() - t0 < 5.0
+
+
+class TestIoModes:
+    def test_threads_mode_still_serves(self):
+        srv = InMemoryFlightServer(io_mode="threads").serve_tcp()
+        srv.add_dataset("ds", make_batches(2))
+        try:
+            assert isinstance(srv._listener, SocketListener)
+            client = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            info = client.get_flight_info(FlightDescriptor.for_path("ds"))
+            assert client.do_get(info.endpoints[0].ticket).read_all().num_rows == 400
+            assert srv._listener.stats()["io_mode"] == "threads"
+        finally:
+            srv.shutdown()
+
+    def test_eventloop_is_default_and_reports_stats(self, server):
+        assert isinstance(server._listener, EventLoopListener)
+        import json
+        client = FlightClient(f"tcp://127.0.0.1:{server.port}")
+        stats = json.loads(client.do_action("server-stats")[0].body)
+        assert stats["io"]["io_mode"] == "eventloop"
+        assert stats["io"]["workers"] == server._listener._workers
+
+    def test_bad_io_mode_rejected(self):
+        from repro.core.flight.errors import FlightError
+        with pytest.raises(FlightError):
+            InMemoryFlightServer(io_mode="fibers").serve_tcp()
