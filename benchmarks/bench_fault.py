@@ -1,0 +1,139 @@
+"""Fault sweep: kill a replica shard mid-read, measure the cost of surviving.
+
+The replicated cluster's claim is that R=2 makes a shard death a *latency*
+event, not an availability event: every in-flight DoGet fails over to the
+slice's surviving holder (resume-skip keeps already-emitted batches), every
+subsequent plan routes around the corpse, and nothing the client sees is an
+error.  This sweep prices that claim on the modeled wire:
+
+* ``healthy``        — parallel read, all shards up (the baseline).
+* ``kill_mid_read``  — same read; one shard is ``FaultInjector.kill``-ed
+  after the first batches arrive.  The timing includes the failover stalls;
+  ``pct_of_healthy`` is the headline number (acceptance: the degraded read
+  keeps >= 70% of healthy throughput).
+* ``degraded``       — a fresh read with the shard already declared DEAD:
+  the steady-state cost of running one replica down (plans skip the corpse,
+  so this prices replica-holder load skew, not failover).
+* ``detect``         — kill → failure-detector-declares-DEAD latency via the
+  active prober (the membership plane's contribution to recovery time).
+
+Shards serve through ``netsim.paced_stream`` at the modeled per-stream
+Flight-over-IB rate (pacing sleeps release the GIL), so stream scheduling —
+not this container's loopback CPU — sets the shape.  ``run.py`` emits
+BENCH_fault.json per commit."""
+from __future__ import annotations
+
+import time
+
+from repro.core.flight import FaultInjector, FlightClusterClient, FlightClusterServer
+from repro.core.flight.membership import ShardState
+from repro.core.flight.netsim import FLIGHT_O_IB_GET, paced_stream
+
+from .common import Timing, records_batch
+
+
+class _PacedShard:
+    """Shard factory: DoGet streams at the modeled per-stream wire rate."""
+
+    def __call__(self, i: int, loc_name: str):
+        from repro.core.flight import InMemoryFlightServer
+
+        class PacedShardServer(InMemoryFlightServer):
+            def do_get_impl(self, ticket):
+                schema, batches = super().do_get_impl(ticket)
+                return schema, paced_stream(batches, FLIGHT_O_IB_GET)
+
+        return PacedShardServer(location_name=loc_name, shard_id=i,
+                                batches_per_endpoint=0)
+
+
+def _read_seconds(cc: FlightClusterClient, name: str, expect_rows: int) -> float:
+    t0 = time.perf_counter()
+    table, _ = cc.read(name)
+    dt = time.perf_counter() - t0
+    assert table.num_rows == expect_rows, (table.num_rows, expect_rows)
+    return dt
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    shard_counts = (3,) if quick else (3, 4, 6)
+    rows, n_batches = (20_000, 8) if quick else (80_000, 8)
+
+    for n in shard_counts:
+        batches = [records_batch(rows, seed=s) for s in range(n_batches)]
+        nbytes = sum(b.nbytes() for b in batches)
+        total_rows = rows * n_batches
+        cl = FlightClusterServer(
+            num_shards=n, replicas=2, shard_factory=_PacedShard(),
+            suspect_after=0.05, dead_after=0.1)
+        try:
+            cl.add_dataset("bench", batches)
+            cc = FlightClusterClient(cl, max_streams=n)
+            inj = FaultInjector(cl)
+
+            # -- healthy baseline ------------------------------------------ #
+            healthy = min(_read_seconds(cc, "bench", total_rows) for _ in range(2))
+            out.append(Timing(f"fault_healthy_read_shards{n}", healthy, nbytes,
+                              extra={"shards": n, "replicas": 2}))
+
+            # -- kill one shard mid-read ----------------------------------- #
+            got_rows, killed = 0, False
+            t0 = time.perf_counter()
+            for i, b in enumerate(cc.stream("bench")):
+                got_rows += b.num_rows
+                if i == 1 and not killed:
+                    inj.kill(0)
+                    killed = True
+            mid = time.perf_counter() - t0
+            assert got_rows == total_rows, (got_rows, total_rows)
+            out.append(Timing(
+                f"fault_kill_mid_read_shards{n}", mid, nbytes,
+                extra={"shards": n, "replicas": 2,
+                       "pct_of_healthy": round(100 * healthy / mid, 1),
+                       "rows_complete": got_rows == total_rows}))
+
+            # -- detection latency (kill -> detector says DEAD) ------------ #
+            t0 = time.perf_counter()
+            deadline = t0 + 10.0
+            while cl.membership.state(0) is not ShardState.DEAD:
+                cl.prober.tick()
+                time.sleep(0.02)
+                if time.perf_counter() > deadline:
+                    raise RuntimeError("failure detector never fired")
+            detect = time.perf_counter() - t0
+            out.append(Timing(f"fault_detect_dead_shards{n}", detect, 0,
+                              extra={"shards": n,
+                                     "dead_after_s": cl.membership.dead_after}))
+
+            # -- degraded steady state (plans route around the corpse) ----- #
+            degraded = min(_read_seconds(cc, "bench", total_rows) for _ in range(2))
+            pct = round(100 * healthy / degraded, 1)
+            out.append(Timing(
+                f"fault_degraded_read_shards{n}", degraded, nbytes,
+                extra={"shards": n, "replicas": 2, "pct_of_healthy": pct,
+                       "meets_70pct_floor": pct >= 70.0}))
+
+            # -- revive: detector readmits, plans use it again -------------- #
+            inj.revive(0)
+            t0 = time.perf_counter()
+            while cl.membership.state(0) is not ShardState.HEALTHY:
+                cl.prober.tick()
+                time.sleep(0.02)
+                if time.perf_counter() - t0 > 10.0:
+                    raise RuntimeError("revived shard never readmitted")
+            out.append(Timing(
+                f"fault_readmit_revived_shards{n}", time.perf_counter() - t0, 0,
+                extra={"shards": n}))
+        finally:
+            cl.shutdown()
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_bench_json
+
+    timings = run(quick=True)
+    for t in timings:
+        print(t.csv() + (f" {t.extra}" if t.extra else ""))
+    print(f"# wrote {emit_bench_json('fault', timings)}")

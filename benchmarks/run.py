@@ -18,7 +18,7 @@ def main() -> None:
     quick = not args.full
 
     from . import (bench_cluster, bench_concurrency, bench_endpoints,
-                   bench_exchange, bench_export, bench_kernels,
+                   bench_exchange, bench_export, bench_fault, bench_kernels,
                    bench_protocols, bench_query, bench_serde, bench_storage,
                    bench_transfer, bench_wire)
     from .common import emit_bench_json
@@ -33,12 +33,13 @@ def main() -> None:
         "exchange": bench_exchange,    # Fig 11: streaming DoExchange microservices
         "storage": bench_storage,      # provider plane: disk vs memory DoGet
         "concurrency": bench_concurrency,  # C10k: event loop vs thread/conn
+        "fault": bench_fault,          # kill-a-shard-mid-read recovery sweep
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
     # recorded to BENCH_<name>.json
     json_suites = {"cluster", "wire", "query", "exchange", "storage",
-                   "concurrency"}
+                   "concurrency", "fault"}
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

@@ -1,6 +1,24 @@
 """Arrow-Flight-style RPC: protocol, transports, server, client, scheduler,
-cluster, middleware, typed errors, streaming exchange services, netsim."""
+cluster, membership/replication, fault injection, middleware, typed errors,
+streaming exchange services, netsim."""
 from .client import FlightClient, FlightExchange, FlightStreamReader  # noqa: F401
+from .faultsim import FaultInjector  # noqa: F401
+from .membership import (  # noqa: F401
+    ClusterMembership,
+    ClusterView,
+    MembershipProber,
+    ShardState,
+)
+from .replication import (  # noqa: F401
+    DatasetLayout,
+    ReplicatedPlacement,
+    SliceInfo,
+    parse_slice_key,
+    plan_layout,
+    recover_layouts,
+    slice_key,
+    subtxn_id,
+)
 from .exchange import (  # noqa: F401
     FlightExchangeStream,
     InprocExchangeStream,

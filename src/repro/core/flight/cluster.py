@@ -32,11 +32,13 @@ readable (and the shards' TTL reaper GCs it).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import threading
 import uuid
 import zlib
+from collections import OrderedDict
 
 import numpy as np
 
@@ -44,6 +46,17 @@ from ..recordbatch import RecordBatch, Table
 from ..schema import Schema
 from .client import FlightClient, run_staged_put
 from .exchange import as_exchange_descriptor
+from .membership import ClusterMembership, MembershipProber, ShardState
+from .replication import (
+    DatasetLayout,
+    ReplicatedPlacement,
+    move_slice,
+    parse_slice_key,
+    plan_layout,
+    recover_layouts,
+    stage_slice,
+    subtxn_id,
+)
 from .protocol import (
     Action,
     ActionResult,
@@ -195,11 +208,27 @@ class FlightClusterServer(FlightServerBase):
         shard_factory=None,
         shard_config: ServerConfig | None = None,
         storage=None,
+        replicas: int = 1,
+        heartbeat_interval: float = 0.0,
+        suspect_after: float = 0.75,
+        dead_after: float = 2.0,
+        auto_rebalance: bool = False,
+        rebalance_grace: float = 0.0,
     ):
         super().__init__(location_name, auth_token)
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
+        if not 1 <= replicas <= num_shards:
+            raise FlightInvalidArgument(
+                f"replicas must be in [1, num_shards]: {replicas} vs {num_shards}",
+                detail={"replicas": replicas, "num_shards": num_shards})
         self.placement = make_placement(placement, hash_key)
+        self.replicas = replicas
+        if replicas > 1:
+            # the replicated plane: slice-key layouts + per-endpoint replica
+            # Locations (see replication.py); R=1 keeps the historical
+            # positional per-shard layout byte-for-byte
+            self.placement = ReplicatedPlacement(self.placement, replicas)
         # shard_factory(shard_id, location_name) -> InMemoryFlightServer lets
         # benchmarks/tests substitute instrumented or wire-paced shards
         if shard_factory is None:
@@ -229,6 +258,7 @@ class FlightClusterServer(FlightServerBase):
                     services=self.services,
                     **extra,
                 )
+        self._shard_factory = shard_factory  # kept: add_shard builds with it
         self.shards = [
             shard_factory(i, f"{location_name}-shard{i}") for i in range(num_shards)
         ]
@@ -236,12 +266,51 @@ class FlightClusterServer(FlightServerBase):
             s.shard_id = i
         self._datasets: dict[str, Schema] = {}
         self._dlock = threading.Lock()
+        # membership: every shard starts HEALTHY; the prober (when enabled)
+        # or explicit heartbeat/sweep calls advance the state machine, and
+        # every view change bumps the epoch stamped into FlightInfo plans
+        self.membership = ClusterMembership(suspect_after, dead_after)
+        for i, s in enumerate(self.shards):
+            self.membership.register(i, [l.uri for l in s.locations()])
+        self.auto_rebalance = auto_rebalance
+        self.rebalance_grace = rebalance_grace
+        self.heartbeat_interval = heartbeat_interval
+        self.prober = MembershipProber(
+            self.membership, self._probe_shard,
+            interval=heartbeat_interval or 0.25,
+            on_dead=self._on_shards_dead)
+        # replicated layouts: dataset -> slice/holder map at a generation
+        self._layouts: dict[str, DatasetLayout] = {}
+        self._gen = 0
+        self._pending_txns: OrderedDict[str, tuple[str, list[tuple[int, str]]]] = OrderedDict()
+        self._rebalance_lock = threading.Lock()
+        self._rebalance_thread: threading.Thread | None = None
+        self.last_rebalance_error: Exception | None = None
+        self.rebalances = 0
+        self._tcp_host: str | None = None
         # catalog recovery: durable shard backends (disk roots) re-surface
         # their datasets at construction — fold their union into the head's
-        # catalog so a restarted cluster answers GetFlightInfo immediately
-        for s in self.shards:
-            for name in s.storage.list():
-                self._datasets.setdefault(name, s.storage.schema(name))
+        # catalog so a restarted cluster answers GetFlightInfo immediately.
+        # Replica slice keys parse back to (dataset, gen, slice), so the
+        # layouts — including which shard holds which replica — rebuild too.
+        listings = {i: s.storage.list() for i, s in enumerate(self.shards)}
+        if replicas > 1:
+            self._layouts = recover_layouts(listings)
+            for name, lay in self._layouts.items():
+                self._gen = max(self._gen, lay.gen)
+                for sl in lay.slices:
+                    holder = next((h for h in sl.holders if h < len(self.shards)
+                                   and self.shards[h].storage.exists(sl.key)), None)
+                    if holder is not None:
+                        self._datasets.setdefault(
+                            name, self.shards[holder].storage.schema(sl.key))
+                        break
+        for i, s in enumerate(self.shards):
+            for name in listings[i]:
+                if parse_slice_key(name) is None:
+                    self._datasets.setdefault(name, s.storage.schema(name))
+        if heartbeat_interval > 0:
+            self.prober.start()
 
     @property
     def num_shards(self) -> int:
@@ -250,28 +319,281 @@ class FlightClusterServer(FlightServerBase):
     # -- lifecycle --------------------------------------------------------- #
     def serve_tcp(self, host: str = "127.0.0.1", port: int = 0) -> "FlightClusterServer":
         super().serve_tcp(host, port)
-        for s in self.shards:
+        self._tcp_host = host
+        for i, s in enumerate(self.shards):
             s.serve_tcp(host, 0)
+            self.membership.update_locations(i, [l.uri for l in s.locations()])
         return self
 
     def shutdown(self) -> None:
+        self.prober.stop()
+        t = self._rebalance_thread
+        if t is not None:
+            t.join(timeout=5.0)
         super().shutdown()
         for s in self.shards:
             s.shutdown()
 
+    # -- membership -------------------------------------------------------- #
+    def _probe_shard(self, sid: int) -> bool:
+        """Health probe for the prober: the shard's ``health`` action.
+
+        In-proc this is a direct call (the head owns the shard objects), so
+        an injected fault (faultsim patches the verb impls) fails the probe
+        exactly like a dead process would fail a TCP one."""
+        s = self.shards[sid]
+        return s.do_action_impl(Action("health"))[0].body == b"ok"
+
+    def _on_shards_dead(self, newly_dead: list[int]) -> None:
+        if self.auto_rebalance and self.replicas > 1:
+            self._start_rebalance(wait=False)
+
     # -- loading ----------------------------------------------------------- #
     def add_dataset(self, name: str, batches: list[RecordBatch]) -> None:
         schema = batches[0].schema
-        parts = self.placement.assign(batches, self.num_shards)
-        for shard, part in zip(self.shards, parts):
-            shard.add_dataset(name, part, schema=schema)
+        if self.replicas == 1:
+            parts = self.placement.assign(batches, self.num_shards)
+            for shard, part in zip(self.shards, parts):
+                shard.add_dataset(name, part, schema=schema)
+            with self._dlock:
+                self._datasets[name] = schema
+            return
+        # replicated load: slice with the base policy, store each slice
+        # verbatim on all of its holders (identical batch boundaries are
+        # what make one slice's ticket redeemable on any replica)
+        targets = self.membership.alive()
+        if len(targets) < self.replicas:
+            raise FlightUnavailable(
+                f"{len(targets)} live shard(s) cannot host {self.replicas} replicas",
+                detail={"alive": targets, "replicas": self.replicas})
+        lay = plan_layout(name, self._next_gen(), targets, self.replicas)
+        parts = self.placement.assign(batches, lay.num_slices)
+        for sl, part in zip(lay.slices, parts):
+            for h in sl.holders:
+                self.shards[h].add_dataset(sl.key, part, schema=schema)
         with self._dlock:
+            old = self._layouts.get(name)
+            self._layouts[name] = lay
             self._datasets[name] = schema
+        if old is not None:
+            # a replaced dataset invalidates plans against the old layout
+            self.membership.bump()
+            self._drop_layout_keys(old, keep=frozenset(lay.keys()))
 
     def dataset(self, name: str) -> list[RecordBatch]:
-        """All shards' batches in shard order (the head DoGet gather order)."""
-        return [b for s in self.shards if s.storage.exists(name)
-                for b in s.dataset(name)]
+        """All batches in slice/shard order (the head DoGet gather order)."""
+        lay = self._layout(name)
+        if lay is None:
+            return [b for s in self.shards if s.storage.exists(name)
+                    for b in s.dataset(name)]
+        return [b for sl in lay.slices for b in self._slice_batches(sl)]
+
+    # -- replicated-layout helpers ----------------------------------------- #
+    def _layout(self, name: str) -> DatasetLayout | None:
+        with self._dlock:
+            return self._layouts.get(name)
+
+    def _next_gen(self) -> int:
+        with self._dlock:
+            self._gen += 1
+            return self._gen
+
+    def _holders_alive(self, sl) -> list[int]:
+        """A slice's routable holders, HEALTHY before SUSPECT (stable within
+        each class, so the rotation's primary stays primary while healthy)."""
+        hs = [h for h in sl.holders if self.membership.is_routable(h)]
+        if not hs:
+            raise FlightUnavailable(
+                f"slice {sl.index} ({sl.key!r}) has no live replica",
+                detail={"slice": sl.index, "holders": list(sl.holders)})
+        hs.sort(key=lambda h: 0 if self.membership.state(h) == ShardState.HEALTHY else 1)
+        return hs
+
+    def _slice_batches(self, sl) -> list[RecordBatch]:
+        for h in self._holders_alive(sl):
+            if self.shards[h].storage.exists(sl.key):
+                return self.shards[h].dataset(sl.key)
+        return []  # slice never received batches (fewer batches than slices)
+
+    def _ensure_layout(self, name: str, schema: Schema | None = None) -> DatasetLayout:
+        """Pin a layout for ``name``, planning one over the live shards if
+        it does not exist yet.  Pinning is separate from visibility: the
+        dataset only enters the catalog when data commits (register-dataset
+        or a txn-commit round), so concurrent writers share one plan."""
+        with self._dlock:
+            lay = self._layouts.get(name)
+        if lay is not None:
+            return lay
+        targets = self.membership.alive()
+        if len(targets) < self.replicas:
+            raise FlightUnavailable(
+                f"{len(targets)} live shard(s) cannot host {self.replicas} replicas",
+                detail={"alive": targets, "replicas": self.replicas})
+        lay = plan_layout(name, self._next_gen(), targets, self.replicas)
+        with self._dlock:
+            return self._layouts.setdefault(name, lay)
+
+    def _drop_layout_keys(self, lay: DatasetLayout, keep: frozenset = frozenset()) -> None:
+        """Best-effort removal of a superseded generation's slice keys.
+
+        With ``rebalance_grace > 0`` the drop is deferred, so reads planned
+        against the old generation can drain mid-cutover."""
+        def drop() -> None:
+            for sl in lay.slices:
+                if sl.key in keep:
+                    continue
+                for h in set(sl.holders):
+                    if not 0 <= h < len(self.shards):
+                        continue
+                    try:
+                        self.shards[h].do_action_impl(Action("drop", sl.key.encode()))
+                    except Exception:
+                        continue  # dead holder: its copy died with it
+
+        if self.rebalance_grace > 0:
+            t = threading.Timer(self.rebalance_grace, drop)
+            t.daemon = True
+            t.start()
+        else:
+            drop()
+
+    # -- elastic membership: add/remove shards, rebalance ------------------- #
+    def add_shard(self, wait: bool = True) -> int:
+        """Grow the cluster by one shard and rebalance every layout onto it.
+
+        The new shard is built with the same factory as the originals (and
+        serves TCP when the cluster does); it becomes a replica holder once
+        the background rebalance's cutover commits."""
+        if self.replicas == 1:
+            raise FlightInvalidArgument(
+                "add_shard requires a replicated cluster (replicas > 1); "
+                "positional R=1 layouts cannot absorb new shards")
+        sid = len(self.shards)
+        s = self._shard_factory(sid, f"{self.location_name}-shard{sid}")
+        s.shard_id = sid
+        if self._tcp_host is not None:
+            s.serve_tcp(self._tcp_host, 0)
+        self.shards.append(s)
+        self.membership.register(sid, [l.uri for l in s.locations()])
+        self._start_rebalance(wait=wait)
+        return sid
+
+    def remove_shard(self, shard_id: int, wait: bool = True) -> None:
+        """Gracefully drain a shard: rebalance every layout off it, then
+        deregister + shut it down.  The shard object stays in the table as a
+        tombstone — shard ids are indices, and outstanding tickets stamped
+        with other ids must keep resolving."""
+        if self.replicas == 1:
+            raise FlightInvalidArgument(
+                "remove_shard requires a replicated cluster (replicas > 1)")
+        if not 0 <= shard_id < len(self.shards):
+            raise FlightNotFound(f"no such shard: {shard_id}",
+                                 detail={"shard": shard_id})
+
+        def drained() -> None:
+            self.membership.deregister(shard_id)
+            try:
+                self.shards[shard_id].shutdown()
+            except Exception:
+                pass  # tombstone anyway; the data already moved
+
+        self._start_rebalance(wait=wait, exclude=(shard_id,), after=drained)
+
+    def wait_rebalanced(self, timeout: float | None = None) -> None:
+        """Join an in-flight background rebalance; re-raise its failure."""
+        t = self._rebalance_thread
+        if t is not None:
+            t.join(timeout)
+        err, self.last_rebalance_error = self.last_rebalance_error, None
+        if err is not None:
+            raise err
+
+    def _start_rebalance(self, wait: bool = True, exclude: tuple = (),
+                         after=None) -> None:
+        if wait:
+            self._rebalance(exclude)
+            if after is not None:
+                after()
+            return
+
+        def run() -> None:
+            try:
+                self._rebalance(exclude)
+                if after is not None:
+                    after()
+            except Exception as e:
+                self.last_rebalance_error = e
+
+        t = threading.Thread(target=run, daemon=True, name="flight-rebalance")
+        self._rebalance_thread = t
+        t.start()
+
+    def _rebalance(self, exclude: tuple = ()) -> None:
+        """Re-plan every replicated layout over the live shards (minus
+        ``exclude``) and move the data — all on the Arrow plane, all under a
+        transactional cutover.  Old layouts keep serving until their
+        replacement commits; a failure aborts the staged generation and
+        leaves the old one untouched."""
+        with self._rebalance_lock:
+            targets = [s for s in self.membership.alive() if s not in exclude]
+            if len(targets) < self.replicas:
+                raise FlightUnavailable(
+                    f"{len(targets)} live shard(s) cannot host "
+                    f"{self.replicas} replicas",
+                    detail={"alive": targets, "replicas": self.replicas})
+            with self._dlock:
+                names = list(self._layouts)
+            for name in names:
+                self._rebalance_dataset(name, targets)
+            self.rebalances += 1
+
+    def _rebalance_dataset(self, name: str, targets: list[int]) -> bool:
+        old = self._layout(name)
+        if old is None:
+            return False
+        trial = plan_layout(name, old.gen, targets, self.replicas)
+        if [sl.holders for sl in old.slices] == [sl.holders for sl in trial.slices]:
+            return False  # already balanced over exactly these shards
+        with self._dlock:
+            schema = self._datasets.get(name)
+        # gather in slice order from whichever replicas are alive, then
+        # re-slice with the base policy for the new target count
+        src = [b for sl in old.slices for b in self._slice_batches(sl)]
+        new = plan_layout(name, self._next_gen(), targets, self.replicas)
+        parts = self.placement.assign(src, new.num_slices)
+        txn = f"rebalance-{uuid.uuid4().hex}"
+        subs: list[tuple[int, str]] = []
+        try:
+            for sl, part in zip(new.slices, parts):
+                if not part:
+                    continue
+                sch = schema if schema is not None else part[0].schema
+                stxn = subtxn_id(txn, sl.index)
+                # the move streams through the destination's `repartition`
+                # exchange (re-chunking in flight) and stages there; the
+                # re-chunked payload then stages verbatim on the remaining
+                # holders so every replica is byte-identical
+                moved = move_slice(
+                    FlightClient(self.shards[sl.holders[0]], token=self.auth_token),
+                    sl.key, stxn, sch, part)
+                for h in sl.holders[1:]:
+                    stage_slice(
+                        FlightClient(self.shards[h], token=self.auth_token),
+                        sl.key, stxn, sch, moved)
+                subs += [(h, stxn) for h in sl.holders]
+            if subs:
+                self._coordinate_commit_replicated(
+                    {"txn_id": txn, "dataset": name}, subs)
+        except Exception:
+            self._abort_subtxns(txn, subs)
+            raise
+        with self._dlock:
+            cur = self._layouts.get(name)
+            self._layouts[name] = new
+        self.membership.bump()  # the cutover is a view change: plans re-plan
+        if cur is not None:
+            self._drop_layout_keys(cur, keep=frozenset(new.keys()))
+        return True
 
     # -- handlers ----------------------------------------------------------- #
     def _info_for(self, name: str) -> FlightInfo:
@@ -279,6 +601,9 @@ class FlightClusterServer(FlightServerBase):
             if name not in self._datasets:
                 raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             schema = self._datasets[name]
+            lay = self._layouts.get(name)
+        if lay is not None:
+            return self._replicated_info(name, schema, lay)
         endpoints, records, nbytes = [], 0, 0
         for shard in self.shards:
             try:
@@ -299,6 +624,41 @@ class FlightClusterServer(FlightServerBase):
             total_records=records,
             total_bytes=nbytes,
             shard_spec=self.placement.spec(self.num_shards),
+            epoch=self.membership.epoch,
+        )
+
+    def _replicated_info(self, name: str, schema: Schema, lay: DatasetLayout) -> FlightInfo:
+        """One endpoint per slice, every live holder's Locations attached.
+
+        The ticket is a plain range read of the slice *key* — identical
+        batches on every holder make it redeemable anywhere — so the
+        scheduler's failover (resume-skip) and hedged reads get real
+        replicas to escape to without any scheduler-side changes."""
+        endpoints, records, nbytes = [], 0, 0
+        for sl in lay.slices:
+            hs = self._holders_alive(sl)  # raises when a slice lost all copies
+            first = next((h for h in hs if self.shards[h].storage.exists(sl.key)), None)
+            if first is None:
+                continue  # slice exists in the plan but never received batches
+            info = self.shards[first].storage.info(sl.key)
+            if not info["batches"]:
+                continue
+            locs = tuple(l for h in hs for l in self.shards[h].locations())
+            endpoints.append(FlightEndpoint(
+                Ticket.for_range(sl.key, 0, info["batches"], shard=first),
+                locs,
+                app_metadata={"shard": first, "slice": sl.index, "holders": hs},
+            ))
+            records += info["rows"]
+            nbytes += info["bytes"]
+        return FlightInfo(
+            schema,
+            FlightDescriptor.for_path(name),
+            endpoints,
+            total_records=records,
+            total_bytes=nbytes,
+            shard_spec=self.placement.spec(self.num_shards),
+            epoch=self.membership.epoch,
         )
 
     def list_flights_impl(self) -> list[FlightInfo]:
@@ -327,6 +687,29 @@ class FlightClusterServer(FlightServerBase):
             schema = self._datasets[name]
         out_schema = schema.select(plan.projection) if plan.projection else schema
         endpoints = []
+        lay = self._layout(name)
+        if lay is not None:
+            # replicated pushdown: each endpoint's plan is rewritten to the
+            # slice key (the shard-local dataset every holder serves), and
+            # all live holders' Locations ride along for failover/hedging
+            for sl in lay.slices:
+                hs = self._holders_alive(sl)
+                first = next(
+                    (h for h in hs if self.shards[h].storage.exists(sl.key)), None)
+                if first is None:
+                    continue
+                sub = dataclasses.replace(plan, dataset=sl.key)
+                locs = tuple(l for h in hs for l in self.shards[h].locations())
+                endpoints.append(FlightEndpoint(
+                    Ticket.for_command(
+                        QueryCommand(sub.serialize(), 0, -1, shard=first)),
+                    locs,
+                    app_metadata={"shard": first, "slice": sl.index, "holders": hs},
+                ))
+            return FlightInfo(out_schema, descriptor, endpoints,
+                              total_records=-1, total_bytes=-1,
+                              shard_spec=self.placement.spec(self.num_shards),
+                              epoch=self.membership.epoch)
         for i, shard in enumerate(self.shards):
             if not shard.storage.exists(name):
                 continue  # shard never received a slice of this dataset
@@ -337,7 +720,8 @@ class FlightClusterServer(FlightServerBase):
             ))
         return FlightInfo(out_schema, descriptor, endpoints,
                           total_records=-1, total_bytes=-1,
-                          shard_spec=self.placement.spec(self.num_shards))
+                          shard_spec=self.placement.spec(self.num_shards),
+                          epoch=self.membership.epoch)
 
     def get_flight_info_impl(self, descriptor: FlightDescriptor) -> FlightInfo:
         if descriptor.path is None:
@@ -348,6 +732,26 @@ class FlightClusterServer(FlightServerBase):
                 f"cluster plans path or query descriptors, not {type(cmd).__name__}")
         return self._info_for(descriptor.path[0])
 
+    def _route_slice_ticket(self, cmd) -> int | None:
+        """Re-route a replicated slice ticket to a live holder.
+
+        The planned primary is stamped in the ticket, but it may have died
+        after planning — head-proxied reads pick the current best holder
+        instead of failing on the stale stamp."""
+        ds = cmd.plan.dataset if isinstance(cmd, QueryCommand) else getattr(cmd, "dataset", None)
+        parsed = parse_slice_key(ds) if ds else None
+        if parsed is None:
+            return None
+        name, gen, idx = parsed
+        lay = self._layout(name)
+        if lay is None or lay.gen != gen or idx >= lay.num_slices:
+            return None  # stale generation: serve verbatim if the key survives
+        sl = lay.slices[idx]
+        sid = getattr(cmd, "shard", None)
+        if sid is not None and sid in sl.holders and self.membership.is_routable(sid):
+            return sid
+        return self._holders_alive(sl)[0]
+
     def do_get_impl(self, ticket: Ticket):
         cmd = ticket.command()
         if isinstance(cmd, (StagedPutCommand, ExchangeCommand)):
@@ -355,6 +759,9 @@ class FlightClusterServer(FlightServerBase):
                 f"{type(cmd).__name__} tickets are not redeemable via DoGet")
         sid = getattr(cmd, "shard", None)
         if sid is not None:
+            routed = self._route_slice_ticket(cmd)
+            if routed is not None:
+                sid = routed
             if not 0 <= sid < self.num_shards:
                 raise FlightNotFound(f"no such shard: {sid}", detail={"shard": sid})
             return self.shards[sid].do_get_impl(ticket)
@@ -395,6 +802,8 @@ class FlightClusterServer(FlightServerBase):
                         f"DoPut takes the stage leg only; {cmd.phase!r} rides "
                         f"the txn-{cmd.phase} action", detail={"phase": cmd.phase})
                 received = list(batches)
+                if self._is_replicated_name(cmd.dataset):
+                    return self._staged_put_replicated(cmd, schema, received)
                 parts = self.placement.assign(received, self.num_shards)
                 per_shard = [
                     shard.do_put_impl(descriptor, schema, iter(part))
@@ -413,6 +822,8 @@ class FlightClusterServer(FlightServerBase):
                 }
         name = descriptor.path[0] if descriptor.path else descriptor.key
         received = list(batches)
+        if self._is_replicated_name(name):
+            return self._plain_put_replicated(name, schema, received)
         parts = self.placement.assign(received, self.num_shards)
         per_shard = []
         for shard, part in zip(self.shards, parts):
@@ -423,6 +834,66 @@ class FlightClusterServer(FlightServerBase):
             "batches": sum(s["batches"] for s in per_shard),
             "rows": sum(s["rows"] for s in per_shard),
             "bytes": sum(s["bytes"] for s in per_shard),
+            "per_shard": per_shard,
+        }
+
+    def _is_replicated_name(self, name: str) -> bool:
+        """Replicated routing applies to plain dataset names on a R>1
+        cluster; a slice key addressed directly (rebalance staging, replica
+        repair) falls through to the positional path untouched."""
+        return self.replicas > 1 and parse_slice_key(name) is None
+
+    def _plain_put_replicated(self, name: str, schema, received: list) -> dict:
+        lay = self._ensure_layout(name)
+        parts = self.placement.assign(received, lay.num_slices)
+        per_slice, per_shard = [], []
+        for sl, part in zip(lay.slices, parts):
+            if not part:
+                continue
+            d = FlightDescriptor.for_path(sl.key)
+            acks = [self.shards[h].do_put_impl(d, schema, iter(part))
+                    for h in sl.holders]
+            per_slice.append(acks[0])  # logical payload counted once
+            per_shard.extend(acks)
+        with self._dlock:
+            self._datasets.setdefault(name, schema)
+        return {
+            "batches": sum(s["batches"] for s in per_slice),
+            "rows": sum(s["rows"] for s in per_slice),
+            "bytes": sum(s["bytes"] for s in per_slice),
+            "replicas": self.replicas,
+            "per_shard": per_shard,
+        }
+
+    def _staged_put_replicated(self, cmd: StagedPutCommand, schema, received: list) -> dict:
+        """Head-funneled replicated stage: every slice stages on all of its
+        holders under a per-slice sub-txn; the mapping is remembered so the
+        writer's plain ``txn-commit {txn_id}`` finds the whole fan-out."""
+        lay = self._ensure_layout(cmd.dataset)
+        parts = self.placement.assign(received, lay.num_slices)
+        per_slice, per_shard, subs = [], [], []
+        for sl, part in zip(lay.slices, parts):
+            if not part:
+                continue
+            stxn = subtxn_id(cmd.txn_id, sl.index)
+            d = FlightDescriptor.for_command(StagedPutCommand(sl.key, stxn, "stage"))
+            for k, h in enumerate(sl.holders):
+                ack = self.shards[h].do_put_impl(d, schema, iter(part))
+                per_shard.append(ack)
+                subs.append((h, stxn))
+                if k == 0 and not ack.get("deduped"):
+                    per_slice.append(ack)
+        with self._dlock:
+            self._pending_txns[cmd.txn_id] = (cmd.dataset, subs)
+            while len(self._pending_txns) > 512:
+                self._pending_txns.popitem(last=False)
+        return {
+            "staged": True,
+            "txn_id": cmd.txn_id,
+            "batches": sum(s["batches"] for s in per_slice),
+            "rows": sum(s["rows"] for s in per_slice),
+            "bytes": sum(s["bytes"] for s in per_slice),
+            "replicas": self.replicas,
             "per_shard": per_shard,
         }
 
@@ -441,6 +912,9 @@ class FlightClusterServer(FlightServerBase):
         failure surfaces — nothing becomes visible.  Phase 2 commits every
         staged shard; each shard's flip is atomic under its store lock."""
         txn_id = o["txn_id"]
+        subs = self._resolve_subtxns(o)
+        if subs is not None:
+            return self._coordinate_commit_replicated(o, subs)
         body = json.dumps({"txn_id": txn_id}).encode()
         try:
             votes = [self._shard_txn_action(s, "txn-prepare", body)
@@ -487,7 +961,100 @@ class FlightClusterServer(FlightServerBase):
             "duplicate": all(a.get("duplicate") for a in acks),
         }
 
+    def _resolve_subtxns(self, o: dict) -> list[tuple[int, str]] | None:
+        """Find a logical txn's replicated (shard, sub-txn) fan-out.
+
+        The client-side replicated writer names its sub-txns in the commit
+        body; head-funneled writers committed with a bare ``{txn_id}`` are
+        resolved through the mapping remembered at stage time.  ``None``
+        means the classic unreplicated round."""
+        subs = o.get("subtxns")
+        if subs is None:
+            with self._dlock:
+                pend = self._pending_txns.get(o["txn_id"])
+            if pend is None:
+                return None
+            if not o.get("dataset"):
+                o["dataset"] = pend[0]
+            subs = pend[1]
+        seen, out = set(), []
+        for h, stxn in subs:
+            if (int(h), stxn) not in seen:
+                seen.add((int(h), stxn))
+                out.append((int(h), stxn))
+        return out
+
+    def _coordinate_commit_replicated(self, o: dict, subs: list[tuple[int, str]]) -> dict:
+        """Prepare→commit across every (holder, sub-txn) of a replicated
+        write — same all-or-none outcome as the classic round, with the
+        expectation implicit: *every* listed sub-txn must vote staged, so a
+        crashed writer's partial replica fan-out can never half-commit."""
+        txn_id = o["txn_id"]
+
+        def act(h: int, verb: str, stxn: str) -> dict:
+            return self._shard_txn_action(
+                self.shards[h], verb, json.dumps({"txn_id": stxn}).encode())
+
+        try:
+            votes = [(h, stxn, act(h, "txn-prepare", stxn)) for h, stxn in subs]
+        except FlightError:
+            self._abort_subtxns(txn_id, subs)
+            raise
+        bad = sorted({h for h, _, v in votes if not v.get("staged")})
+        if bad:
+            self._abort_subtxns(txn_id, subs)
+            raise FlightUnavailable(
+                f"txn {txn_id!r} aborted: missing/expired stage on shard(s) {bad}",
+                detail={"txn_id": txn_id, "missing_shards": bad})
+        acks = [act(h, "txn-commit", stxn) for h, stxn in subs]
+        dataset = o.get("dataset")
+        key0 = acks[0].get("dataset")
+        if dataset is None and key0:
+            parsed = parse_slice_key(key0)
+            dataset = parsed[0] if parsed else key0
+        if dataset is not None and key0:
+            with self._dlock:
+                if dataset not in self._datasets:
+                    self._datasets[dataset] = self.shards[subs[0][0]].storage.schema(key0)
+        # logical payload counted once per slice, not once per replica copy
+        counted, batches, rows, nbytes = set(), 0, 0, 0
+        for (h, stxn), a in zip(subs, acks):
+            if stxn in counted:
+                continue
+            counted.add(stxn)
+            batches += a.get("batches", 0)
+            rows += a.get("rows", 0)
+            nbytes += a.get("bytes", 0)
+        return {
+            "txn_id": txn_id,
+            "committed": True,
+            "dataset": dataset,
+            "shards": sorted({h for h, _ in subs}),
+            "subtxns": len(counted),
+            "batches": batches,
+            "rows": rows,
+            "bytes": nbytes,
+            "duplicate": all(a.get("duplicate") for a in acks),
+        }
+
+    def _abort_subtxns(self, txn_id: str, subs: list[tuple[int, str]]) -> dict:
+        aborted = []
+        for h, stxn in subs:
+            try:
+                ack = self._shard_txn_action(
+                    self.shards[h], "txn-abort",
+                    json.dumps({"txn_id": stxn}).encode())
+                if ack.get("aborted"):
+                    aborted.append(h)
+            except FlightError:
+                continue  # best-effort: the shard's TTL reaper finishes it
+        return {"txn_id": txn_id, "aborted": bool(aborted),
+                "shards": sorted(set(aborted))}
+
     def _coordinate_abort(self, o: dict) -> dict:
+        subs = self._resolve_subtxns(o)
+        if subs is not None:
+            return self._abort_subtxns(o["txn_id"], subs)
         body = json.dumps({"txn_id": o["txn_id"]}).encode()
         aborted = []
         for i, s in enumerate(self.shards):
@@ -501,6 +1068,17 @@ class FlightClusterServer(FlightServerBase):
     def do_action_impl(self, action: Action) -> list[ActionResult]:
         if action.type == "health":
             return [ActionResult(b"ok")]
+        if action.type == "heartbeat":
+            # push path: an external shard agent announces liveness (the
+            # prober is the pull path; both feed the same registry)
+            o = json.loads(action.body) if action.body else {}
+            sid = o.get("shard")
+            if sid is not None:
+                self.membership.heartbeat(int(sid))
+            return [ActionResult(json.dumps(
+                {"ok": True, "epoch": self.membership.epoch}).encode())]
+        if action.type == "membership":
+            return [ActionResult(json.dumps(self.membership.view().to_json()).encode())]
         if action.type == "txn-commit":
             out = self._coordinate_commit(parse_txn_body(action.body))
             return [ActionResult(json.dumps(out).encode())]
@@ -512,19 +1090,36 @@ class FlightClusterServer(FlightServerBase):
                 return [ActionResult(",".join(self._datasets).encode())]
         if action.type == "drop":
             name = action.body.decode()
-            for s in self.shards:
-                s.do_action_impl(action)
             with self._dlock:
+                lay = self._layouts.pop(name, None)
                 self._datasets.pop(name, None)
+            if lay is not None:
+                self._drop_layout_keys(lay)
+            else:
+                for s in self.shards:
+                    try:
+                        s.do_action_impl(action)
+                    except FlightError:
+                        continue  # a dead shard's copy died with it
             return [ActionResult(b"dropped")]
         if action.type == "stats":
+            shard_stats = []
+            for s in self.shards:
+                try:
+                    shard_stats.append(
+                        json.loads(s.do_action_impl(Action("stats"))[0].body))
+                except Exception as e:
+                    shard_stats.append({"error": f"{type(e).__name__}: {e}"})
+            with self._dlock:
+                layouts = {n: lay.to_json() for n, lay in self._layouts.items()}
             out = {
                 "num_shards": self.num_shards,
                 "scheme": self.placement.scheme,
-                "shards": [
-                    json.loads(s.do_action_impl(Action("stats"))[0].body)
-                    for s in self.shards
-                ],
+                "replicas": self.replicas,
+                "membership": self.membership.view().to_json(),
+                "rebalances": self.rebalances,
+                "layouts": layouts,
+                "shards": shard_stats,
             }
             return [ActionResult(json.dumps(out).encode())]
         if action.type == "register-dataset":
@@ -536,12 +1131,42 @@ class FlightClusterServer(FlightServerBase):
             return [ActionResult(b"registered")]
         if action.type == "shard-locations":
             spec = self.placement.spec(self.num_shards)
+            view = self.membership.view()
+            states = {sid: state for sid, state, _ in view.shards}
             out = {
                 **spec.to_json(),
+                "replicas": self.replicas,
+                "epoch": view.epoch,
+                "alive": view.alive(),
                 "shards": [
-                    {"shard": i, "locations": [l.uri for l in s.locations()]}
+                    {"shard": i, "locations": [l.uri for l in s.locations()],
+                     "state": states.get(i, ShardState.HEALTHY.value)}
                     for i, s in enumerate(self.shards)
                 ],
+            }
+            return [ActionResult(json.dumps(out).encode())]
+        if action.type == "write-plan":
+            # a replicated client-side writer asks where each slice's
+            # replicas live (and under which keys) before fanning out
+            o = json.loads(action.body)
+            if self.replicas == 1:
+                raise FlightInvalidArgument(
+                    "write-plan applies to replicated clusters; use "
+                    "shard-locations for positional writes")
+            lay = self._ensure_layout(o["name"])
+            holders = sorted({h for sl in lay.slices for h in sl.holders})
+            out = {
+                "name": lay.name,
+                "gen": lay.gen,
+                "scheme": self.placement.scheme,
+                "key": getattr(self.placement, "key", None),
+                "replicas": self.replicas,
+                "epoch": self.membership.epoch,
+                "slices": [sl.to_json() for sl in lay.slices],
+                "locations": {
+                    str(h): [l.uri for l in self.shards[h].locations()]
+                    for h in holders
+                },
             }
             return [ActionResult(json.dumps(out).encode())]
         raise FlightError(f"unknown action {action.type!r}")
@@ -731,6 +1356,8 @@ class FlightClusterClient:
         dedup-guarded shards: they dedup re-staged streams by content hash
         within the txn."""
         layout = json.loads(self.head.do_action(Action("shard-locations"))[0].body)
+        if layout.get("replicas", 1) > 1:
+            return self._write_replicated(name, batches, transactional, txn_id)
         if placement is None:
             placement = make_placement(layout["scheme"], layout.get("key"))
         parts = placement.assign(batches, layout["num_shards"])
@@ -756,6 +1383,58 @@ class FlightClusterClient:
         commit_body = json.dumps(
             {"txn_id": txn_id, "dataset": name, "expect_shards": shard_ids}
         ).encode()
+        return run_staged_put(self.scheduler(), self.head.do_action,
+                              name, schema, assignments, txn_id, commit_body)
+
+    def _write_replicated(
+        self,
+        name: str,
+        batches: list[RecordBatch],
+        transactional: bool,
+        txn_id: str | None,
+    ) -> TransferStats:
+        """Client-side parallel write against a replicated cluster.
+
+        ``write-plan`` at the head pins the slice → holders layout; each
+        slice's payload then DoPuts straight to *every* holder under the
+        slice's own storage key (the 3-tuple ``scheduler.put`` form — one
+        descriptor per stream).  Transactionally, each slice stages under a
+        per-slice sub-txn and the commit body names the whole (holder,
+        sub-txn) fan-out, so the head's coordinator commits all replicas of
+        all slices as one all-or-none round."""
+        plan = json.loads(self.head.do_action(
+            Action("write-plan", json.dumps({"name": name}).encode()))[0].body)
+        placement = make_placement(plan["scheme"], plan.get("key"))
+        parts = placement.assign(batches, len(plan["slices"]))
+        schema = batches[0].schema
+        locs = {int(h): uris for h, uris in plan["locations"].items()}
+        if not transactional:
+            assignments = [
+                (self._pick_location(locs[h]), part,
+                 FlightDescriptor.for_path(sl["key"]))
+                for sl, part in zip(plan["slices"], parts) if part
+                for h in sl["holders"]
+            ]
+            stats = self.scheduler().put(None, schema, assignments)
+            self.head.do_action(
+                Action("register-dataset",
+                       json.dumps({"name": name, "schema": schema.to_json()}).encode())
+            )
+            return stats
+        txn_id = txn_id or uuid.uuid4().hex
+        assignments, subs = [], []
+        for sl, part in zip(plan["slices"], parts):
+            if not part:
+                continue
+            stxn = subtxn_id(txn_id, sl["index"])
+            d = FlightDescriptor.for_command(StagedPutCommand(sl["key"], stxn, "stage"))
+            for h in sl["holders"]:
+                assignments.append((self._pick_location(locs[h]), part, d))
+                subs.append([h, stxn])
+        if not assignments:
+            return TransferStats(streams=0)
+        commit_body = json.dumps(
+            {"txn_id": txn_id, "dataset": name, "subtxns": subs}).encode()
         return run_staged_put(self.scheduler(), self.head.do_action,
                               name, schema, assignments, txn_id, commit_body)
 

@@ -455,10 +455,24 @@ class EventLoopListener:
     def open_connections(self) -> int:
         return len(self._conns)
 
+    def drop_connections(self) -> int:
+        """Sever every live connection (fault injection / admin drain).
+
+        Runs on the loop thread — selector mutation mid-``select`` is not
+        thread-safe — so this only *posts* the drop; returns the number of
+        connections that were live when asked."""
+        n = len(self._conns)
+        self._post("dropconns", None)
+        return n
+
     def stats(self) -> dict:
         return {
             "io_mode": "eventloop",
             "open_connections": len(self._conns),
+            # every fd this listener owns: conns + listening socket + the
+            # wakeup socketpair — the c10k headroom number an operator wants
+            "open_fds": len(self._conns) + 3,
+            "worker_queue_depth": len(self._runnable),
             "workers": self._workers,
             "accepted": self.connections_accepted,
             "loop_wakeups": self.loop_wakeups,
@@ -697,6 +711,11 @@ class EventLoopListener:
                 return
             if op == "stop":
                 self._stopping = True
+            elif op == "dropconns":
+                # fault injection: sever every live connection (listener
+                # stays up, so clients see a reset — not a refused dial)
+                for c in list(self._conns.values()):
+                    self._close_channel(c)
             elif ch is None or ch._fd_closed:
                 continue
             elif op == "close":

@@ -1,0 +1,156 @@
+"""Fault injection for Flight servers: kill, hang, slow, sever connections.
+
+The harness the failure-handling claims are tested and benchmarked under.
+Faults are injected by shadowing a live server's verb implementations in
+its *instance* dict — the public surface (``FlightClient`` in-proc calls,
+the TCP RPC dispatcher, the cluster head's direct ``*_impl`` calls, the
+membership prober's ``health`` action) all route through the same methods,
+so one patch point makes every access path observe the fault, without a
+special "test mode" inside the server.
+
+Shadowing the instance dict also disables the server's encode-cache and
+inline-dispatch fast paths for the faulted instance (both are gated on
+``*_impl`` being un-overridden) — exactly right: a faulted server must not
+serve cached bytes around its own fault.
+
+Modes per shard:
+
+* ``kill`` — every verb raises ``FlightUnavailable`` and live connections
+  are severed; indistinguishable from a crashed process to clients, probers
+  and coordinators alike.
+* ``hang`` — data verbs block (up to ``seconds``, or until ``revive``)
+  before failing; actions fail fast so a prober detects the hang on its
+  next tick instead of hanging with it.
+* ``slow`` — DoGet streams pace ``delay`` seconds per batch; everything
+  else works.  The replica a hedged read should beat.
+* ``revive`` — restore the original verbs (and mark the recovery time, so
+  tests and benchmarks can measure detect→recover latency).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from .protocol import FlightUnavailable
+
+# the verb surface a fault shadows; locations()/shutdown() stay real —
+# a dead process's endpoint address does not change, it just stops answering
+_VERBS = (
+    "do_get_impl",
+    "do_put_impl",
+    "do_exchange_impl",
+    "get_flight_info_impl",
+    "list_flights_impl",
+    "do_action_impl",
+)
+_DATA_VERBS = frozenset(_VERBS) - {"do_action_impl"}
+_MISSING = object()  # sentinel: verb was not instance-shadowed pre-fault
+
+
+class FaultInjector:
+    """Inject faults into the shards of a cluster (or any server list).
+
+    ``target`` is a ``FlightClusterServer`` (its ``shards`` are used) or a
+    plain list of servers.  All injections are reversible via ``revive``.
+    """
+
+    def __init__(self, target):
+        self.servers = list(getattr(target, "shards", target))
+        self._saved: dict[int, dict[str, object]] = {}
+        self._revive: dict[int, threading.Event] = {}
+        self.mode: dict[int, str] = {}
+        self.killed_at: dict[int, float] = {}
+        self.revived_at: dict[int, float] = {}
+
+    # -- plumbing ---------------------------------------------------------- #
+    def _server(self, sid: int):
+        return self.servers[sid]
+
+    def _install(self, sid: int, mode: str, impls: dict[str, object]) -> None:
+        s = self._server(sid)
+        if sid not in self._saved:
+            # save the *instance* dict state (usually empty), not the bound
+            # methods — revive must restore exactly what was there before
+            self._saved[sid] = {v: s.__dict__.get(v, _MISSING) for v in _VERBS}
+        for verb, fn in impls.items():
+            setattr(s, verb, fn)
+        self.mode[sid] = mode
+
+    def _fail(self, sid: int, verb: str):
+        def impl(*a, **k):
+            raise FlightUnavailable(
+                f"shard {sid} is down (injected fault)",
+                detail={"shard": sid, "verb": verb, "fault": self.mode.get(sid)})
+        return impl
+
+    # -- faults ------------------------------------------------------------ #
+    def kill(self, sid: int) -> None:
+        """Hard crash: every verb fails, live connections drop."""
+        self._install(sid, "kill", {v: self._fail(sid, v) for v in _VERBS})
+        self.killed_at[sid] = time.perf_counter()
+        self.drop_connections(sid)
+
+    def hang(self, sid: int, seconds: float = 30.0) -> None:
+        """Data verbs stall (a wedged process), actions fail fast.
+
+        The stall ends early when ``revive`` fires — a revived shard's
+        stalled requests fail over cleanly rather than completing late."""
+        ev = self._revive.setdefault(sid, threading.Event())
+        ev.clear()
+
+        def hanging(verb: str):
+            def impl(*a, **k):
+                ev.wait(seconds)
+                raise FlightUnavailable(
+                    f"shard {sid} is hung (injected fault)",
+                    detail={"shard": sid, "verb": verb, "fault": "hang"})
+            return impl
+
+        impls: dict[str, object] = {v: hanging(v) for v in _DATA_VERBS}
+        impls["do_action_impl"] = self._fail(sid, "do_action_impl")
+        self._install(sid, "hang", impls)
+        self.killed_at[sid] = time.perf_counter()
+
+    def slow(self, sid: int, delay: float = 0.01) -> None:
+        """Pace DoGet: ``delay`` seconds before each batch."""
+        s = self._server(sid)
+        real_get = s.do_get_impl  # bound original (pre-fault)
+
+        def paced(ticket):
+            schema, batches = real_get(ticket)
+
+            def gen():
+                for b in batches:
+                    time.sleep(delay)
+                    yield b
+
+            return schema, gen()
+
+        self._install(sid, "slow", {"do_get_impl": paced})
+
+    def drop_connections(self, sid: int) -> int:
+        """Sever the shard's live TCP connections (listener stays bound)."""
+        listener = getattr(self._server(sid), "_listener", None)
+        drop = getattr(listener, "drop_connections", None)
+        return drop() if drop is not None else 0
+
+    def revive(self, sid: int) -> None:
+        """Undo whatever fault is active on ``sid``."""
+        saved = self._saved.pop(sid, None)
+        if saved is None:
+            return
+        s = self._server(sid)
+        for verb, orig in saved.items():
+            if orig is _MISSING:
+                s.__dict__.pop(verb, None)
+            else:
+                s.__dict__[verb] = orig
+        ev = self._revive.get(sid)
+        if ev is not None:
+            ev.set()
+        self.mode.pop(sid, None)
+        self.revived_at[sid] = time.perf_counter()
+
+    def revive_all(self) -> None:
+        for sid in list(self._saved):
+            self.revive(sid)

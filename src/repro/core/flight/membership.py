@@ -1,0 +1,275 @@
+"""Cluster membership: heartbeat registry, failure detection, epoch views.
+
+The head node's authoritative picture of which shard endpoints are alive —
+the precondition for everything the paper's parallel-stream topology (§3,
+Fig 2) assumes for free.  The detector is the timeout-plus-grace design of
+``repro.distributed.fault.FailureDetector`` (phi-accrual-lite) re-grounded
+in shard ids and Flight locations, with one addition the data plane needs:
+an **epoch-versioned cluster view**.
+
+* ``ClusterMembership`` — per-shard state machine HEALTHY → SUSPECT → DEAD
+  driven by ``heartbeat()`` / ``sweep()``.  Every *view change* (a shard
+  joins, leaves, dies, or revives — anything that alters which shards a
+  planner may route to) bumps a monotonically increasing **epoch**.  Plans
+  (``FlightInfo``) are stamped with the epoch they were computed under, so
+  a client holding endpoints from epoch E can detect that the world has
+  moved on and re-plan instead of burning failover attempts on tombstones.
+  SUSPECT transitions do *not* bump the epoch: a suspect shard is still
+  routable (it gets demoted in replica orderings), so no plan is invalid.
+* ``MembershipProber`` — the head's active prober: calls each registered
+  shard's ``health`` probe on an interval, feeding successes to
+  ``heartbeat()`` and then ``sweep()``-ing.  Shards may also push
+  heartbeats through the head's ``heartbeat`` action; both paths meet in
+  the same registry.
+
+The registry never forgets a dead shard (its id stays tombstoned) — shard
+ids index into the cluster's shard table, and resurrecting an id with
+different data would violate every outstanding ticket.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Iterable
+
+
+class ShardState(str, Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"    # missed heartbeats, still routable (last resort)
+    DEAD = "dead"          # failure detector gave up, or explicitly killed
+    REMOVED = "removed"    # gracefully drained + deregistered
+
+
+@dataclass
+class ShardEntry:
+    shard_id: int
+    locations: tuple[str, ...] = ()
+    state: ShardState = ShardState.HEALTHY
+    last_heartbeat: float = field(default_factory=time.monotonic)
+    joined_epoch: int = 0
+    heartbeats: int = 0
+
+
+@dataclass(frozen=True)
+class ClusterView:
+    """An immutable snapshot of membership at one epoch."""
+
+    epoch: int
+    shards: tuple[tuple[int, str, tuple[str, ...]], ...]  # (id, state, locations)
+
+    def alive(self) -> list[int]:
+        return [sid for sid, state, _ in self.shards
+                if state in (ShardState.HEALTHY.value, ShardState.SUSPECT.value)]
+
+    def to_json(self) -> dict:
+        return {
+            "epoch": self.epoch,
+            "shards": [
+                {"shard": sid, "state": state, "locations": list(locs)}
+                for sid, state, locs in self.shards
+            ],
+        }
+
+
+class ClusterMembership:
+    """Heartbeat registry + failure detector with an epoch-versioned view.
+
+    ``suspect_after`` / ``dead_after`` are seconds without a heartbeat
+    before a HEALTHY shard turns SUSPECT / a shard is declared DEAD —
+    the same two-threshold ladder as the training-plane detector this
+    adapts (``distributed/fault.py``), just on a data-plane timescale.
+    """
+
+    def __init__(self, suspect_after: float = 1.0, dead_after: float = 3.0):
+        if dead_after <= suspect_after:
+            raise ValueError("dead_after must exceed suspect_after")
+        self.suspect_after = suspect_after
+        self.dead_after = dead_after
+        self._shards: dict[int, ShardEntry] = {}
+        self._epoch = 0
+        self._lock = threading.Lock()
+
+    # -- epoch ------------------------------------------------------------- #
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def bump(self) -> int:
+        """Advance the epoch for an external view change (layout cutover)."""
+        with self._lock:
+            self._epoch += 1
+            return self._epoch
+
+    # -- registry ---------------------------------------------------------- #
+    def register(self, shard_id: int, locations: Iterable[str] = ()) -> int:
+        """Add (or re-announce) a shard; joining is a view change."""
+        with self._lock:
+            e = self._shards.get(shard_id)
+            if e is not None and e.state not in (ShardState.DEAD, ShardState.REMOVED):
+                e.locations = tuple(locations) or e.locations
+                return self._epoch
+            self._epoch += 1
+            self._shards[shard_id] = ShardEntry(
+                shard_id, tuple(locations), joined_epoch=self._epoch)
+            return self._epoch
+
+    def deregister(self, shard_id: int) -> int:
+        """Graceful removal (drained by a rebalance): a view change."""
+        with self._lock:
+            e = self._shards.get(shard_id)
+            if e is None or e.state == ShardState.REMOVED:
+                return self._epoch
+            e.state = ShardState.REMOVED
+            self._epoch += 1
+            return self._epoch
+
+    def update_locations(self, shard_id: int, locations: Iterable[str]) -> None:
+        with self._lock:
+            if shard_id in self._shards:
+                self._shards[shard_id].locations = tuple(locations)
+
+    # -- liveness ---------------------------------------------------------- #
+    def heartbeat(self, shard_id: int, now: float | None = None) -> None:
+        """Record proof of life.  Reviving a DEAD shard is a view change
+        (plans may route to it again); REMOVED shards stay removed — a
+        drained shard no longer holds data, so late heartbeats are noise."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            e = self._shards.get(shard_id)
+            if e is None or e.state == ShardState.REMOVED:
+                return
+            e.last_heartbeat = now
+            e.heartbeats += 1
+            if e.state == ShardState.DEAD:
+                e.state = ShardState.HEALTHY
+                self._epoch += 1
+            elif e.state == ShardState.SUSPECT:
+                e.state = ShardState.HEALTHY
+
+    def sweep(self, now: float | None = None) -> list[int]:
+        """Advance the state ladder; returns newly-DEAD shard ids.  Each
+        death bumps the epoch once — a plan from before the death must be
+        recognizably stale."""
+        now = time.monotonic() if now is None else now
+        newly_dead: list[int] = []
+        with self._lock:
+            for e in self._shards.values():
+                if e.state in (ShardState.DEAD, ShardState.REMOVED):
+                    continue
+                dt = now - e.last_heartbeat
+                if dt > self.dead_after:
+                    e.state = ShardState.DEAD
+                    self._epoch += 1
+                    newly_dead.append(e.shard_id)
+                elif dt > self.suspect_after and e.state == ShardState.HEALTHY:
+                    e.state = ShardState.SUSPECT
+        return newly_dead
+
+    def mark_dead(self, shard_id: int) -> int:
+        """Out-of-band death report (connection refused, fault injection)."""
+        with self._lock:
+            e = self._shards.get(shard_id)
+            if e is None or e.state in (ShardState.DEAD, ShardState.REMOVED):
+                return self._epoch
+            e.state = ShardState.DEAD
+            self._epoch += 1
+            return self._epoch
+
+    # -- queries ------------------------------------------------------------ #
+    def state(self, shard_id: int) -> ShardState | None:
+        with self._lock:
+            e = self._shards.get(shard_id)
+            return e.state if e is not None else None
+
+    def is_routable(self, shard_id: int) -> bool:
+        return self.state(shard_id) in (ShardState.HEALTHY, ShardState.SUSPECT)
+
+    def alive(self) -> list[int]:
+        """Routable shard ids in id order (SUSPECT included: still serving)."""
+        with self._lock:
+            return sorted(
+                e.shard_id for e in self._shards.values()
+                if e.state in (ShardState.HEALTHY, ShardState.SUSPECT))
+
+    def healthy(self) -> list[int]:
+        with self._lock:
+            return sorted(e.shard_id for e in self._shards.values()
+                          if e.state == ShardState.HEALTHY)
+
+    def view(self) -> ClusterView:
+        with self._lock:
+            return ClusterView(
+                self._epoch,
+                tuple(sorted(
+                    (e.shard_id, e.state.value, e.locations)
+                    for e in self._shards.values())),
+            )
+
+
+class MembershipProber:
+    """Active health prober: drives ``ClusterMembership`` from a probe
+    callable.  ``probe(shard_id) -> bool`` returns liveness (exceptions
+    count as failures); on each tick every non-removed shard is probed and
+    the registry swept.  ``on_dead`` (optional) fires once per newly-dead
+    shard — the cluster hooks repair/rebalance here."""
+
+    def __init__(
+        self,
+        membership: ClusterMembership,
+        probe: Callable[[int], bool],
+        interval: float = 0.25,
+        on_dead: Callable[[list[int]], None] | None = None,
+    ):
+        self.membership = membership
+        self.probe = probe
+        self.interval = interval
+        self.on_dead = on_dead
+        self.probes = 0
+        self.probe_failures = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def tick(self) -> list[int]:
+        """One probe round + sweep (also the manual-clock test hook)."""
+        view = self.membership.view()
+        for sid, state, _ in view.shards:
+            if state == ShardState.REMOVED.value:
+                continue
+            self.probes += 1
+            try:
+                ok = bool(self.probe(sid))
+            except Exception:
+                ok = False
+            if ok:
+                self.membership.heartbeat(sid)
+            else:
+                self.probe_failures += 1
+        newly_dead = self.membership.sweep()
+        if newly_dead and self.on_dead is not None:
+            try:
+                self.on_dead(newly_dead)
+            except Exception:
+                pass  # repair hooks must not kill the prober
+        return newly_dead
+
+    def start(self) -> "MembershipProber":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.wait(self.interval):
+                self.tick()
+
+        self._thread = threading.Thread(
+            target=loop, daemon=True, name="flight-membership-prober")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout=2.0)

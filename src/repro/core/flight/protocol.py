@@ -490,13 +490,18 @@ class ShardSpec:
     scheme: str  # "round_robin" | "hash"
     num_shards: int
     key: str | None = None  # partition column for scheme == "hash"
+    replicas: int = 1  # copies of each partition (1 = unreplicated)
 
     def to_json(self) -> dict:
-        return {"scheme": self.scheme, "num_shards": self.num_shards, "key": self.key}
+        o = {"scheme": self.scheme, "num_shards": self.num_shards, "key": self.key}
+        if self.replicas != 1:
+            o["replicas"] = self.replicas
+        return o
 
     @classmethod
     def from_json(cls, o: dict) -> "ShardSpec":
-        return cls(o["scheme"], o["num_shards"], o.get("key"))
+        return cls(o["scheme"], o["num_shards"], o.get("key"),
+                   o.get("replicas", 1))
 
 
 @dataclass
@@ -507,6 +512,10 @@ class FlightInfo:
     total_records: int = -1
     total_bytes: int = -1
     shard_spec: ShardSpec | None = None  # present when served by a cluster
+    # cluster-view epoch this info was planned under: a client can detect a
+    # stale plan (post-rebalance, post-death) by comparing against the
+    # head's current `membership` view and re-plan instead of failing over
+    epoch: int | None = None
 
     def to_json(self) -> dict:
         o = {
@@ -518,6 +527,8 @@ class FlightInfo:
         }
         if self.shard_spec is not None:
             o["shard_spec"] = self.shard_spec.to_json()
+        if self.epoch is not None:
+            o["epoch"] = self.epoch
         return o
 
     @classmethod
@@ -529,6 +540,7 @@ class FlightInfo:
             o["total_records"],
             o["total_bytes"],
             ShardSpec.from_json(o["shard_spec"]) if o.get("shard_spec") else None,
+            o.get("epoch"),
         )
 
 

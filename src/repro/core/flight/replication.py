@@ -1,0 +1,251 @@
+"""Replicated placement: each partition on R shards, Arrow-plane rebalance.
+
+The unit of replication is the **slice** — one placement bucket of a
+dataset, stored verbatim (same batches, same order) on ``R`` holder
+shards.  A slice's storage key embeds the dataset name, the layout
+generation, and the slice index::
+
+    users@@g3s1      slice 1 of "users", layout generation 3
+
+which buys three properties at once:
+
+* **Tickets transfer between replicas.**  Every holder serves the slice
+  under the same key with identical batch boundaries, so a plain range
+  ticket (``RangeReadCommand(key, 0, n)``) redeemed on *any* holder yields
+  byte-identical frames — the scheduler's existing mid-stream failover
+  (resume-skip) and hedged reads work against replicas with **zero
+  scheduler changes**; the head only has to list every holder's Location
+  on the endpoint.
+* **Rebalancing is transactional.**  A new layout generation stages under
+  fresh keys (``@@g4s*``) while generation 3 keeps serving; the cutover is
+  one layout-pointer swap after the staged 2PC commits, and the epoch bump
+  tells clients their old plan is stale.  Old and new generations never
+  collide in the store.
+* **Recovery is listing.**  Slice keys parse back to (dataset, gen,
+  slice), so a restarted head rebuilds every layout — including which
+  shard holds which replica — from the shards' own catalogs.
+
+``ReplicatedPlacement`` wraps a base placement (round-robin or hash) and
+adds the replica fan-out: slice ``j`` lands on holders ``targets[j],
+targets[j+1], ... targets[j+R-1]`` (mod the target count) — the classic
+chained-rotation layout, so losing any single shard leaves every slice
+with R-1 live holders and the load of the dead shard spreads evenly.
+
+``move_slice`` is the rebalance data path: source batches stream through
+the *destination shard's* ``repartition`` exchange service (re-chunking to
+a uniform batch size in flight), then stage as a transactional put — the
+move happens on the Arrow plane with the same verbs any client uses, not
+through a private side channel.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, replace as dc_replace
+
+from ..recordbatch import RecordBatch
+from .protocol import (
+    ExchangeCommand,
+    FlightDescriptor,
+    FlightInvalidArgument,
+    ShardSpec,
+    StagedPutCommand,
+)
+
+SLICE_SEP = "@@"
+_KEY_RE = re.compile(r"^(?P<name>.+)@@g(?P<gen>\d+)s(?P<idx>\d+)$", re.DOTALL)
+
+
+def slice_key(name: str, gen: int, index: int) -> str:
+    """Storage key for slice ``index`` of ``name`` at layout ``gen``."""
+    if SLICE_SEP in name:
+        raise FlightInvalidArgument(
+            f"dataset name {name!r} may not contain {SLICE_SEP!r} "
+            f"(reserved for replica slice keys)")
+    return f"{name}{SLICE_SEP}g{gen}s{index}"
+
+
+def parse_slice_key(key: str) -> tuple[str, int, int] | None:
+    """Inverse of ``slice_key``; None for plain (unreplicated) names."""
+    m = _KEY_RE.match(key)
+    if m is None:
+        return None
+    return m.group("name"), int(m.group("gen")), int(m.group("idx"))
+
+
+def subtxn_id(txn_id: str, index: int) -> str:
+    """Per-slice transaction id under one logical txn.
+
+    Each slice stages on its holders as an independent server-level txn
+    (a server txn binds to exactly one dataset); the head's coordinator
+    prepares and commits *all* of a logical txn's sub-txns as one round,
+    so atomicity is preserved across the fan-out."""
+    return f"{txn_id}/s{index}"
+
+
+@dataclass(frozen=True)
+class SliceInfo:
+    """One placement bucket: where its replicas live."""
+
+    index: int
+    key: str
+    holders: tuple[int, ...]  # shard ids, primary first
+
+    def to_json(self) -> dict:
+        return {"index": self.index, "key": self.key, "holders": list(self.holders)}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "SliceInfo":
+        return cls(o["index"], o["key"], tuple(o["holders"]))
+
+
+@dataclass(frozen=True)
+class DatasetLayout:
+    """A dataset's slice → holders map at one layout generation."""
+
+    name: str
+    gen: int
+    slices: tuple[SliceInfo, ...]
+
+    @property
+    def num_slices(self) -> int:
+        return len(self.slices)
+
+    def holders_of(self, index: int) -> tuple[int, ...]:
+        return self.slices[index].holders
+
+    def keys(self) -> list[str]:
+        return [s.key for s in self.slices]
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "gen": self.gen,
+                "slices": [s.to_json() for s in self.slices]}
+
+    @classmethod
+    def from_json(cls, o: dict) -> "DatasetLayout":
+        return cls(o["name"], o["gen"],
+                   tuple(SliceInfo.from_json(s) for s in o["slices"]))
+
+
+def plan_layout(name: str, gen: int, targets: list[int], replicas: int) -> DatasetLayout:
+    """Chained-rotation layout: slice ``j`` on ``targets[j..j+R-1]`` (mod)."""
+    if not targets:
+        raise FlightInvalidArgument("cannot plan a layout over zero shards")
+    r = min(replicas, len(targets))
+    slices = tuple(
+        SliceInfo(
+            j,
+            slice_key(name, gen, j),
+            tuple(targets[(j + k) % len(targets)] for k in range(r)),
+        )
+        for j in range(len(targets))
+    )
+    return DatasetLayout(name, gen, slices)
+
+
+def recover_layouts(listings: dict[int, list[str]]) -> dict[str, DatasetLayout]:
+    """Rebuild layouts from per-shard catalog listings (restart recovery).
+
+    For each dataset the highest generation with at least one holder per
+    present slice wins; stale generations are ignored (the cutover that
+    superseded them also scheduled their deletion, which may not have
+    finished before the crash)."""
+    # (name, gen) -> {index -> [holder ids]}
+    gens: dict[tuple[str, int], dict[int, list[int]]] = {}
+    for sid, keys in listings.items():
+        for key in keys:
+            parsed = parse_slice_key(key)
+            if parsed is None:
+                continue
+            name, gen, idx = parsed
+            gens.setdefault((name, gen), {}).setdefault(idx, []).append(sid)
+    out: dict[str, DatasetLayout] = {}
+    for (name, gen), slices in sorted(gens.items()):
+        if name in out and out[name].gen >= gen:
+            continue
+        indices = sorted(slices)
+        if indices != list(range(len(indices))):
+            continue  # holes: an interrupted stage, not a committed layout
+        out[name] = DatasetLayout(name, gen, tuple(
+            SliceInfo(i, slice_key(name, gen, i), tuple(sorted(slices[i])))
+            for i in indices))
+    return out
+
+
+class ReplicatedPlacement:
+    """A base placement (round-robin / hash) plus an R-way replica fan-out.
+
+    ``assign`` delegates to the base policy — replication changes *where
+    copies go*, never *which rows form a slice* — and ``holders`` adds the
+    rotation.  Exposes the base's ``scheme``/``key`` so control-plane
+    consumers (``shard-locations``, client-side writers) keep working."""
+
+    def __init__(self, base, replicas: int):
+        if replicas < 1:
+            raise FlightInvalidArgument("replicas must be >= 1")
+        self.base = base
+        self.replicas = replicas
+
+    @property
+    def scheme(self) -> str:
+        return self.base.scheme
+
+    def __getattr__(self, name: str):
+        return getattr(self.base, name)  # e.g. HashPlacement.key / row_shards
+
+    def assign(self, batches: list[RecordBatch], num_slices: int) -> list[list[RecordBatch]]:
+        return self.base.assign(batches, num_slices)
+
+    def holders(self, index: int, targets: list[int]) -> tuple[int, ...]:
+        r = min(self.replicas, len(targets))
+        return tuple(targets[(index + k) % len(targets)] for k in range(r))
+
+    def spec(self, num_shards: int) -> ShardSpec:
+        return dc_replace(self.base.spec(num_shards), replicas=self.replicas)
+
+
+# --------------------------------------------------------------------------
+# rebalance data path
+# --------------------------------------------------------------------------
+
+
+def repartition_rows(batches: list[RecordBatch]) -> int:
+    """Uniform batch size for a moved slice: the source's largest batch."""
+    return max((b.num_rows for b in batches), default=1) or 1
+
+
+def move_slice(
+    dest_client,
+    key: str,
+    txn_id: str,
+    schema,
+    batches: list[RecordBatch],
+    rows: int | None = None,
+) -> list[RecordBatch]:
+    """Stream one slice to a destination shard on the Arrow plane.
+
+    The batches flow through the destination's ``repartition`` exchange
+    service (re-chunked to ``rows`` per batch in flight) and the transformed
+    stream stages there under ``txn_id`` — invisible until the coordinator's
+    commit round.  Returns the re-chunked batches so the caller can stage
+    the *identical* payload on the slice's other holders (replicas must be
+    byte-identical for tickets to transfer)."""
+    if not batches:
+        return []
+    rows = rows or repartition_rows(batches)
+    stream = dest_client.do_exchange_stream(
+        FlightDescriptor.for_command(
+            ExchangeCommand.for_service("repartition", rows=rows)),
+        schema)
+    stream.feed(batches)
+    moved = list(stream)
+    stage_slice(dest_client, key, txn_id, schema, moved)
+    return moved
+
+
+def stage_slice(client, key: str, txn_id: str, schema, batches: list[RecordBatch]) -> None:
+    """Stage a slice payload on one holder (DoPut, stage leg only)."""
+    w = client.do_put(
+        FlightDescriptor.for_command(StagedPutCommand(key, txn_id, "stage")),
+        schema)
+    w.write_batches(list(batches))
+    w.close()

@@ -352,9 +352,9 @@ class ParallelStreamScheduler:
     # -- DoPut fan-out ------------------------------------------------------ #
     def put(
         self,
-        descriptor: FlightDescriptor,
+        descriptor: FlightDescriptor | None,
         schema: Schema,
-        assignments: list[tuple[Location | None, list[RecordBatch]]],
+        assignments: list,
     ) -> TransferStats:
         """Write each (location, batches) shard on its own DoPut stream.
 
@@ -368,14 +368,24 @@ class ParallelStreamScheduler:
         from in-txn content-hash dedup — which is likewise gated on the
         server's ``dedup_puts`` flag, so against ``dedup_puts=False``
         servers a stage-leg retry can duplicate rows inside the txn just as
-        a plain-put retry would."""
-        assignments = [(loc, bs) for loc, bs in assignments if bs]
+        a plain-put retry would.
+
+        An assignment is ``(location, batches)`` or ``(location, batches,
+        descriptor)`` — the 3-tuple form lets one fan-out write different
+        datasets per stream (a replicated writer targets each slice's own
+        storage key), in which case the top-level ``descriptor`` may be
+        ``None``."""
+        assignments = [
+            (a[0], a[1], a[2] if len(a) > 2 else descriptor)
+            for a in assignments if a[1]
+        ]
         if not assignments:
             return TransferStats(streams=0)
         t0 = time.perf_counter()
 
-        def write_once(loc: Location | None, shard: list[RecordBatch]) -> None:
-            w = self._do_put(self._client(loc), descriptor, schema)
+        def write_once(loc: Location | None, shard: list[RecordBatch],
+                       desc: FlightDescriptor) -> None:
+            w = self._do_put(self._client(loc), desc, schema)
             # the scheduler's writer contract is write_batch/close (see module
             # docstring: any client works); write_batches is an optional
             # extension for coalesced frames
@@ -387,10 +397,11 @@ class ParallelStreamScheduler:
                     w.write_batch(b)
             w.close()
 
-        def write(loc: Location | None, shard: list[RecordBatch]) -> None:
+        def write(loc: Location | None, shard: list[RecordBatch],
+                  desc: FlightDescriptor) -> None:
             for attempt in range(self.put_retries + 1):
                 try:
-                    write_once(loc, shard)
+                    write_once(loc, shard, desc)
                     return
                 except (FlightUnavailable, FlightTimedOut, ConnectionError, OSError):
                     if attempt == self.put_retries:
@@ -401,11 +412,11 @@ class ParallelStreamScheduler:
             max_workers=min(self.max_streams, len(assignments)),
             thread_name_prefix="flight-put",
         ) as pool:
-            futs = [pool.submit(write, loc, bs) for loc, bs in assignments]
+            futs = [pool.submit(write, loc, bs, d) for loc, bs, d in assignments]
             for f in futs:
                 f.result()
         dt = time.perf_counter() - t0
-        all_batches = [b for _, bs in assignments for b in bs]
+        all_batches = [b for _, bs, _ in assignments for b in bs]
         return TransferStats(
             sum(b.num_rows for b in all_batches),
             sum(b.nbytes() for b in all_batches),

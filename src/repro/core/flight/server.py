@@ -1263,6 +1263,11 @@ class InMemoryFlightServer(FlightServerBase):
             return [ActionResult(json.dumps(aggregate(plan, batches)).encode())]
         if action.type == "health":
             return [ActionResult(b"ok")]
+        if action.type == "heartbeat":
+            # a liveness ping that also tells the caller who answered —
+            # cluster probers feed this into their membership registry
+            return [ActionResult(json.dumps(
+                {"ok": True, "shard": self.shard_id}).encode())]
         if action.type == "server-stats":
             with self._lock:
                 stats = {

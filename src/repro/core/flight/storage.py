@@ -46,6 +46,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import time
 import uuid
 from dataclasses import dataclass, field
 from typing import Iterable
@@ -478,11 +479,20 @@ class RemoteFlightProvider(StorageProvider):
     dataset that physically lives on a remote server or cluster.  Staging
     durability is the remote's concern: ``staged_txns`` reports nothing,
     because recovery belongs to the endpoint that owns the bytes.
+
+    Unreachability always surfaces as the *typed* ``FlightUnavailable``
+    (never a raw ``ConnectionError``/``OSError``, whatever client object
+    backs the provider), so callers can catch one error for "the tier
+    behind me is down".  ``retries`` bounds transparent re-dials of
+    transient failures — each retry backs off ``retry_backoff * 2**attempt``
+    seconds.  The default is 0: non-idempotent writes should not silently
+    re-send unless the operator opted in against a dedup-guarded remote.
     """
 
     kind = "remote"
 
-    def __init__(self, target, token: str | None = None):
+    def __init__(self, target, token: str | None = None,
+                 retries: int = 0, retry_backoff: float = 0.05):
         # lazy import: client.py imports server.py which imports storage.py
         from .client import FlightClient
 
@@ -490,14 +500,37 @@ class RemoteFlightProvider(StorageProvider):
         self._client = (target if isinstance(target, FlightClient)
                         else FlightClient(target, token=token))
         self._txn_datasets: dict[str, str] = {}
+        self.retries = retries
+        self.retry_backoff = retry_backoff
+        self.retried_calls = 0
         self.proxied_reads = 0
         self.proxied_writes = 0
+
+    def _call(self, fn):
+        """Run one remote interaction under the retry/typing policy."""
+        from .protocol import FlightTimedOut, FlightUnavailable
+
+        for attempt in range(self.retries + 1):
+            try:
+                return fn()
+            except (FlightUnavailable, FlightTimedOut, ConnectionError, OSError) as e:
+                if attempt == self.retries:
+                    if isinstance(e, (FlightUnavailable, FlightTimedOut)):
+                        raise
+                    # belt-and-braces: a non-mapping client object leaked a
+                    # raw socket error — type it at the provider boundary
+                    raise FlightUnavailable(
+                        f"remote tier {self.target!r} unreachable: {e}",
+                        detail={"target": str(self.target)}) from e
+                self.retried_calls += 1
+                time.sleep(self.retry_backoff * (2 ** attempt))
 
     # -- catalog ----------------------------------------------------------- #
     def list(self) -> list[str]:
         from .protocol import Action
 
-        names = self._client.do_action(Action("list-names"))[0].body.decode()
+        names = self._call(
+            lambda: self._client.do_action(Action("list-names")))[0].body.decode()
         return [n for n in names.split(",") if n]
 
     def exists(self, name: str) -> bool:
@@ -506,12 +539,14 @@ class RemoteFlightProvider(StorageProvider):
     def schema(self, name: str) -> Schema:
         from .protocol import FlightDescriptor
 
-        return self._client.get_flight_info(FlightDescriptor.for_path(name)).schema
+        return self._call(lambda: self._client.get_flight_info(
+            FlightDescriptor.for_path(name))).schema
 
     def info(self, name: str) -> dict:
         from .protocol import Action
 
-        stats = json.loads(self._client.do_action(Action("stats"))[0].body)
+        stats = json.loads(self._call(
+            lambda: self._client.do_action(Action("stats")))[0].body)
         if name not in stats:
             raise FlightNotFound(f"no such dataset: {name}", detail={"dataset": name})
         return stats[name]
@@ -522,12 +557,20 @@ class RemoteFlightProvider(StorageProvider):
 
         self.proxied_reads += 1
         stop_ix = -1 if stop is None else stop
-        return list(self._client.do_get(Ticket.for_range(name, start, stop_ix)))
+        return self._call(
+            lambda: list(self._client.do_get(Ticket.for_range(name, start, stop_ix))))
 
     def _put(self, descriptor, schema, batches) -> None:
-        w = self._client.do_put(descriptor, schema)
-        w.write_batches(list(batches))
-        w.close()
+        payload = list(batches)
+
+        def put_once():
+            w = self._client.do_put(descriptor, schema)
+            w.write_batches(payload)
+            w.close()
+
+        # NB: a retried plain put re-sends the payload — idempotent only
+        # against a dedup-guarded remote (retries default to 0 for a reason)
+        self._call(put_once)
         self.proxied_writes += 1
 
     def append(self, name, schema, batches) -> None:
@@ -542,7 +585,7 @@ class RemoteFlightProvider(StorageProvider):
     def drop(self, name) -> None:
         from .protocol import Action
 
-        self._client.do_action(Action("drop", name.encode()))
+        self._call(lambda: self._client.do_action(Action("drop", name.encode())))
 
     # -- staging ------------------------------------------------------------ #
     def stage(self, txn_id, dataset, schema, batches) -> None:
@@ -559,7 +602,7 @@ class RemoteFlightProvider(StorageProvider):
             "txn_id": txn_id,
             "dataset": self._txn_datasets.get(txn_id, ""),
         }).encode()
-        self._client.do_action(Action(verb, body))
+        self._call(lambda: self._client.do_action(Action(verb, body)))
 
     def mark_prepared(self, txn_id) -> None:
         self._txn_action("txn-prepare", txn_id)
@@ -580,6 +623,8 @@ class RemoteFlightProvider(StorageProvider):
             "datasets": len(self.list()),
             "proxied_reads": self.proxied_reads,
             "proxied_writes": self.proxied_writes,
+            "retries": self.retries,
+            "retried_calls": self.retried_calls,
         }
 
 

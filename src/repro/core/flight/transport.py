@@ -300,6 +300,7 @@ class SocketListener:
         self._sock.listen(128)
         self.host, self.port = self._sock.getsockname()
         self._threads: list[threading.Thread] = []
+        self._conns: set[FrameConnection] = set()
         self._accept_thread: threading.Thread | None = None
         self._closing = threading.Event()
 
@@ -315,6 +316,7 @@ class SocketListener:
             except OSError:
                 return
             conn = FrameConnection(sock)
+            self._conns.add(conn)
             t = threading.Thread(target=self._safe_handle, args=(conn,), daemon=True)
             t.start()
             # reap finished handlers on every accept AND cap the retained
@@ -337,14 +339,29 @@ class SocketListener:
                 pass
         finally:
             conn.close()
+            self._conns.discard(conn)
+
+    def drop_connections(self) -> int:
+        """Sever every live connection (fault injection / admin drain);
+        the accept loop keeps running."""
+        conns = list(self._conns)
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        return len(conns)
 
     def open_connections(self) -> int:
         """Live handler threads (== live connections, up to ``MAX_TRACKED``)."""
         return sum(1 for t in self._threads if t.is_alive())
 
     def stats(self) -> dict:
+        open_conns = self.open_connections()
         return {"io_mode": "threads",
-                "open_connections": self.open_connections(),
+                "open_connections": open_conns,
+                "open_fds": open_conns + 1,  # handler sockets + listener
+                "worker_queue_depth": 0,     # thread-per-conn: no shared queue
                 "workers": None}
 
     def stop(self) -> None:

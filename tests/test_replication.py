@@ -1,0 +1,628 @@
+"""Replicated cluster plane: membership, replication, rebalance, faults."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import RecordBatch
+from repro.core.flight import (
+    Action,
+    ClusterMembership,
+    FaultInjector,
+    FlightClient,
+    FlightClusterClient,
+    FlightClusterServer,
+    FlightUnavailable,
+    MembershipProber,
+    RemoteFlightProvider,
+    ShardState,
+    parse_slice_key,
+    plan_layout,
+    recover_layouts,
+    slice_key,
+)
+from repro.core.flight.protocol import FlightInvalidArgument
+
+
+def seq_batches(n=6, rows=100):
+    """Batches whose rows are one global 0..n*rows-1 sequence — any
+    duplicated or dropped row is detectable by sorting the k column."""
+    return [
+        RecordBatch.from_numpy({
+            "k": np.arange(i * rows, (i + 1) * rows, dtype=np.int64),
+            "v": np.arange(i * rows, (i + 1) * rows, dtype=np.float64) * 0.5,
+        })
+        for i in range(n)
+    ]
+
+
+def all_ks(table_or_batches):
+    batches = getattr(table_or_batches, "batches", table_or_batches)
+    return sorted(int(k) for b in batches for k in b.column("k").to_numpy())
+
+
+# --------------------------------------------------------------------------
+# membership
+# --------------------------------------------------------------------------
+
+
+class TestMembership:
+    def test_state_ladder_and_epochs(self):
+        m = ClusterMembership(suspect_after=1.0, dead_after=3.0)
+        e0 = m.register(0)
+        e1 = m.register(1)
+        assert e1 == e0 + 1  # each join is a view change
+        assert m.state(0) is ShardState.HEALTHY
+        # re-announce of a live shard is not a view change
+        assert m.register(0) == e1
+        m.heartbeat(0, now=100.0)
+        m.heartbeat(1, now=100.0)
+        assert m.sweep(now=100.5) == []
+        assert m.sweep(now=102.0) == []          # past suspect_after only
+        assert m.state(0) is ShardState.SUSPECT
+        assert m.is_routable(0)                   # suspect still serves
+        epoch_before = m.epoch
+        assert m.epoch == epoch_before            # SUSPECT is not a view change
+        dead = m.sweep(now=104.0)
+        assert sorted(dead) == [0, 1]
+        assert m.epoch == epoch_before + 2        # one bump per death
+        assert m.alive() == []
+
+    def test_heartbeat_revives_dead_and_bumps_epoch(self):
+        m = ClusterMembership(suspect_after=0.1, dead_after=0.2)
+        m.register(0)
+        m.heartbeat(0, now=0.0)
+        m.sweep(now=1.0)
+        assert m.state(0) is ShardState.DEAD
+        e = m.epoch
+        m.heartbeat(0)
+        assert m.state(0) is ShardState.HEALTHY
+        assert m.epoch == e + 1
+
+    def test_removed_shards_ignore_heartbeats(self):
+        m = ClusterMembership()
+        m.register(0)
+        m.deregister(0)
+        e = m.epoch
+        m.heartbeat(0)
+        assert m.state(0) is ShardState.REMOVED
+        assert m.epoch == e
+
+    def test_prober_detects_and_reports_dead(self):
+        m = ClusterMembership(suspect_after=0.01, dead_after=0.02)
+        m.register(0)
+        m.register(1)
+        up = {0: True, 1: True}
+        died = []
+        p = MembershipProber(m, lambda sid: up[sid], on_dead=died.append)
+        p.tick()
+        assert m.state(0) is ShardState.HEALTHY
+        up[1] = False
+        time.sleep(0.03)
+        p.tick()
+        assert m.state(1) is ShardState.DEAD
+        assert died == [[1]]
+        assert m.state(0) is ShardState.HEALTHY   # its probes kept passing
+        assert p.probe_failures >= 1
+
+
+# --------------------------------------------------------------------------
+# replication primitives
+# --------------------------------------------------------------------------
+
+
+class TestReplicationPrimitives:
+    def test_slice_key_roundtrip(self):
+        k = slice_key("users", 3, 1)
+        assert k == "users@@g3s1"
+        assert parse_slice_key(k) == ("users", 3, 1)
+        assert parse_slice_key("users") is None
+        with pytest.raises(FlightInvalidArgument):
+            slice_key("a@@b", 1, 0)
+
+    def test_chained_rotation_survives_any_single_loss(self):
+        lay = plan_layout("d", 1, [0, 1, 2, 3], replicas=2)
+        for dead in range(4):
+            for sl in lay.slices:
+                assert any(h != dead for h in sl.holders), (dead, sl)
+        # each shard holds exactly R slices (balanced spread)
+        loads = {h: 0 for h in range(4)}
+        for sl in lay.slices:
+            for h in sl.holders:
+                loads[h] += 1
+        assert set(loads.values()) == {2}
+
+    def test_recover_layouts_picks_highest_complete_generation(self):
+        listings = {
+            0: ["users@@g1s0", "users@@g2s0", "plain"],
+            1: ["users@@g1s1", "users@@g2s1", "users@@g3s1"],  # g3 has a hole
+            2: ["users@@g2s0", "users@@g2s1"],
+        }
+        out = recover_layouts(listings)
+        assert out["users"].gen == 2
+        assert out["users"].slices[0].holders == (0, 2)
+        assert out["users"].slices[1].holders == (1, 2)
+
+
+# --------------------------------------------------------------------------
+# replicated cluster: read/write/query
+# --------------------------------------------------------------------------
+
+
+class TestReplicatedCluster:
+    def test_endpoints_list_all_replica_locations(self):
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            info = cl._info_for("d")
+            assert info.epoch == cl.membership.epoch
+            assert len(info.endpoints) == 3
+            for ep in info.endpoints:
+                assert len(ep.locations) == 2   # one per replica holder
+                assert len(ep.app_metadata["holders"]) == 2
+            # every slice key is stored verbatim on both holders
+            for sl in cl._layouts["d"].slices:
+                holders = list(sl.holders)
+                a = cl.shards[holders[0]].dataset(sl.key)
+                b = cl.shards[holders[1]].dataset(sl.key)
+                assert [x.to_rows() for x in a] == [y.to_rows() for y in b]
+        finally:
+            cl.shutdown()
+
+    def test_read_survives_dead_shard(self):
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            cli = FlightClusterClient(cl)
+            cl.membership.mark_dead(0)
+            table, _ = cli.read("d")
+            assert all_ks(table) == list(range(600))
+        finally:
+            cl.shutdown()
+
+    def test_replica_loss_beyond_r_minus_one_raises(self):
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            cl.membership.mark_dead(0)
+            cl.membership.mark_dead(1)
+            with pytest.raises(FlightUnavailable):
+                cl._info_for("d")
+        finally:
+            cl.shutdown()
+
+    def test_client_write_plain_and_transactional(self):
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            cli = FlightClusterClient(cl)
+            cli.write("plain", seq_batches(4))
+            t, _ = cli.read("plain")
+            assert all_ks(t) == list(range(400))
+            cli.write("txn", seq_batches(4), transactional=True)
+            t2, _ = cli.read("txn")
+            assert all_ks(t2) == list(range(400))
+            # both replicas of every slice committed
+            for sl in cl._layouts["txn"].slices:
+                for h in sl.holders:
+                    assert cl.shards[h].storage.exists(sl.key)
+        finally:
+            cl.shutdown()
+
+    def test_head_funneled_transactional_write(self):
+        """A legacy writer staging through the head still gets the replica
+        fan-out: the head remembers the sub-txn mapping and the bare
+        txn-commit resolves it."""
+        from repro.core.flight.protocol import FlightDescriptor, StagedPutCommand
+
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            c = FlightClient(cl)
+            batches = seq_batches(4)
+            w = c.do_put(FlightDescriptor.for_command(
+                StagedPutCommand("hd", "t1", "stage")), batches[0].schema)
+            w.write_batches(batches)
+            ack = w.close()
+            assert ack["staged"] and ack["replicas"] == 2
+            assert ack["rows"] == 400          # logical rows, not copies
+            # invisible until commit
+            names = c.do_action(Action("list-names"))[0].body.decode()
+            assert "hd" not in names
+            out = json.loads(c.do_action(Action(
+                "txn-commit", json.dumps({"txn_id": "t1"}).encode()))[0].body)
+            assert out["committed"] and out["dataset"] == "hd"
+            assert out["rows"] == 400
+            t, _ = FlightClusterClient(cl).read("hd")
+            assert all_ks(t) == list(range(400))
+        finally:
+            cl.shutdown()
+
+    def test_transactional_abort_leaves_nothing_visible(self):
+        from repro.core.flight.protocol import FlightDescriptor, StagedPutCommand
+
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            c = FlightClient(cl)
+            batches = seq_batches(2)
+            w = c.do_put(FlightDescriptor.for_command(
+                StagedPutCommand("ab", "t2", "stage")), batches[0].schema)
+            w.write_batches(batches)
+            w.close()
+            c.do_action(Action("txn-abort", json.dumps({"txn_id": "t2"}).encode()))
+            names = c.do_action(Action("list-names"))[0].body.decode()
+            assert "ab" not in names
+            for s in cl.shards:
+                assert not any(parse_slice_key(n) and parse_slice_key(n)[0] == "ab"
+                               for n in s.storage.list())
+        finally:
+            cl.shutdown()
+
+    def test_query_pushdown_on_replicated_layout_with_dead_shard(self):
+        from repro.query.engine import QueryPlan
+        from repro.query.expr import col
+
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            cli = FlightClusterClient(cl)
+            cl.membership.mark_dead(1)
+            t, _ = cli.query(QueryPlan(dataset="d", predicate=col("k") < 150))
+            assert all_ks(t) == list(range(150))
+        finally:
+            cl.shutdown()
+
+    def test_epoch_bumps_on_view_change_not_on_load(self):
+        cl = FlightClusterServer(num_shards=2, replicas=2)
+        try:
+            e0 = cl.membership.epoch
+            cl.add_dataset("d", seq_batches(2))
+            assert cl.membership.epoch == e0     # new dataset: no view change
+            cl.membership.mark_dead(1)
+            assert cl.membership.epoch == e0 + 1
+        finally:
+            cl.shutdown()
+
+    def test_membership_and_heartbeat_actions(self):
+        cl = FlightClusterServer(num_shards=2, replicas=2)
+        try:
+            c = FlightClient(cl)
+            view = json.loads(c.do_action(Action("membership"))[0].body)
+            assert [s["state"] for s in view["shards"]] == ["healthy", "healthy"]
+            cl.membership.mark_dead(0)
+            ack = json.loads(c.do_action(Action(
+                "heartbeat", json.dumps({"shard": 0}).encode()))[0].body)
+            assert ack["ok"]
+            assert cl.membership.state(0) is ShardState.HEALTHY
+            stats = json.loads(c.do_action(Action("stats"))[0].body)
+            assert stats["replicas"] == 2
+            assert "membership" in stats and "layouts" in stats
+        finally:
+            cl.shutdown()
+
+
+# --------------------------------------------------------------------------
+# elastic membership: rebalance, add/remove shard, recovery
+# --------------------------------------------------------------------------
+
+
+class TestRebalance:
+    def test_add_shard_spreads_layout_and_preserves_rows(self):
+        cl = FlightClusterServer(num_shards=2, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            gen0 = cl._layouts["d"].gen
+            e0 = cl.membership.epoch
+            sid = cl.add_shard(wait=True)
+            assert sid == 2 and cl.num_shards == 3
+            lay = cl._layouts["d"]
+            assert lay.gen > gen0
+            assert cl.membership.epoch > e0      # join + cutover both bump
+            assert {h for sl in lay.slices for h in sl.holders} == {0, 1, 2}
+            t, _ = FlightClusterClient(cl).read("d")
+            assert all_ks(t) == list(range(600))
+            # the superseded generation's keys are gone
+            for s in cl.shards:
+                for n in s.storage.list():
+                    assert parse_slice_key(n)[1] == lay.gen
+            assert cl.rebalances == 1
+        finally:
+            cl.shutdown()
+
+    def test_remove_shard_drains_then_tombstones(self):
+        cl = FlightClusterServer(num_shards=3, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            cl.remove_shard(1, wait=True)
+            assert cl.membership.state(1) is ShardState.REMOVED
+            lay = cl._layouts["d"]
+            assert all(1 not in sl.holders for sl in lay.slices)
+            assert cl.shards[1].storage.list() == []
+            t, _ = FlightClusterClient(cl).read("d")
+            assert all_ks(t) == list(range(600))
+        finally:
+            cl.shutdown()
+
+    def test_rebalance_failure_is_all_or_none(self):
+        """A fault mid-rebalance aborts the staged generation; the old
+        layout keeps serving untouched."""
+        cl = FlightClusterServer(num_shards=2, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            lay0 = cl._layouts["d"]
+            sid = len(cl.shards)
+            s = cl._shard_factory(sid, f"{cl.location_name}-shard{sid}")
+            s.shard_id = sid
+            cl.shards.append(s)
+            cl.membership.register(sid, [l.uri for l in s.locations()])
+            FaultInjector(cl).kill(2)            # the new shard dies mid-move
+            with pytest.raises(FlightUnavailable):
+                cl._rebalance()
+            assert cl._layouts["d"] is lay0      # cutover never happened
+            t, _ = FlightClusterClient(cl).read("d")
+            assert all_ks(t) == list(range(600))
+            # no staged keys of the aborted generation linger on live shards
+            for h in (0, 1):
+                for n in cl.shards[h].storage.list():
+                    assert parse_slice_key(n)[1] == lay0.gen
+        finally:
+            cl.shutdown()
+
+    def test_background_rebalance_and_wait(self):
+        cl = FlightClusterServer(num_shards=2, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(4))
+            cl.add_shard(wait=False)
+            cl.wait_rebalanced(timeout=30.0)
+            assert {h for sl in cl._layouts["d"].slices for h in sl.holders} == {0, 1, 2}
+        finally:
+            cl.shutdown()
+
+    def test_add_shard_requires_replication(self):
+        cl = FlightClusterServer(num_shards=2, replicas=1)
+        try:
+            with pytest.raises(FlightInvalidArgument):
+                cl.add_shard()
+            with pytest.raises(FlightInvalidArgument):
+                cl.remove_shard(0)
+        finally:
+            cl.shutdown()
+
+    def test_disk_cluster_restart_recovers_layouts(self, tmp_path):
+        root = f"disk:{tmp_path}"
+        cl = FlightClusterServer(num_shards=3, replicas=2, storage=root)
+        cl.add_dataset("d", seq_batches(6))
+        lay0 = cl._layouts["d"]
+        cl.shutdown()
+        cl2 = FlightClusterServer(num_shards=3, replicas=2, storage=root)
+        try:
+            lay = cl2._layouts["d"]
+            assert lay.gen == lay0.gen
+            # holder *sets* recover exactly (ordering is a routing
+            # preference the listings don't encode)
+            assert [set(sl.holders) for sl in lay.slices] == \
+                   [set(sl.holders) for sl in lay0.slices]
+            t, _ = FlightClusterClient(cl2).read("d")
+            assert all_ks(t) == list(range(600))
+        finally:
+            cl2.shutdown()
+
+
+# --------------------------------------------------------------------------
+# fault injection + failover (the acceptance scenario)
+# --------------------------------------------------------------------------
+
+
+class TestFaultInjection:
+    def test_kill_mid_doget_drains_from_replica_over_tcp(self):
+        """The PR's acceptance bar: kill a shard while its DoGet streams are
+        mid-flight; the client must drain the complete dataset from the
+        surviving replicas — zero duplicate rows, zero missing rows."""
+        cl = FlightClusterServer(num_shards=3, replicas=2).serve_tcp()
+        try:
+            cl.add_dataset("big", seq_batches(30, rows=200))
+            cli = FlightClusterClient(
+                f"tcp://127.0.0.1:{cl.port}", max_streams=3, window=2)
+            inj = FaultInjector(cl)
+            got, killed = [], False
+            for i, b in enumerate(cli.stream("big")):
+                got.append(b)
+                if i == 2 and not killed:
+                    inj.kill(0)                  # verbs fail + connections drop
+                    killed = True
+            assert killed
+            assert all_ks(got) == list(range(6000))
+            # subsequent reads keep working without a heal
+            t, _ = cli.read("big")
+            assert all_ks(t) == list(range(6000))
+        finally:
+            cl.shutdown()
+
+    def test_prober_declares_killed_shard_dead_and_plans_avoid_it(self):
+        cl = FlightClusterServer(num_shards=3, replicas=2,
+                                 suspect_after=0.05, dead_after=0.1)
+        try:
+            cl.add_dataset("d", seq_batches(6))
+            inj = FaultInjector(cl)
+            inj.kill(1)
+            deadline = time.time() + 5.0
+            while cl.membership.state(1) is not ShardState.DEAD:
+                cl.prober.tick()
+                time.sleep(0.06)
+                assert time.time() < deadline
+            info = cl._info_for("d")
+            for ep in info.endpoints:
+                assert 1 not in ep.app_metadata["holders"]
+            inj.revive(1)
+            cl.prober.tick()
+            assert cl.membership.state(1) is ShardState.HEALTHY
+        finally:
+            cl.shutdown()
+
+    def test_hang_fails_actions_fast_but_stalls_data(self):
+        cl = FlightClusterServer(num_shards=2, replicas=2)
+        try:
+            cl.add_dataset("d", seq_batches(2))
+            inj = FaultInjector(cl)
+            inj.hang(0, seconds=0.2)
+            t0 = time.perf_counter()
+            with pytest.raises(FlightUnavailable):
+                cl.shards[0].do_action_impl(Action("health"))
+            assert time.perf_counter() - t0 < 0.1   # probe path fails fast
+            t0 = time.perf_counter()
+            with pytest.raises(FlightUnavailable):
+                cl.shards[0].get_flight_info_impl(None)
+            assert time.perf_counter() - t0 >= 0.15  # data path stalled
+            inj.revive(0)
+            assert cl.shards[0].do_action_impl(Action("health"))[0].body == b"ok"
+        finally:
+            cl.shutdown()
+
+    def test_hedged_read_escapes_slow_replica_and_counts_rows_once(self):
+        cl = FlightClusterServer(num_shards=2, replicas=2).serve_tcp()
+        try:
+            cl.add_dataset("d", seq_batches(8))
+            cli = FlightClusterClient(
+                f"tcp://127.0.0.1:{cl.port}", hedge_after=0.05)
+            FaultInjector(cl).slow(0, delay=0.5)
+            t0 = time.perf_counter()
+            t, stats = cli.read("d")
+            dt = time.perf_counter() - t0
+            assert stats.hedges >= 1
+            assert dt < 2.0                      # 8 paced batches would be ~4s
+            assert stats.rows == 800             # winner's rows counted once
+            assert all_ks(t) == list(range(800))
+            # the loser's connection is reclaimed: the next read still works
+            # and pulls the full dataset through the same pooled clients
+            t2, _ = cli.read("d")
+            assert all_ks(t2) == list(range(800))
+        finally:
+            cl.shutdown()
+
+    def test_drop_connections_severs_but_listener_survives(self):
+        from repro.core.flight import InMemoryFlightServer
+
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            srv.add_dataset("d", seq_batches(1))
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            assert len(c.list_flights()) == 1
+            inj = FaultInjector([srv])
+            inj.drop_connections(0)
+            time.sleep(0.05)
+            # a fresh dial works: only connections died, not the listener
+            c2 = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            assert len(c2.list_flights()) == 1
+        finally:
+            srv.shutdown()
+
+
+@pytest.mark.slow
+class TestSelfHealing:
+    def test_auto_rebalance_restores_replication_after_death(self):
+        """With ``auto_rebalance``, a shard death triggers re-replication:
+        the prober declares it DEAD, the rebalance re-plans every layout
+        over the survivors, and every slice is back to R live holders —
+        reads keep answering throughout."""
+        cl = FlightClusterServer(
+            num_shards=4, replicas=2, heartbeat_interval=0.03,
+            suspect_after=0.05, dead_after=0.1, auto_rebalance=True).serve_tcp()
+        try:
+            cl.add_dataset("d", seq_batches(12, rows=200))
+            cli = FlightClusterClient(f"tcp://127.0.0.1:{cl.port}")
+            FaultInjector(cl).kill(2)
+            deadline = time.time() + 15.0
+            while time.time() < deadline:
+                lay = cl._layouts["d"]
+                if (cl.membership.state(2) is ShardState.DEAD
+                        and all(2 not in sl.holders for sl in lay.slices)):
+                    break
+                t, _ = cli.read("d")   # reads never fail during the churn
+                assert all_ks(t) == list(range(2400))
+                time.sleep(0.05)
+            else:
+                raise AssertionError("auto-rebalance never healed the layout")
+            cl.wait_rebalanced(timeout=15.0)
+            lay = cl._layouts["d"]
+            for sl in lay.slices:
+                assert len(sl.holders) == 2
+                assert all(cl.membership.is_routable(h) for h in sl.holders)
+                for h in sl.holders:
+                    assert cl.shards[h].storage.exists(sl.key)
+            t, _ = cli.read("d")
+            assert all_ks(t) == list(range(2400))
+        finally:
+            cl.shutdown()
+
+
+# --------------------------------------------------------------------------
+# satellites: listener stats, remote provider retries
+# --------------------------------------------------------------------------
+
+
+class TestListenerStats:
+    def test_server_stats_surfaces_io_depth_fields(self):
+        from repro.core.flight import InMemoryFlightServer
+
+        srv = InMemoryFlightServer().serve_tcp()
+        try:
+            srv.add_dataset("d", seq_batches(1))
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            io = json.loads(c.do_action(Action("server-stats"))[0].body)["io"]
+            assert io["io_mode"] == "eventloop"
+            assert io["open_fds"] >= io["open_connections"] + 3
+            assert io["worker_queue_depth"] >= 0
+            assert io["inline_rpcs"] >= 0 and io["accepted"] >= 1
+        finally:
+            srv.shutdown()
+
+    def test_threads_listener_has_stat_parity(self):
+        from repro.core.flight import InMemoryFlightServer, ServerConfig
+
+        srv = InMemoryFlightServer(
+            config=ServerConfig(io_mode="threads")).serve_tcp()
+        try:
+            c = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+            io = json.loads(c.do_action(Action("server-stats"))[0].body)["io"]
+            assert io["io_mode"] == "threads"
+            assert "open_fds" in io and "worker_queue_depth" in io
+        finally:
+            srv.shutdown()
+
+
+class TestRemoteProviderRetry:
+    def test_dead_target_raises_typed_unavailable(self):
+        p = RemoteFlightProvider("tcp://127.0.0.1:9", retry_backoff=0.001)
+        with pytest.raises(FlightUnavailable):
+            p.list()
+
+    def test_bounded_retries_are_counted_and_exhausted(self):
+        p = RemoteFlightProvider("tcp://127.0.0.1:9",
+                                 retries=3, retry_backoff=0.001)
+        with pytest.raises(FlightUnavailable):
+            p.list()
+        assert p.retried_calls == 3
+
+    def test_retry_succeeds_after_transient_failure(self):
+        calls = {"n": 0}
+
+        class Flaky:
+            def do_action(self, action):
+                calls["n"] += 1
+                if calls["n"] < 3:
+                    raise ConnectionResetError("transient")
+                class R:  # matches ActionResult shape
+                    body = b"a,b"
+                return [R()]
+
+        from repro.core.flight.client import FlightClient as FC
+
+        p = RemoteFlightProvider.__new__(RemoteFlightProvider)
+        p.target = "flaky"
+        p._client = Flaky()
+        p._txn_datasets = {}
+        p.retries = 5
+        p.retry_backoff = 0.0
+        p.retried_calls = 0
+        p.proxied_reads = p.proxied_writes = 0
+        assert p.list() == ["a", "b"]
+        assert p.retried_calls == 2
