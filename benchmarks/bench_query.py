@@ -14,8 +14,13 @@ Two experiments, both recorded to ``BENCH_query.json`` by run.py:
 """
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
+from repro.core import RecordBatch
 from repro.core.flight import FlightClusterClient, FlightClusterServer
-from repro.query import QueryPlan, col, execute
+from repro.query import QueryPlan, aggregate, col, execute
 from repro.query.odbc_sim import FlightColumnarProtocol, OdbcProtocol, TurbodbcProtocol
 
 from .common import Timing, taxi_batch
@@ -95,8 +100,78 @@ def _pushdown_vs_fullscan(quick: bool) -> list[Timing]:
     return out
 
 
+def _groupby_partial_vs_shipall(quick: bool) -> list[Timing]:
+    """Grouped aggregation sweep: shard-side partial states vs shipping every
+    surviving row and aggregating client-side.
+
+    Each shard folds its slice into one per-group state batch (``sum+count``
+    pairs for means, running extrema), so the wire carries group-sized state
+    instead of row-sized data.  Swept over group cardinality: the low-card
+    ratio is the headline (state is thousands of times smaller than the
+    rows); high cardinality shrinks the win and is exactly the regime the
+    hash-shuffle path exists for."""
+    rows = 50_000 if quick else 250_000
+    n_batches, n_shards = 8, 4
+    aggs = [("mean", "fare_amount"), ("sum", "total_amount"),
+            ("min", "trip_distance"), ("max", "trip_distance"),
+            ("count", "fare_amount")]
+    out: list[Timing] = []
+    cluster = FlightClusterServer(num_shards=n_shards).serve_tcp()
+    try:
+        rng = np.random.default_rng(7)
+        batches = []
+        for s in range(n_batches):
+            d = taxi_batch(rows // n_batches, seed=s, with_strings=False).to_pydict()
+            # high-cardinality synthetic key alongside passenger_count (6 groups)
+            d["ride_id"] = rng.integers(0, rows // 50, rows // n_batches).astype(np.int64)
+            batches.append(RecordBatch.from_pydict(d))
+        cluster.add_dataset("taxi_g", batches)
+        cc = FlightClusterClient(f"tcp://127.0.0.1:{cluster.port}",
+                                 max_streams=n_shards)
+        for key, card in (("passenger_count", 6), ("ride_id", rows // 50)):
+            plan = QueryPlan("taxi_g", aggregations=aggs, group_by=[key])
+            ship = QueryPlan("taxi_g", projection=plan.required_columns(
+                [f.name for f in batches[0].schema.fields]))
+            cc.aggregate(plan)  # warm connections + encode-once cache
+            best_part = best_ship = float("inf")
+            part_bytes = ship_bytes = 0
+            for _ in range(3):
+                grouped, st = cc.aggregate(plan)
+                if st.seconds < best_part:
+                    best_part, part_bytes = st.seconds, st.bytes
+                t0 = time.perf_counter()
+                table, fst = cc.query(ship)
+                ref = aggregate(plan, table.batches)
+                dt = time.perf_counter() - t0
+                if dt < best_ship:
+                    best_ship, ship_bytes = dt, fst.bytes
+            assert grouped.num_rows == ref.num_rows, "partial merge disagrees"
+            out.append(Timing(f"groupby_partial_{card}groups_{rows}rows",
+                              best_part, part_bytes,
+                              extra={"groups": grouped.num_rows}))
+            out.append(Timing(f"groupby_shipall_{card}groups_{rows}rows",
+                              best_ship, ship_bytes,
+                              extra={"groups": ref.num_rows}))
+            out.append(Timing(f"groupby_wire_ratio_{card}groups",
+                              best_ship / best_part / 1e6, 0,
+                              extra={"x": best_ship / best_part,
+                                     "wire_bytes_ratio": ship_bytes / max(part_bytes, 1)}))
+        # one shuffled equi-join for the trajectory record
+        half = {"ride_id": np.arange(rows // 50, dtype=np.int64),
+                "zone": rng.integers(0, 200, rows // 50).astype(np.int64)}
+        cluster.add_dataset("zones", [RecordBatch.from_pydict(half)])
+        t0 = time.perf_counter()
+        joined, jst = cc.join("taxi_g", "zones", "ride_id", "taxi_zoned")
+        out.append(Timing(f"shuffle_join_{rows}rows", time.perf_counter() - t0,
+                          jst.bytes, extra={"rows_out": joined.num_rows}))
+    finally:
+        cluster.shutdown()
+    return out
+
+
 def run(quick: bool = True) -> list[Timing]:
-    return _protocol_sims(quick) + _pushdown_vs_fullscan(quick)
+    return (_protocol_sims(quick) + _pushdown_vs_fullscan(quick)
+            + _groupby_partial_vs_shipall(quick))
 
 
 if __name__ == "__main__":

@@ -37,7 +37,6 @@ import json
 import os
 import threading
 import uuid
-import zlib
 from collections import OrderedDict
 
 import numpy as np
@@ -76,9 +75,14 @@ from .protocol import (
     Ticket,
 )
 from .scheduler import ParallelStreamScheduler, TransferStats
-from .server import FlightServerBase, InMemoryFlightServer, ServerConfig, parse_txn_body
-
-_MIX = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing constant
+from .shuffle import row_partitions
+from .server import (
+    FlightServerBase,
+    InMemoryFlightServer,
+    ServerConfig,
+    _query_out_schema,
+    parse_txn_body,
+)
 
 
 def _shard_storage(storage, shard_id: int):
@@ -141,25 +145,10 @@ class HashPlacement(Placement):
         return ShardSpec(self.scheme, num_shards, key=self.key)
 
     def row_shards(self, batch: RecordBatch, num_shards: int) -> np.ndarray:
-        col = batch.column(self.key)
-        try:
-            vals = col.to_numpy()
-        except TypeError:
-            vals = None
-        n = np.uint64(num_shards)
-        if vals is not None and np.issubdtype(vals.dtype, np.integer):
-            h = vals.astype(np.uint64) * _MIX
-            return ((h >> np.uint64(33)) % n).astype(np.int64)
-        if vals is not None and np.issubdtype(vals.dtype, np.floating):
-            f = vals.astype(np.float64)
-            f = np.where(f == 0.0, 0.0, f)            # -0.0 == 0.0 → same shard
-            f = np.where(np.isnan(f), np.nan, f)      # canonical NaN payload
-            bits = f.view(np.uint64) * _MIX
-            return ((bits >> np.uint64(33)) % n).astype(np.int64)
-        return np.array(
-            [zlib.crc32(repr(v).encode()) % num_shards for v in col.to_pylist()],
-            dtype=np.int64,
-        )
+        # one hash discipline for placement AND shuffle: a dataset placed by
+        # HashPlacement("k") on N shards is already partition-aligned for a
+        # same-key shuffle into N partitions (shuffle.py owns the buckets)
+        return row_partitions(batch, [self.key], num_shards)
 
     def assign(self, batches, num_shards):
         shards: list[list[RecordBatch]] = [[] for _ in range(num_shards)]
@@ -685,7 +674,9 @@ class FlightClusterServer(FlightServerBase):
             if name not in self._datasets:
                 raise FlightNotFound(f"no such flight: {name}", detail={"dataset": name})
             schema = self._datasets[name]
-        out_schema = schema.select(plan.projection) if plan.projection else schema
+        # aggregating plans stream per-group *state* (the partial operator),
+        # so the planned schema is the state schema — see server.py
+        out_schema = _query_out_schema(plan, schema)
         endpoints = []
         lay = self._layout(name)
         if lay is not None:
@@ -768,7 +759,7 @@ class FlightClusterServer(FlightServerBase):
         if isinstance(cmd, QueryCommand):
             # shard-less query ticket: gather every shard's batches and
             # execute at the head (legacy single-stream clients)
-            from ...query.engine import execute  # lazy import, see protocol.py
+            from ...query.engine import execute, partial_aggregate
 
             plan = cmd.plan
             with self._dlock:
@@ -776,9 +767,11 @@ class FlightClusterServer(FlightServerBase):
                     raise FlightNotFound(f"no such flight: {plan.dataset}",
                                          detail={"dataset": plan.dataset})
                 schema = self._datasets[plan.dataset]
-            out_schema = schema.select(plan.projection) if plan.projection else schema
+            out_schema = _query_out_schema(plan, schema)
             stop = cmd.stop if cmd.stop >= 0 else None
             batches = self.dataset(plan.dataset)[cmd.start : stop]
+            if plan.aggregations:  # one gathered partial; merge client-side
+                return out_schema, iter([partial_aggregate(plan, batches, schema)])
             return out_schema, iter(list(execute(plan, batches)))
         # shard-less range ticket: gather — a range over the shard-ordered
         # concat, so single-connection legacy clients read the whole dataset
@@ -1065,6 +1058,163 @@ class FlightClusterServer(FlightServerBase):
                 continue  # best-effort: committed shards surface elsewhere
         return {"txn_id": o["txn_id"], "aborted": bool(aborted), "shards": aborted}
 
+    # -- distributed aggregation / shuffle / join --------------------------- #
+    def aggregate_plan(self, plan) -> "dict | RecordBatch":
+        """Head-merged aggregation: redeem every planned partial endpoint,
+        merge the state batches (``query.engine.merge_partials``).
+
+        Each shard ships only its per-group state — never the surviving
+        rows.  On a replicated cluster a planned primary that died after
+        planning is retried on the slice's other holders (the same ticket
+        is redeemable on any replica)."""
+        from ...query.engine import merge_partials
+        from .scheduler import _empty_batch
+
+        info = self._plan_query_info(QueryCommand.for_plan(plan),
+                                     FlightDescriptor.for_query(plan))
+        partials: list[RecordBatch] = []
+        for ep in info.endpoints:
+            try:
+                _, it = self.do_get_impl(ep.ticket)
+            except FlightError:
+                it = None
+                for h in (ep.app_metadata or {}).get("holders", []):
+                    try:
+                        _, it = self.shards[h].do_get_impl(ep.ticket)
+                        break
+                    except FlightError:
+                        continue
+                if it is None:
+                    raise
+            partials.extend(it)
+        if not partials:
+            partials = [_empty_batch(info.schema)]
+        return merge_partials(plan, partials)
+
+    def shuffle_dataset(self, name: str, key, into: str,
+                        num_partitions: int | None = None) -> dict:
+        """Hash-shuffle ``name`` by key column(s) into dataset ``into``:
+        after this, partition ``p``'s rows live on shard ``p % N`` and equal
+        key tuples are co-resident — the layout grouped aggregation and
+        equi-joins want.
+
+        Shard-affine data plane: each source shard's local batches stream
+        through the keyed ``repartition`` exchange (one stream per
+        destination partition, emitting only that partition's rows), and
+        each partition stream lands on its destination shard as a *staged*
+        DoPut under a per-(source, partition) txn id — the txn scope is what
+        keeps identical partition payloads from different sources out of
+        the content-dedup guard — then flips visible via per-shard
+        ``txn-commit``.  Intermediates are written unreplicated even on an
+        R>1 cluster (a shuffle is always reproducible from its source)."""
+        keys = [key] if isinstance(key, str) else list(key)
+        n = num_partitions or self.num_shards
+        if n < 1:
+            raise FlightInvalidArgument("num_partitions must be >= 1")
+        with self._dlock:
+            if name not in self._datasets:
+                raise FlightNotFound(f"no such flight: {name}",
+                                     detail={"dataset": name})
+            schema = self._datasets[name]
+        for k in keys:
+            if k not in schema.names:
+                raise FlightInvalidArgument(f"shuffle key {k!r} not in schema",
+                                            detail={"key": k})
+        # source slices: shard-local batches wherever the dataset lives
+        sources: list[tuple[int, list[RecordBatch]]] = []
+        lay = self._layout(name)
+        if lay is None:
+            for i, s in enumerate(self.shards):
+                if s.storage.exists(name):
+                    sources.append((i, s.dataset(name)))
+        else:
+            for sl in lay.slices:
+                hs = self._holders_alive(sl)
+                first = next(
+                    (h for h in hs if self.shards[h].storage.exists(sl.key)), None)
+                if first is not None:
+                    sources.append((first, self.shards[first].dataset(sl.key)))
+        base = uuid.uuid4().hex[:12]
+        staged: list[tuple[int, str]] = []
+        rows = nbytes = streams = 0
+        for src, batches in sources:
+            if not batches:
+                continue
+            src_cli = FlightClient(self.shards[src], token=self.auth_token)
+            for p in range(n):
+                stream = src_cli.do_exchange_stream(
+                    FlightDescriptor.for_command(ExchangeCommand.for_service(
+                        "repartition", key=keys, num_partitions=n, partition=p)),
+                    schema)
+                stream.feed(batches)
+                part = list(stream)
+                if not part:
+                    continue
+                dest = p % self.num_shards
+                stxn = f"shuffle-{base}-s{src}p{p}"
+                stage_slice(FlightClient(self.shards[dest], token=self.auth_token),
+                            into, stxn, schema, part)
+                staged.append((dest, stxn))
+                rows += sum(b.num_rows for b in part)
+                nbytes += sum(b.nbytes() for b in part)
+                streams += 1
+        # flip every staged leg visible (single-writer intermediates: plain
+        # per-shard commits; client write() owns the full 2PC story)
+        for dest, stxn in staged:
+            self.shards[dest].do_action_impl(Action(
+                "txn-commit", json.dumps({"txn_id": stxn}).encode()))
+        # every shard owns its (possibly empty) partition, so downstream
+        # per-shard operators (local-join) never miss a side
+        for s in self.shards:
+            if not s.storage.exists(into):
+                s.add_dataset(into, [], schema=schema)
+        with self._dlock:
+            self._datasets[into] = schema
+        return {"dataset": into, "partitions": n, "sources": len(sources),
+                "streams": streams, "rows": rows, "bytes": nbytes}
+
+    def join_datasets(self, left: str, right: str, on, into: str) -> dict:
+        """Distributed inner equi-join: shuffle both sides by the join key,
+        then join each shard's key-aligned partitions locally (the
+        ``local-join`` action); the result lands sharded under ``into``.
+
+        Correctness leans on one hash discipline end to end: both shuffles
+        bucket by the same stable key hash, so every join key's rows from
+        *both* datasets meet on exactly one shard and the union of the
+        per-shard joins is the global join."""
+        from ...query.engine import join_schema
+
+        keys = [on] if isinstance(on, str) else list(on)
+        with self._dlock:
+            for nm in (left, right):
+                if nm not in self._datasets:
+                    raise FlightNotFound(f"no such flight: {nm}",
+                                         detail={"dataset": nm})
+            ls, rs = self._datasets[left], self._datasets[right]
+        out_schema = join_schema(ls, rs, keys)
+        base = uuid.uuid4().hex[:8]
+        tl, tr = f"{into}.__l{base}", f"{into}.__r{base}"
+        joins = 0
+        try:
+            self.shuffle_dataset(left, keys, tl)
+            self.shuffle_dataset(right, keys, tr)
+            body = json.dumps({"left": tl, "right": tr, "on": keys,
+                               "into": into}).encode()
+            for s in self.shards:
+                ack = json.loads(
+                    s.do_action_impl(Action("local-join", body))[0].body)
+                joins += ack["rows"]
+        finally:
+            for s in self.shards:
+                for tmp in (tl, tr):
+                    try:
+                        s.do_action_impl(Action("drop", tmp.encode()))
+                    except FlightError:
+                        pass
+        with self._dlock:
+            self._datasets[into] = out_schema
+        return {"dataset": into, "rows": joins, "on": keys}
+
     def do_action_impl(self, action: Action) -> list[ActionResult]:
         if action.type == "health":
             return [ActionResult(b"ok")]
@@ -1121,6 +1271,25 @@ class FlightClusterServer(FlightServerBase):
                 "layouts": layouts,
                 "shards": shard_stats,
             }
+            return [ActionResult(json.dumps(out).encode())]
+        if action.type == "aggregate":
+            # head-merged distributed aggregation: shards ship per-group
+            # state, the head merges and returns only the final result
+            from ...query.engine import QueryPlan
+
+            plan = QueryPlan.deserialize(action.body)
+            res = self.aggregate_plan(plan)
+            if isinstance(res, RecordBatch):  # grouped → columnar JSON
+                res = {"group_by": plan.group_by, "columns": res.to_pydict()}
+            return [ActionResult(json.dumps(res).encode())]
+        if action.type == "shuffle":
+            o = json.loads(action.body)
+            out = self.shuffle_dataset(o["dataset"], o["key"], o["into"],
+                                       o.get("num_partitions"))
+            return [ActionResult(json.dumps(out).encode())]
+        if action.type == "join":
+            o = json.loads(action.body)
+            out = self.join_datasets(o["left"], o["right"], o["on"], o["into"])
             return [ActionResult(json.dumps(out).encode())]
         if action.type == "register-dataset":
             # announces a dataset written straight to the shards (the
@@ -1286,6 +1455,47 @@ class FlightClusterClient:
         columns/rows cross the wire — the paper's Fig 8 pushdown win on top
         of the Fig 2 parallel-stream topology."""
         return self.scheduler(**sched_overrides).fetch(self.query_info(plan))
+
+    def aggregate(self, plan, **sched_overrides):
+        """Distributed grouped/scalar aggregation, merged client-side.
+
+        The head plans one partial-aggregate endpoint per shard; each shard
+        folds its slice into a per-group state batch (``sum``+``count``
+        pairs for ``mean``, running extrema — only group-sized state crosses
+        the wire) and this client merges the partials.  Returns
+        ``(result, TransferStats)`` where result is a per-group
+        ``RecordBatch`` for ``plan.group_by`` plans or the scalar dict for
+        ungrouped ones — element-equal to running ``query.engine.aggregate``
+        over the whole dataset on one node.  Replica failover and hedging
+        come from the scheduler exactly as for row reads."""
+        from ...query.engine import merge_partials
+        from .scheduler import _empty_batch
+
+        info = self.query_info(plan)
+        table, stats = self.scheduler(**sched_overrides).fetch(info)
+        partials = list(table.batches) or [_empty_batch(info.schema)]
+        return merge_partials(plan, partials), stats
+
+    # -- shuffle / join ----------------------------------------------------- #
+    def shuffle(self, name: str, key, into: str,
+                num_partitions: int | None = None) -> dict:
+        """Server-side hash shuffle of ``name`` by ``key`` into ``into``
+        (see ``FlightClusterServer.shuffle_dataset``)."""
+        body = {"dataset": name, "key": key, "into": into}
+        if num_partitions:
+            body["num_partitions"] = num_partitions
+        return json.loads(self.head.do_action(
+            Action("shuffle", json.dumps(body).encode()))[0].body)
+
+    def join(self, left: str, right: str, on, into: str | None = None,
+             **sched_overrides) -> tuple[Table, TransferStats]:
+        """Distributed equi-join: shuffle both sides by the join key, join
+        shard-locally, then fan the sharded result in.  Returns the joined
+        table plus the read stats (the join itself runs server-side)."""
+        into = into or f"{left}.join.{right}"
+        self.head.do_action(Action("join", json.dumps(
+            {"left": left, "right": right, "on": on, "into": into}).encode()))
+        return self.read(into, **sched_overrides)
 
     # -- streaming exchange fan-out ---------------------------------------- #
     def exchange(

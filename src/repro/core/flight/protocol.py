@@ -113,7 +113,15 @@ class QueryCommand:
 
     ``plan_bytes`` is ``QueryPlan.serialize()`` output; the ``plan`` property
     decodes lazily so this module never imports the query engine at import
-    time (the engine imports Flight for its service layer)."""
+    time (the engine imports Flight for its service layer).
+
+    The plan JSON is opaque at this layer — extending the plan (e.g. the
+    ``group_by`` key added for grouped partial aggregation) changes neither
+    the 0xC2 command layout nor these bytes' framing, and plans serialized
+    before the extension still parse (missing keys default empty).  A
+    command whose plan carries aggregations is redeemed as a *partial
+    aggregate*: its DoGet stream is per-group state batches, not rows
+    (see ``query.engine.partial_schema``)."""
 
     plan_bytes: bytes
     start: int = 0

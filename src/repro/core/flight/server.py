@@ -657,6 +657,25 @@ class FlightServerBase:
         }})
 
 
+def _query_out_schema(plan, schema: Schema) -> Schema:
+    """Schema a QueryCommand's DoGet stream carries.
+
+    Aggregating plans stream per-group *state* batches (the partial half of
+    the operator split), so the planned FlightInfo schema is the state
+    schema — which also makes empty shards merge cleanly (the scheduler
+    materializes an empty state batch from it).  Plain plans stream rows in
+    the projected schema.  ``group_by`` without aggregations is refused:
+    the plane has no distinct-rows operator."""
+    from ...query.engine import partial_schema  # lazy: engine imports this layer
+
+    if plan.group_by and not plan.aggregations:
+        raise FlightInvalidArgument(
+            "QueryPlan.group_by requires at least one aggregation")
+    if plan.aggregations:
+        return partial_schema(plan, schema)
+    return schema.select(plan.projection) if plan.projection else schema
+
+
 def _content_digest(schema: Schema, batches: list[RecordBatch]) -> str:
     """Stable content hash of a put payload (dedup key for retried puts).
 
@@ -742,6 +761,8 @@ class InMemoryFlightServer(FlightServerBase):
         self.queries_executed = 0
         self.query_rows_in = 0
         self.query_rows_out = 0
+        self.partial_aggs_executed = 0  # DoGet served per-group state, not rows
+        self.joins_executed = 0         # local-join actions run on this shard
         # DoPut dedup guard: dataset -> recent payload content hashes
         self.dedup_puts = cfg.dedup_puts
         self._recent_puts: dict[str, OrderedDict[str, dict]] = {}
@@ -832,7 +853,7 @@ class InMemoryFlightServer(FlightServerBase):
                                      detail={"dataset": plan.dataset})
             n = self._provider.info(plan.dataset)["batches"]
             schema = self._provider.schema(plan.dataset)
-        out_schema = schema.select(plan.projection) if plan.projection else schema
+        out_schema = _query_out_schema(plan, schema)
         lo = min(max(cmd.start, 0), n)
         hi = n if cmd.stop < 0 else min(cmd.stop, n)
         span = max(hi - lo, 0)
@@ -869,8 +890,15 @@ class InMemoryFlightServer(FlightServerBase):
             return self._info_for(name)
 
     def _execute_query(self, cmd: QueryCommand) -> tuple[Schema, Iterator[RecordBatch]]:
-        """Native QueryCommand execution: filter/project where the data lives."""
-        from ...query.engine import execute  # lazy: engine imports Flight's service layer
+        """Native QueryCommand execution: filter/project where the data lives.
+
+        A plan carrying aggregations runs the *partial* half of the operator
+        split instead: the stream is one per-group state batch (per-group
+        sums/counts/extrema — see ``query.engine.partial_schema``), not rows.
+        The caller (cluster head or client) merges state batches from every
+        shard with ``merge_partials`` — only group-sized state crosses the
+        wire, never the surviving rows."""
+        from ...query.engine import execute, partial_aggregate
 
         plan = cmd.plan
         with self._lock:
@@ -880,7 +908,15 @@ class InMemoryFlightServer(FlightServerBase):
             stop = cmd.stop if cmd.stop >= 0 else None
             batches = self._provider.read_batches(plan.dataset, cmd.start, stop)
             schema = self._provider.schema(plan.dataset)
-        out_schema = schema.select(plan.projection) if plan.projection else schema
+        out_schema = _query_out_schema(plan, schema)
+        if plan.aggregations:
+            state = partial_aggregate(plan, batches, schema)
+            with self._lock:
+                self.queries_executed += 1
+                self.partial_aggs_executed += 1
+                self.query_rows_in += sum(b.num_rows for b in batches)
+                self.query_rows_out += state.num_rows
+            return out_schema, iter([state])
         results = list(execute(plan, batches))
         with self._lock:
             self.queries_executed += 1
@@ -1250,8 +1286,8 @@ class InMemoryFlightServer(FlightServerBase):
                 names = ",".join(self._provider.list())
             return [ActionResult(names.encode())]
         if action.type == "aggregate":
-            # filtered aggregation where the data lives — only scalars cross
-            # the wire (absorbed from the retired FlightQueryService shim)
+            # filtered aggregation where the data lives — only scalars (or,
+            # for grouped plans, per-group result columns) cross the wire
             from ...query.engine import QueryPlan, aggregate  # lazy import cycle
 
             plan = QueryPlan.deserialize(action.body)
@@ -1260,7 +1296,34 @@ class InMemoryFlightServer(FlightServerBase):
                     raise FlightNotFound(f"no such dataset: {plan.dataset}",
                                          detail={"dataset": plan.dataset})
                 batches = self._provider.read_batches(plan.dataset)
-            return [ActionResult(json.dumps(aggregate(plan, batches)).encode())]
+                schema = self._provider.schema(plan.dataset)
+            res = aggregate(plan, batches, schema)
+            if isinstance(res, RecordBatch):  # grouped → columnar JSON
+                res = {"group_by": plan.group_by, "columns": res.to_pydict()}
+            return [ActionResult(json.dumps(res).encode())]
+        if action.type == "local-join":
+            # inner equi-join of two datasets living on this server; the
+            # result lands as a new local dataset (the per-shard leg of the
+            # cluster's shuffled join — key-aligned inputs, local output)
+            from ...query.engine import hash_join
+
+            spec = json.loads(action.body.decode())
+            on = spec["on"] if isinstance(spec["on"], list) else [spec["on"]]
+            with self._lock:
+                for name in (spec["left"], spec["right"]):
+                    if not self._provider.exists(name):
+                        raise FlightNotFound(f"no such dataset: {name}",
+                                             detail={"dataset": name})
+                lb = self._provider.read_batches(spec["left"])
+                rb = self._provider.read_batches(spec["right"])
+                ls = self._provider.schema(spec["left"])
+                rs = self._provider.schema(spec["right"])
+            joined = hash_join(lb, rb, on, ls, rs)
+            self.add_dataset(spec["into"], [joined], joined.schema)
+            with self._lock:
+                self.joins_executed += 1
+            return [ActionResult(json.dumps(
+                {"dataset": spec["into"], "rows": joined.num_rows}).encode())]
         if action.type == "health":
             return [ActionResult(b"ok")]
         if action.type == "heartbeat":
@@ -1280,6 +1343,8 @@ class InMemoryFlightServer(FlightServerBase):
                     "queries_executed": self.queries_executed,
                     "query_rows_in": self.query_rows_in,
                     "query_rows_out": self.query_rows_out,
+                    "partial_aggs_executed": self.partial_aggs_executed,
+                    "joins_executed": self.joins_executed,
                     "put_dedup_hits": self.put_dedup_hits,
                     "staged_txns": len(self._staged),
                     "staged_bytes": sum(t.nbytes for t in self._staged.values()),

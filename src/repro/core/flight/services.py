@@ -142,11 +142,20 @@ class ProjectService(ExchangeService):
 
 
 class RepartitionService(ExchangeService):
-    """Re-chunk the stream to ``params["rows"]`` rows per output batch.
+    """Re-chunk or key-partition the stream — the shuffle plane's transform.
 
-    Deliberately non-1:1 in both directions (N small inputs → one output,
-    one large input → N outputs): the regression test for the windowed
-    sender never deadlocking on a consumer that buffers before emitting."""
+    Two modes, selected by params:
+
+    * ``{"rows": N}`` — historical re-chunking to N rows per output batch.
+      Deliberately non-1:1 in both directions (N small inputs → one output,
+      one large input → N outputs): the regression test for the windowed
+      sender never deadlocking on a consumer that buffers before emitting.
+    * ``{"key": [cols], "num_partitions": N, "partition": p}`` — keyed
+      partitioning: emit only the rows whose key-tuple hash buckets to
+      partition ``p`` of ``N`` (shuffle.row_partitions — the same stable
+      hash as ``HashPlacement``).  A shuffle source drives one exchange per
+      destination partition over its local batches; the union of the N
+      partition streams is exactly the input, key-disjoint."""
 
     name = "repartition"
 
@@ -156,13 +165,44 @@ class RepartitionService(ExchangeService):
             raise FlightInvalidArgument("repartition service needs a positive 'rows' param")
         return rows
 
+    def _keyed(self, params: dict) -> tuple[list[str], int, int]:
+        keys = params.get("key")
+        if isinstance(keys, str):
+            keys = [keys]
+        if (not isinstance(keys, list) or not keys
+                or not all(isinstance(k, str) for k in keys)):
+            raise FlightInvalidArgument(
+                "keyed repartition needs a 'key' column name or list")
+        n = params.get("num_partitions")
+        p = params.get("partition")
+        if not isinstance(n, int) or n < 1:
+            raise FlightInvalidArgument(
+                "keyed repartition needs a positive 'num_partitions' param")
+        if not isinstance(p, int) or not 0 <= p < n:
+            raise FlightInvalidArgument(
+                f"keyed repartition needs a 'partition' in [0, {n})")
+        return keys, n, p
+
     def check_params(self, params):
-        self._rows(params)
+        if "key" in params:
+            self._keyed(params)
+        else:
+            self._rows(params)
 
     def out_schema(self, in_schema, params):
         return in_schema
 
     def transform(self, in_schema, batches, params):
+        if "key" in params:
+            from .shuffle import row_partitions
+
+            keys, n, p = self._keyed(params)
+            for b in batches:
+                ids = row_partitions(b, keys, n)
+                sub = b.filter(ids == p)
+                if sub.num_rows:
+                    yield sub
+            return
         rows = self._rows(params)
         held: list[RecordBatch] = []
         held_rows = 0

@@ -1,0 +1,88 @@
+"""Stable keyed row partitioning — the hash plane under shuffles and placement.
+
+One hashing discipline serves both layers: ``HashPlacement`` (rows → shards
+at ingest) and the keyed ``repartition`` exchange (rows → partitions during a
+shuffle) delegate here, so a dataset ingested with ``HashPlacement("k")`` on
+N shards is *already* shuffle-aligned for a group-by or join on ``k`` across
+N partitions — the shuffle becomes a no-op move.  Hashes are salt-free and
+PYTHONHASHSEED-independent: equal keys map to equal partitions across
+processes, runs, and machines.
+
+Per-column u64 lanes: integers multiply by the Fibonacci constant; floats
+canonicalize ``-0.0 → 0.0`` and NaN payloads first, then hash their bits;
+varlen (and other non-numpy) columns fall back to ``crc32(repr(value))``
+(masked entries surface as ``None`` → one deterministic null lane).
+Multi-key tuples fold lanes with xor-multiply before bucketing.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from ..recordbatch import RecordBatch
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing constant
+_SHIFT = np.uint64(33)
+
+
+def column_lane(arr) -> np.ndarray:
+    """Per-row u64 hash lane for one column (pre-bucketing)."""
+    try:
+        vals = arr.to_numpy()
+    except TypeError:
+        vals = None
+    if vals is not None and vals.dtype == np.dtype(bool):
+        vals = vals.astype(np.uint64)
+    if vals is not None and np.issubdtype(vals.dtype, np.integer):
+        return vals.astype(np.uint64) * _MIX
+    if vals is not None and np.issubdtype(vals.dtype, np.floating):
+        f = vals.astype(np.float64)
+        f = np.where(f == 0.0, 0.0, f)            # -0.0 == 0.0 → same bucket
+        f = np.where(np.isnan(f), np.nan, f)      # canonical NaN payload
+        return f.view(np.uint64) * _MIX
+    return np.array(
+        [zlib.crc32(repr(v).encode()) for v in arr.to_pylist()], dtype=np.uint64
+    ) * _MIX
+
+
+def row_partitions(batch: RecordBatch, keys: list[str], num_partitions: int) -> np.ndarray:
+    """Partition id per row: stable hash of the key tuple, mod ``num_partitions``.
+
+    The single-key path reproduces ``HashPlacement.row_shards`` bucket-for-
+    bucket (the placement delegates here), which is what makes hash-placed
+    datasets shuffle-free for same-key aggregation and joins."""
+    if not keys:
+        raise ValueError("row_partitions needs at least one key column")
+    n = np.uint64(num_partitions)
+    if len(keys) == 1:
+        # exact replica of the historical HashPlacement.row_shards buckets:
+        # int/float columns via the MIX lane, everything else (varlen, bool)
+        # via raw crc32 % n — existing hash-placed layouts must not move.
+        arr = batch.column(keys[0])
+        try:
+            vals = arr.to_numpy()
+        except TypeError:
+            vals = None
+        if vals is not None and (np.issubdtype(vals.dtype, np.integer)
+                                 or np.issubdtype(vals.dtype, np.floating)):
+            return ((column_lane(arr) >> _SHIFT) % n).astype(np.int64)
+        return np.array(
+            [zlib.crc32(repr(v).encode()) % num_partitions
+             for v in arr.to_pylist()],
+            dtype=np.int64,
+        )
+    h = np.full(batch.num_rows, _MIX, dtype=np.uint64)
+    for k in keys:
+        h = (h ^ column_lane(batch.column(k))) * _MIX
+    return ((h >> _SHIFT) % n).astype(np.int64)
+
+
+def partition_batch(
+    batch: RecordBatch, keys: list[str], num_partitions: int
+) -> list[RecordBatch]:
+    """Split one batch into ``num_partitions`` key-disjoint sub-batches
+    (index ``p`` holds every row whose key tuple hashes to ``p``; empty
+    partitions are zero-row batches, kept so callers can zip by index)."""
+    ids = row_partitions(batch, keys, num_partitions)
+    return [batch.filter(ids == p) for p in range(num_partitions)]

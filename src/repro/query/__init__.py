@@ -1,4 +1,14 @@
 """Query subsystem: pushdown engine + Flight query service + row baselines."""
-from .engine import QueryPlan, aggregate, execute, execute_batch  # noqa: F401
+from .engine import (  # noqa: F401
+    QueryPlan,
+    aggregate,
+    execute,
+    execute_batch,
+    hash_join,
+    join_schema,
+    merge_partials,
+    partial_aggregate,
+    partial_schema,
+)
 from .expr import col, lit  # noqa: F401
 from .service import FlightQueryService  # noqa: F401

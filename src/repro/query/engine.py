@@ -5,6 +5,17 @@
 columnar: predicates produce selection masks, projections are zero-copy
 column subsets, and only then do surviving rows materialize — the ordering
 the paper credits for the 20-30× over row-based protocols.
+
+Aggregation follows the partial/final operator split (the "Mainlining
+Databases" shape): ``partial_aggregate`` folds batches into a per-group
+*state* RecordBatch wherever the data lives, and ``merge_partials`` merges
+any number of state batches — from one node or from N shards — into the
+final result.  The state for ``mean`` is a ``(sum, count)`` pair, so the
+merge is exact up to float-summation order regardless of how the rows were
+split into batches or shards; ``min``/``max`` states keep the value
+column's native dtype.  A plan with ``group_by`` keys produces one output
+row per distinct key tuple; without keys the same code path degenerates to
+a single global group and ``aggregate`` returns the historical scalar dict.
 """
 from __future__ import annotations
 
@@ -15,9 +26,17 @@ from typing import Iterator
 import numpy as np
 
 from ..core.recordbatch import RecordBatch
-from .expr import Expr, evaluate, referenced_columns
+from ..core.schema import Field, PrimitiveType, Schema, float64, int64
+from .expr import (
+    Expr,
+    evaluate,
+    key_column,
+    key_sort_token,
+    key_tuples,
+    referenced_columns,
+)
 
-_AGGS = {"sum": np.sum, "mean": np.mean, "min": np.min, "max": np.max, "count": len}
+AGG_OPS = ("sum", "mean", "min", "max", "count")
 
 
 @dataclass
@@ -27,6 +46,7 @@ class QueryPlan:
     predicate: Expr | None = None
     aggregations: list[tuple[str, str]] = field(default_factory=list)  # (op, col)
     limit: int | None = None
+    group_by: list[str] = field(default_factory=list)  # aggregation key columns
 
     def serialize(self) -> bytes:
         return json.dumps({
@@ -35,6 +55,7 @@ class QueryPlan:
             "predicate": self.predicate.to_json() if self.predicate else None,
             "aggregations": self.aggregations,
             "limit": self.limit,
+            "group_by": self.group_by,
         }).encode()
 
     @classmethod
@@ -46,6 +67,9 @@ class QueryPlan:
             predicate=Expr.from_json(o["predicate"]) if o["predicate"] else None,
             aggregations=[tuple(a) for a in o["aggregations"]],
             limit=o["limit"],
+            # pre-group-by plans (PR <= 8) carry no "group_by" key: they
+            # deserialize to an ungrouped plan, byte-compatible behavior
+            group_by=list(o.get("group_by") or []),
         )
 
     def is_passthrough(self, all_names: list[str]) -> bool:
@@ -58,6 +82,7 @@ class QueryPlan:
             self.predicate is None
             and self.limit is None
             and not self.aggregations
+            and not self.group_by
             and (self.projection is None or list(self.projection) == list(all_names))
         )
 
@@ -67,6 +92,7 @@ class QueryPlan:
             need |= referenced_columns(self.predicate)
         for _, c in self.aggregations:
             need.add(c)
+        need |= set(self.group_by)
         return [n for n in all_names if n in need]
 
 
@@ -97,24 +123,303 @@ def execute(plan: QueryPlan, batches: list[RecordBatch]) -> Iterator[RecordBatch
                 return
 
 
-def aggregate(plan: QueryPlan, batches: list[RecordBatch]) -> dict[str, float]:
-    """Filtered aggregation (server-side; only scalars cross the wire)."""
-    acc: dict[str, list] = {f"{op}({c})": [] for op, c in plan.aggregations}
-    n = 0
-    for b in execute(QueryPlan(plan.dataset, None, plan.predicate), batches):
-        n += b.num_rows
+# ---------------------------------------------------------------------------
+# partial/final aggregation
+# ---------------------------------------------------------------------------
+#
+# State-column contract (the shard <-> merger wire schema): for output key
+# k = "op(col)" a partial batch carries, after the group-by key columns,
+#   sum   -> k        (int64 for integer/bool columns, else float64)
+#   count -> k        (int64; counts surviving rows)
+#   min   -> k        (value column's native dtype)
+#   max   -> k        (value column's native dtype)
+#   mean  -> k#sum (float64) and k#cnt (int64)
+# Merging state batches is itself a grouped aggregation: sum/count/#sum/#cnt
+# columns merge by addition, min by minimum, max by maximum.
+
+
+def _state_fields(plan: QueryPlan, in_schema: Schema) -> list[tuple[str, str, str | None]]:
+    """(state column name, merge kind, source column) per state column.
+
+    kind: 'sum' folds by addition from source values, 'cnt' counts rows,
+    'min'/'max' fold by extremum.  At merge level 'cnt' columns fold by
+    addition over the state values."""
+    out: list[tuple[str, str, str | None]] = []
+    for op, c in plan.aggregations:
+        if op not in AGG_OPS:
+            raise ValueError(f"unknown aggregation op {op!r}")
+        key = f"{op}({c})"
+        if op == "mean":
+            out.append((f"{key}#sum", "sum", c))
+            out.append((f"{key}#cnt", "cnt", c))
+        elif op == "count":
+            out.append((key, "cnt", c))
+        elif op == "sum":
+            out.append((key, "sum", c))
+        else:
+            out.append((key, op, c))
+    return out
+
+
+def _state_dtype(kind: str, vtype) -> PrimitiveType:
+    if kind == "cnt":
+        return int64
+    if kind == "sum":
+        if not isinstance(vtype, PrimitiveType):
+            raise TypeError(f"cannot sum non-primitive column of type {vtype!r}")
+        return float64 if np.issubdtype(vtype.np_dtype, np.floating) else int64
+    if not isinstance(vtype, PrimitiveType):
+        raise TypeError(f"cannot {kind} non-primitive column of type {vtype!r}")
+    return vtype  # min/max keep the native dtype
+
+
+def partial_schema(plan: QueryPlan, in_schema: Schema) -> Schema:
+    """The per-group state schema a partial-aggregate stream carries."""
+    fields = [Field(k, in_schema.field(k).type) for k in plan.group_by]
+    for name, kind, c in _state_fields(plan, in_schema):
+        fields.append(Field(name, _state_dtype(kind, in_schema.field(c).type)))
+    return Schema(tuple(fields))
+
+
+def _extremum_init(kind: str, dtype):
+    """Identity element for a grouped min/max accumulator of ``dtype``."""
+    if dtype == np.dtype(bool):
+        return dtype.type(kind == "min")
+    if np.issubdtype(dtype, np.floating):
+        return np.inf if kind == "min" else -np.inf
+    info = np.iinfo(dtype)
+    return info.max if kind == "min" else info.min
+
+
+def _accumulate(plan: QueryPlan, batches, state_schema: Schema, merging: bool):
+    """Fold batches into (ordered key tuples, per-state-column arrays).
+
+    ``merging=False`` folds raw data batches (already filtered); the source
+    of each state column is the aggregation's value column.  ``merging=True``
+    folds state batches: the source is the state column itself and 'cnt'
+    columns fold by addition.  Both passes share the grouping machinery, so
+    a merge of partials equals re-aggregating the state rows."""
+    n_keys = len(plan.group_by)
+    kinds = []  # (state name, fold kind, source column, state dtype)
+    for f, (name, kind, src) in zip(
+            state_schema.fields[n_keys:], _state_fields(plan, state_schema)):
+        if merging:
+            kinds.append((f.name, "sum" if kind == "cnt" else kind, f.name,
+                          f.type.np_dtype))
+        else:
+            kinds.append((f.name, kind, src, f.type.np_dtype))
+
+    ids: dict[tuple, int] = {}
+    order: list[tuple] = []
+    accs = [np.empty(0, dtype=k[3]) for k in kinds]
+    total = 0
+    for b in batches:
+        if b.num_rows == 0:
+            continue
+        keys = key_tuples(b, plan.group_by)
+        inv = np.empty(len(keys), dtype=np.int64)
+        for i, k in enumerate(keys):
+            g = ids.get(k)
+            if g is None:
+                g = len(order)
+                ids[k] = g
+                order.append(k)
+            inv[i] = g
+        n = len(order)
+        for j, (name, kind, src, dtype) in enumerate(kinds):
+            acc = accs[j]
+            if len(acc) < n:  # new groups this batch: pad with fold identity
+                fillv = 0 if kind in ("sum", "cnt") else _extremum_init(kind, dtype)
+                acc = np.concatenate(
+                    [acc, np.full(n - len(acc), fillv, dtype=dtype)])
+            if kind == "cnt":
+                acc = acc + np.bincount(inv, minlength=n).astype(np.int64)
+            else:
+                vals = b.column(src).to_numpy()
+                if kind == "sum":
+                    cur = np.zeros(n, dtype=dtype)
+                    np.add.at(cur, inv, vals.astype(dtype, copy=False))
+                    acc = acc + cur
+                else:
+                    ufunc = np.minimum if kind == "min" else np.maximum
+                    ufunc.at(acc, inv, vals.astype(dtype, copy=False))
+            accs[j] = acc
+        total += b.num_rows
+    # deterministic group order: sorted by canonical key (stable across a
+    # single pass and any shard/batch split of the same rows)
+    perm = sorted(range(len(order)), key=lambda g: key_sort_token(order[g]))
+    keys_sorted = [order[g] for g in perm]
+    take = np.array(perm, dtype=np.int64)
+    cols = [acc[take] for acc in accs]
+    return keys_sorted, cols, total
+
+
+def _state_batch(plan: QueryPlan, state_schema: Schema, keys, cols) -> RecordBatch:
+    from ..core.array import Array
+
+    arrays = []
+    for i, name in enumerate(plan.group_by):
+        f = state_schema.fields[i]
+        vals = key_column([k[i] for k in keys], f.type)
+        arrays.append(Array.from_numpy(vals) if isinstance(vals, np.ndarray)
+                      else Array.from_pylist(vals, f.type))
+    for f, col in zip(state_schema.fields[len(plan.group_by):], cols):
+        arrays.append(Array.from_numpy(col))
+    return RecordBatch(state_schema, arrays)
+
+
+def partial_aggregate(
+    plan: QueryPlan, batches: list[RecordBatch], schema: Schema | None = None
+) -> RecordBatch:
+    """Shard-side half of the operator split: fold batches into one
+    per-group state batch (filter first, then grouped accumulation).
+
+    Returns a zero-row state batch when no rows survive — `merge_partials`
+    treats it as "this shard saw nothing", so empty shards/batches and
+    empty-after-filter inputs never poison the merge (the pre-split
+    ``mean`` produced NaN here)."""
+    if schema is None:
+        if not batches:
+            raise ValueError("partial_aggregate needs batches or an explicit schema")
+        schema = batches[0].schema
+    if not plan.aggregations:
+        raise ValueError("partial_aggregate needs at least one aggregation")
+    for k in plan.group_by:
+        schema.field(k)  # raises KeyError on unknown key columns
+    state_schema = partial_schema(plan, schema)
+    filtered = execute(QueryPlan(plan.dataset, None, plan.predicate), batches)
+    keys, cols, _ = _accumulate(plan, filtered, state_schema, merging=False)
+    return _state_batch(plan, state_schema, keys, cols)
+
+
+def merge_partials(
+    plan: QueryPlan, partials: list[RecordBatch]
+) -> "RecordBatch | dict[str, float]":
+    """Final half of the operator split: merge state batches, finalize.
+
+    Grouped plans return a RecordBatch (key columns + one column per
+    aggregation; ``mean`` finalized as sum/count in float64, other ops in
+    their state dtype).  Ungrouped plans return the historical scalar dict
+    (``count`` 0.0 and other ops NaN when nothing survived anywhere)."""
+    if not partials:
+        raise ValueError("merge_partials needs at least one state batch")
+    state_schema = partials[0].schema
+    keys, cols, _ = _accumulate(plan, partials, state_schema, merging=True)
+    merged = _state_batch(plan, state_schema, keys, cols)
+    n_keys = len(plan.group_by)
+    states = {f.name: c for f, c in zip(
+        merged.schema.fields[n_keys:], cols)}
+
+    def final(op: str, c: str) -> np.ndarray:
+        key = f"{op}({c})"
+        if op == "mean":
+            s, n = states[f"{key}#sum"], states[f"{key}#cnt"]
+            return np.where(n > 0, s / np.maximum(n, 1), np.nan)
+        return states[key]
+
+    if plan.group_by:
+        from ..core.array import Array
+
+        out_fields = list(merged.schema.fields[:n_keys])
+        arrays = list(merged.columns[:n_keys])
         for op, c in plan.aggregations:
-            if op == "count":
-                continue
-            acc[f"{op}({c})"].append(b.column(c).to_numpy())
+            vals = final(op, c)
+            out_fields.append(Field(f"{op}({c})", PrimitiveType(vals.dtype)))
+            arrays.append(Array.from_numpy(vals))
+        return RecordBatch(Schema(tuple(out_fields)), arrays)
     out: dict[str, float] = {}
+    empty = merged.num_rows == 0
     for op, c in plan.aggregations:
         key = f"{op}({c})"
-        if op == "count":
-            out[key] = float(n)
-        elif acc[key]:
-            arr = np.concatenate(acc[key])
-            out[key] = float(_AGGS[op](arr))
+        if empty:
+            out[key] = 0.0 if op == "count" else float("nan")
         else:
-            out[key] = float("nan")
+            out[key] = float(final(op, c)[0])
     return out
+
+
+def aggregate(
+    plan: QueryPlan, batches: list[RecordBatch], schema: Schema | None = None
+) -> "dict[str, float] | RecordBatch":
+    """Single-node aggregation — the oracle the distributed path must match.
+
+    Runs the same partial/final split in one process: one state pass over
+    the filtered batches, one merge.  ``mean`` therefore accumulates
+    (sum, count) pairs instead of concatenating value arrays — the historic
+    concat-then-average path both wasted memory and returned NaN on
+    empty-after-filter inputs where count should be 0."""
+    return merge_partials(plan, [partial_aggregate(plan, batches, schema)])
+
+
+# ---------------------------------------------------------------------------
+# equi-join kernel
+# ---------------------------------------------------------------------------
+
+
+def join_schema(left: Schema, right: Schema, on: list[str],
+                suffix: str = "_r") -> Schema:
+    """Output schema of an inner equi-join: left fields, then right fields
+    minus the join keys, name-collisions suffixed."""
+    taken = set(left.names)
+    fields = list(left.fields)
+    for f in right.fields:
+        if f.name in on:
+            continue
+        name = f.name if f.name not in taken else f.name + suffix
+        taken.add(name)
+        fields.append(Field(name, f.type))
+    return Schema(tuple(fields))
+
+
+def hash_join(
+    left_batches: list[RecordBatch],
+    right_batches: list[RecordBatch],
+    on: list[str],
+    left_schema: Schema | None = None,
+    right_schema: Schema | None = None,
+    suffix: str = "_r",
+) -> RecordBatch:
+    """Inner equi-join on same-named key columns (build right, probe left).
+
+    Keys canonicalize like group-by keys (NaNs join each other, masked
+    varlen keys join as null) — the same semantics whether the join runs
+    single-node or per-partition after a hash shuffle, which is what makes
+    the shuffled join's union of partition joins equal this oracle."""
+    from ..core.array import Array
+    from ..core.recordbatch import Table
+
+    if left_schema is None:
+        if not left_batches:
+            raise ValueError("hash_join needs left batches or left_schema")
+        left_schema = left_batches[0].schema
+    if right_schema is None:
+        if not right_batches:
+            raise ValueError("hash_join needs right batches or right_schema")
+        right_schema = right_batches[0].schema
+    out_schema = join_schema(left_schema, right_schema, on, suffix)
+    left_batches = [b for b in left_batches if b.num_rows]
+    right_batches = [b for b in right_batches if b.num_rows]
+    if not left_batches or not right_batches:
+        return RecordBatch(
+            out_schema, [Array.from_pylist([], f.type) for f in out_schema.fields])
+    lb = Table(left_batches).combine()
+    rb = Table(right_batches).combine()
+    build: dict[tuple, list[int]] = {}
+    for i, k in enumerate(key_tuples(rb, on)):
+        build.setdefault(k, []).append(i)
+    l_idx: list[int] = []
+    r_idx: list[int] = []
+    for i, k in enumerate(key_tuples(lb, on)):
+        for j in build.get(k, ()):
+            l_idx.append(i)
+            r_idx.append(j)
+    li = np.array(l_idx, dtype=np.int64)
+    ri = np.array(r_idx, dtype=np.int64)
+    lt = lb.take(li)
+    rt = rb.take(ri)
+    cols = list(lt.columns)
+    for f, c in zip(rb.schema.fields, rt.columns):
+        if f.name in on:
+            continue
+        cols.append(c)
+    return RecordBatch(out_schema, cols)

@@ -109,3 +109,82 @@ def referenced_columns(expr: Expr) -> set[str]:
     if isinstance(expr, BinOp):
         return referenced_columns(expr.lhs) | referenced_columns(expr.rhs)
     return set()
+
+
+# ---------------------------------------------------------------------------
+# grouping/join key extraction
+# ---------------------------------------------------------------------------
+
+
+class _NanKey:
+    """Canonical stand-in for float NaN in group/join keys.
+
+    NaN != NaN would make every NaN row its own group (and make dict-based
+    grouping diverge between a single pass and a merge of partials), so key
+    extraction collapses all NaNs onto this singleton.  ``key_column`` maps
+    it back to ``float("nan")`` when materializing output key columns."""
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:
+        return "<nan-key>"
+
+
+NAN_KEY = _NanKey()
+
+
+def canonical_key(v):
+    """Canonicalize one key scalar so equal keys compare/hash equal.
+
+    Floats: NaN -> ``NAN_KEY`` (all NaNs one group), -0.0 -> 0.0 (same
+    group regardless of which batch/shard saw which sign first).  ``None``
+    (a masked varlen value) passes through — nulls form their own group."""
+    if isinstance(v, float):
+        if v != v:
+            return NAN_KEY
+        if v == 0.0:
+            return 0.0
+    return v
+
+
+def key_tuples(batch: RecordBatch, names: list[str]) -> list[tuple]:
+    """Per-row key tuples for grouping/partitioning, canonicalized.
+
+    Primitive columns read via ``to_numpy`` (validity masks do not affect
+    the values, matching the aggregation kernels); varlen columns via
+    ``to_pylist`` (masked entries surface as ``None`` keys)."""
+    if not names:
+        return [()] * batch.num_rows
+    cols = []
+    for n in names:
+        arr = batch.column(n)
+        try:
+            vals = arr.to_numpy().tolist()
+        except TypeError:
+            vals = arr.to_pylist()
+        cols.append([canonical_key(v) for v in vals])
+    return list(zip(*cols))
+
+
+def key_column(values: list, type) -> "np.ndarray | list":
+    """Materialize one output key column from canonicalized key scalars."""
+    from ..core.schema import PrimitiveType
+
+    out = [float("nan") if v is NAN_KEY else v for v in values]
+    if isinstance(type, PrimitiveType):
+        return np.array(out, dtype=type.np_dtype)
+    return out
+
+
+def key_sort_token(key: tuple) -> tuple:
+    """A total order over canonicalized key tuples (None/NaN sort last),
+    so grouped output row order is deterministic on every node."""
+    tok = []
+    for v in key:
+        if v is None:
+            tok.append((2, ""))
+        elif v is NAN_KEY:
+            tok.append((1, ""))
+        else:
+            tok.append((0, v))
+    return tuple(tok)

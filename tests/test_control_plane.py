@@ -109,6 +109,42 @@ class TestCommands:
         assert isinstance(cmd, QueryCommand)
         assert cmd.plan.dataset == "taxi" and cmd.start == 0 and cmd.stop == -1
 
+    def test_grouped_queryplan_golden_bytes(self):
+        """Pin the extended plan JSON: ``group_by`` rides inside the opaque
+        plan payload — the 0xC2 framing around it is unchanged."""
+        plan = QueryPlan("t", aggregations=[("mean", "v")], group_by=["g"])
+        assert plan.serialize() == (
+            b'{"dataset": "t", "projection": null, "predicate": null,'
+            b' "aggregations": [["mean", "v"]], "limit": null,'
+            b' "group_by": ["g"]}'
+        )
+        cmd = QueryCommand.for_plan(plan, 1, 3, shard=0)
+        raw = cmd.to_bytes()
+        # identical framing bytes as the pre-group-by golden test above
+        head = "c2" "01" "02" + "0100000000000000" + "0300000000000000" + "00000000"
+        assert raw.hex().startswith(head)
+        back = parse_command(raw)
+        assert back == cmd
+        assert back.plan.group_by == ["g"]
+        assert back.plan.aggregations == [("mean", "v")]
+
+    def test_legacy_plan_without_group_by_still_parses_and_executes(self):
+        """A pre-PR-9 plan JSON (no ``group_by`` key) must deserialize to an
+        ungrouped plan and execute unchanged."""
+        legacy = json.dumps({
+            "dataset": "t", "projection": ["a"],
+            "predicate": (col("a") > 50).to_json(),
+            "aggregations": [], "limit": None,
+        }).encode()
+        cmd = parse_command(legacy)
+        assert isinstance(cmd, QueryCommand)
+        assert cmd.plan.group_by == []
+        batches = make_batches(n=2, rows=200)
+        out = list(execute(cmd.plan, batches))
+        expect = sum(int((b.column("a").to_numpy() > 50).sum()) for b in batches)
+        assert sum(b.num_rows for b in out) == expect
+        assert all(b.schema.names == ["a"] for b in out)
+
     def test_ticket_range_shim(self):
         t = Ticket.for_range("ds", 2, 5, shard=1)
         assert t.raw[0] == 0xC2  # binary by default
