@@ -1,0 +1,97 @@
+"""Telemetry overhead: the bench_wire cache-warm DoGet hot path, swept over
+``ServerConfig(telemetry=...)``.
+
+The telemetry plane's acceptance bar is "observability is not a tax": with
+histograms on (``metrics``) and with full caller-sampled tracing on *and a
+trace actually riding every call* (``full`` — the client wraps each fetch in
+``Tracer.trace`` so the server records spans and stage timings), cache-warm
+DoGet throughput must stay within 5% of ``telemetry="off"``.
+
+Configuration matches bench_wire's shipped default (binary metadata +
+coalescing + encode cache) at the two interesting sizes: 4 KiB batches —
+the metadata/syscall-bound regime where any per-RPC bookkeeping would show
+up first — and 64 KiB for the mid-size path.  Reported per mode × size:
+seconds, MB/s, msgs/s and ``ratio_vs_off`` (``full`` rows are the gated
+figure; < 0.95 fails the issue's acceptance bar).  ``traced_spans`` on the
+``full`` rows proves tracing was actually exercised, not just enabled.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.flight import (FlightClient, FlightDescriptor,
+                               InMemoryFlightServer, Tracer)
+from repro.core.flight.server import ServerConfig
+
+from .common import Timing, records_batch
+
+MODES = ("off", "metrics", "full")
+
+
+def _best_of(fn, repeats: int = 3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True) -> list[Timing]:
+    out: list[Timing] = []
+    for size in (4 << 10, 64 << 10):
+        rows = max(1, size // 32)
+        n_batches = 64 if size >= (64 << 10) else 256
+        if not quick:
+            n_batches *= 4
+        batches = [records_batch(rows, seed=s) for s in range(n_batches)]
+        nbytes = sum(b.nbytes() for b in batches)
+        off_secs = None
+        for mode in MODES:
+            srv = InMemoryFlightServer(
+                config=ServerConfig(batches_per_endpoint=0, telemetry=mode),
+            ).serve_tcp()
+            try:
+                srv.add_dataset("t", batches)
+                client = FlightClient(f"tcp://127.0.0.1:{srv.port}")
+                ticket = client.get_flight_info(
+                    FlightDescriptor.for_path("t")).endpoints[0].ticket
+                tracer = Tracer()
+
+                if mode == "full":
+                    def fetch():
+                        with tracer.trace("bench-fetch"):
+                            n = sum(1 for _ in client.do_get(ticket))
+                            assert n == n_batches
+                else:
+                    def fetch():
+                        n = sum(1 for _ in client.do_get(ticket))
+                        assert n == n_batches
+
+                fetch()  # warm connections + the encode cache
+                secs = _best_of(fetch)
+                if mode == "off":
+                    off_secs = secs
+                extra = {
+                    "mode": mode, "batch_bytes": size, "n_batches": n_batches,
+                    "msgs_per_s": round(n_batches / secs, 1),
+                }
+                if off_secs and mode != "off":
+                    extra["ratio_vs_off"] = round(off_secs / secs, 3)
+                if mode == "full":
+                    extra["traced_spans"] = srv.telemetry.spans.recorded
+                out.append(Timing(
+                    f"telemetry_doget_tcp_{mode}_b{size}", secs, nbytes,
+                    extra=extra))
+            finally:
+                srv.shutdown()
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit_bench_json
+
+    timings = run()
+    for t in timings:
+        print(t.csv() + (f" {t.extra}" if t.extra else ""))
+    emit_bench_json("telemetry", timings)

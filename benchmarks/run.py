@@ -20,7 +20,7 @@ def main() -> None:
     from . import (bench_cluster, bench_concurrency, bench_endpoints,
                    bench_exchange, bench_export, bench_fault, bench_kernels,
                    bench_protocols, bench_query, bench_serde, bench_storage,
-                   bench_transfer, bench_wire)
+                   bench_telemetry, bench_transfer, bench_wire)
     from .common import emit_bench_json
     suites = {
         "transfer": bench_transfer,    # Fig 2/3
@@ -34,12 +34,13 @@ def main() -> None:
         "storage": bench_storage,      # provider plane: disk vs memory DoGet
         "concurrency": bench_concurrency,  # C10k: event loop vs thread/conn
         "fault": bench_fault,          # kill-a-shard-mid-read recovery sweep
+        "telemetry": bench_telemetry,  # observability overhead: off/metrics/full
         "serde": bench_serde,          # §1 claim
         "kernels": bench_kernels,      # ours
     }
     # recorded to BENCH_<name>.json
     json_suites = {"cluster", "wire", "query", "exchange", "storage",
-                   "concurrency", "fault"}
+                   "concurrency", "fault", "telemetry"}
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

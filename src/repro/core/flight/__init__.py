@@ -80,6 +80,21 @@ from .server import (  # noqa: F401
     ServerConfig,
     parse_txn_body,
 )
+from .telemetry import (  # noqa: F401
+    HDR_PARENT,
+    HDR_SPAN,
+    HDR_TRACE,
+    LogHistogram,
+    ServerTelemetry,
+    Span,
+    TraceContext,
+    Tracer,
+    batch_to_rows,
+    batch_to_spans,
+    decode_telemetry_batch,
+    metrics_to_batch,
+    spans_to_batch,
+)
 from .storage import (  # noqa: F401
     DiskStorageProvider,
     MemoryStorageProvider,

@@ -50,6 +50,7 @@ from .protocol import (
 from .protocol import StagedPutCommand
 from .scheduler import ParallelStreamScheduler, TransferStats
 from .server import FlightServerBase
+from .telemetry import HDR_TRACE, propagation_headers
 from .transport import FrameConnection, dial
 
 
@@ -196,12 +197,22 @@ class FlightClient:
     def _prepare(self, payload: dict, conn: FrameConnection,
                  options: CallOptions | None) -> None:
         payload.setdefault("token", self.token)
+        opt_json: dict = {}
         if options is not None:
             opt_json = options.to_json()
-            if opt_json:
-                payload["options"] = opt_json
             if options.timeout is not None:
                 conn.sock.settimeout(options.timeout)
+        # ambient trace propagation: when this thread has an active span (a
+        # client Tracer, or a traced server handler making downstream calls)
+        # its context rides every outgoing RPC, unless the caller already
+        # pinned explicit trace headers (scheduler endpoint fetches do)
+        trace = propagation_headers()
+        if trace is not None:
+            hdrs = opt_json.get("headers")
+            if not hdrs or HDR_TRACE not in hdrs:
+                opt_json = {**opt_json, "headers": {**trace, **(hdrs or {})}}
+        if opt_json:
+            payload["options"] = opt_json
 
     def _reset_deadline(self, conn: FrameConnection, options: CallOptions | None) -> None:
         if options is not None and options.timeout is not None:

@@ -76,6 +76,13 @@ from .protocol import (
 )
 from .scheduler import ParallelStreamScheduler, TransferStats
 from .shuffle import row_partitions
+from .telemetry import (
+    decode_telemetry_batch,
+    encode_telemetry_batch,
+    merge_telemetry_batches,
+    propagation_headers,
+    telemetry_action,
+)
 from .server import (
     FlightServerBase,
     InMemoryFlightServer,
@@ -624,6 +631,10 @@ class FlightClusterServer(FlightServerBase):
         scheduler's failover (resume-skip) and hedged reads get real
         replicas to escape to without any scheduler-side changes."""
         endpoints, records, nbytes = [], 0, 0
+        # planner-side trace stamp: when this GetFlightInfo runs under a
+        # traced middleware span, every endpoint carries its context so the
+        # scheduler's shard fetches stitch under the head's span
+        trace = propagation_headers()
         for sl in lay.slices:
             hs = self._holders_alive(sl)  # raises when a slice lost all copies
             first = next((h for h in hs if self.shards[h].storage.exists(sl.key)), None)
@@ -633,10 +644,13 @@ class FlightClusterServer(FlightServerBase):
             if not info["batches"]:
                 continue
             locs = tuple(l for h in hs for l in self.shards[h].locations())
+            md = {"shard": first, "slice": sl.index, "holders": hs}
+            if trace is not None:
+                md["trace"] = trace
             endpoints.append(FlightEndpoint(
                 Ticket.for_range(sl.key, 0, info["batches"], shard=first),
                 locs,
-                app_metadata={"shard": first, "slice": sl.index, "holders": hs},
+                app_metadata=md,
             ))
             records += info["rows"]
             nbytes += info["bytes"]
@@ -678,6 +692,7 @@ class FlightClusterServer(FlightServerBase):
         # so the planned schema is the state schema — see server.py
         out_schema = _query_out_schema(plan, schema)
         endpoints = []
+        trace = propagation_headers()  # stitch shard queries under this span
         lay = self._layout(name)
         if lay is not None:
             # replicated pushdown: each endpoint's plan is rewritten to the
@@ -691,11 +706,14 @@ class FlightClusterServer(FlightServerBase):
                     continue
                 sub = dataclasses.replace(plan, dataset=sl.key)
                 locs = tuple(l for h in hs for l in self.shards[h].locations())
+                md = {"shard": first, "slice": sl.index, "holders": hs}
+                if trace is not None:
+                    md["trace"] = trace
                 endpoints.append(FlightEndpoint(
                     Ticket.for_command(
                         QueryCommand(sub.serialize(), 0, -1, shard=first)),
                     locs,
-                    app_metadata={"shard": first, "slice": sl.index, "holders": hs},
+                    app_metadata=md,
                 ))
             return FlightInfo(out_schema, descriptor, endpoints,
                               total_records=-1, total_bytes=-1,
@@ -704,10 +722,13 @@ class FlightClusterServer(FlightServerBase):
         for i, shard in enumerate(self.shards):
             if not shard.storage.exists(name):
                 continue  # shard never received a slice of this dataset
+            md = {"shard": i}
+            if trace is not None:
+                md["trace"] = trace
             endpoints.append(FlightEndpoint(
                 Ticket.for_command(QueryCommand(cmd.plan_bytes, 0, -1, shard=i)),
                 shard.locations(),
-                app_metadata={"shard": i},
+                app_metadata=md,
             ))
         return FlightInfo(out_schema, descriptor, endpoints,
                           total_records=-1, total_bytes=-1,
@@ -893,7 +914,12 @@ class FlightClusterServer(FlightServerBase):
     # -- transaction coordination (two-phase commit across shards) -------- #
     def _shard_txn_action(self, shard: InMemoryFlightServer, verb: str,
                           body: bytes) -> dict:
-        return json.loads(shard.do_action_impl(Action(verb, body))[0].body)
+        # in-proc sub-txn calls bypass middleware, so the shard-side span is
+        # opened explicitly: when this coordinator runs under a traced span,
+        # each prepare/commit/abort vote becomes a stitched child on the
+        # shard that cast it (no-op on untraced traffic)
+        with shard.telemetry.span(f"txn:{verb}"):
+            return json.loads(shard.do_action_impl(Action(verb, body))[0].body)
 
     def _coordinate_commit(self, o: dict) -> dict:
         """Prepare→commit fan-out — the first cross-shard coordinated verb.
@@ -1216,6 +1242,29 @@ class FlightClusterServer(FlightServerBase):
         return {"dataset": into, "rows": joins, "on": keys}
 
     def do_action_impl(self, action: Action) -> list[ActionResult]:
+        told = telemetry_action(self, action)  # server-metrics / server-trace
+        if told is not None:
+            return told
+        if action.type in ("cluster-metrics", "cluster-trace"):
+            # cluster-wide scrape: the head's own snapshot plus every
+            # shard's, merged into one epoch-stamped Arrow batch.  Shards
+            # are scraped via ``telemetry_action`` directly, not their
+            # (possibly fault-shadowed) DoAction verb: the telemetry plane
+            # must stay readable while the data plane is down — a dead
+            # holder's error spans are exactly what the operator is after.
+            # A shard whose scrape still fails is skipped; the membership
+            # view says who is missing.
+            verb = "server-" + action.type[len("cluster-"):]
+            parts = [(-1, decode_telemetry_batch(
+                telemetry_action(self, Action(verb, action.body))[0].body))]
+            for i, s in enumerate(self.shards):
+                try:
+                    body = telemetry_action(s, Action(verb, action.body))[0].body
+                    parts.append((i, decode_telemetry_batch(body)))
+                except Exception:
+                    continue
+            merged = merge_telemetry_batches(parts, epoch=self.membership.epoch)
+            return [ActionResult(encode_telemetry_batch(merged))]
         if action.type == "health":
             return [ActionResult(b"ok")]
         if action.type == "heartbeat":
@@ -1229,6 +1278,15 @@ class FlightClusterServer(FlightServerBase):
                 {"ok": True, "epoch": self.membership.epoch}).encode())]
         if action.type == "membership":
             return [ActionResult(json.dumps(self.membership.view().to_json()).encode())]
+        if action.type == "server-stats":
+            # head-side operator snapshot (tools/flight_top.py): the head's
+            # own event-loop stats + verb counters + the membership epoch
+            return [ActionResult(json.dumps({
+                "epoch": self.membership.epoch,
+                "io": (self._listener.stats()
+                       if self._listener is not None else None),
+                "verbs": self.metrics.snapshot(),
+            }).encode())]
         if action.type == "txn-commit":
             out = self._coordinate_commit(parse_txn_body(action.body))
             return [ActionResult(json.dumps(out).encode())]

@@ -55,13 +55,14 @@ import os
 import selectors
 import socket
 import threading
-import traceback
+import time
 from collections import deque
 from itertools import islice
 from typing import Callable
 
 from ..ipc import parse_metadata
 from .errors import FlightError
+from .telemetry import HDR_TRACE, LogHistogram, add_stage
 from .transport import (
     FRAME,
     FRAME_MAGIC,
@@ -125,8 +126,11 @@ class ChannelConnection(FrameConnection):
         self._body_filled = 0
         # worker-facing receive queue
         self._in_cv = threading.Condition()
-        self._inbox: deque = deque()  # (kind, meta_raw bytes, Buffer | None)
+        # (kind, meta_raw bytes, Buffer | None, arrival perf_counter or 0.0)
+        self._inbox: deque = deque()
         self._inbox_bytes = 0
+        self.last_queue_wait_s = 0.0  # inbox dwell of the last popped frame
+        self._submit_t = 0.0          # when this channel was last scheduled
         self._active = False   # a pool worker is draining this channel
         self._paused = False   # read interest dropped (inbox over high water)
         # worker-facing send queue
@@ -164,8 +168,17 @@ class ChannelConnection(FrameConnection):
             # cache, so the overshoot is frame headers, not data copies.
             if threading.get_ident() == self._listener._loop_ident:
                 return
-            while self._out_bytes > OUT_HIGH_WATER and not self.closed:
-                self._out_cv.wait(0.1)
+            if self._out_bytes > OUT_HIGH_WATER and not self.closed:
+                # backpressure stall: the peer is slower than we produce —
+                # measured only when actually waiting, and attributed to the
+                # active span (if any) so slow-consumer time is attributable
+                t0 = time.perf_counter()
+                while self._out_bytes > OUT_HIGH_WATER and not self.closed:
+                    self._out_cv.wait(0.1)
+                stall = time.perf_counter() - t0
+                self._listener.stall_seconds += stall
+                self._listener.hist_stall.observe(stall)
+                add_stage("stall", stall)
             if self.closed:
                 raise ConnectionError("connection closed")
 
@@ -235,9 +248,16 @@ class ChannelConnection(FrameConnection):
                 if self.closed:
                     raise ConnectionError("peer closed")
                 self._in_cv.wait(0.1)
-            kind, meta_raw, body = self._inbox.popleft()
+            kind, meta_raw, body, t_arr = self._inbox.popleft()
             self._inbox_bytes -= FRAME.size + len(meta_raw) + (
                 body.nbytes if body is not None else 0)
+            if t_arr:
+                # inbox dwell: parsed-to-consumed (the accept-queue number)
+                qw = time.perf_counter() - t_arr
+                self.last_queue_wait_s = qw
+                self._listener.hist_queue_wait.observe(qw)
+            else:
+                self.last_queue_wait_s = 0.0
             if self._paused and (len(self._inbox) <= INBOX_MAX_FRAMES // 2
                                  and self._inbox_bytes <= INBOX_MAX_BYTES // 2):
                 self._paused = False
@@ -364,8 +384,10 @@ class ChannelConnection(FrameConnection):
                 and not self._inbox
                 and self._listener._try_inline(self, frame[1])):
             return
+        # arrival stamp: queue-wait = pop time minus this (0.0 = untimed)
+        t_arr = time.perf_counter() if self._listener._telemetry else 0.0
         with self._in_cv:
-            self._inbox.append(frame)
+            self._inbox.append((frame[0], frame[1], frame[2], t_arr))
             self._inbox_bytes += FRAME.size + len(frame[1]) + (
                 frame[2].nbytes if frame[2] is not None else 0)
             if (len(self._inbox) > INBOX_MAX_FRAMES
@@ -390,8 +412,12 @@ class EventLoopListener:
 
     def __init__(self, rpc: Callable, host: str = "127.0.0.1", port: int = 0,
                  workers: int | None = None,
-                 inline_ok: Callable[[dict], bool] | None = None):
+                 inline_ok: Callable[[dict], bool] | None = None,
+                 telemetry: bool = True):
         self._rpc = rpc
+        # per-frame/RPC clock reads cost ~50ns each; telemetry=False skips
+        # them entirely (histograms stay allocated so scrapes always work)
+        self._telemetry = telemetry
         # server-supplied certificate that a request is safe to run on the
         # loop thread: never reads another frame, never blocks, cheap
         self._inline_ok = inline_ok
@@ -429,6 +455,17 @@ class EventLoopListener:
         self.submits = 0
         self.inline_rpcs = 0
         self.frames_parsed = 0
+        # io-layer latency histograms (exported by ``server-metrics``):
+        # where a request's wall time goes *before/around* the handler
+        self.hist_queue_wait = LogHistogram()      # inbox dwell (accept queue)
+        self.hist_inline = LogHistogram()          # inline fast-path RPC time
+        self.hist_dispatch = LogHistogram()        # submit -> worker pickup
+        self.hist_depth = LogHistogram(scale=1)    # runnable-queue depth
+        self.hist_stall = LogHistogram()           # backpressure stall time
+        self.stall_seconds = 0.0
+        # structured handler-crash records (replaces stderr tracebacks)
+        self.handler_errors = 0
+        self.recent_errors: deque = deque(maxlen=64)
 
     # ------------------------------------------------------- lifecycle --
     def start(self) -> "EventLoopListener":
@@ -480,7 +517,36 @@ class EventLoopListener:
             "submits": self.submits,
             "inline_rpcs": self.inline_rpcs,
             "frames_parsed": self.frames_parsed,
+            "stall_seconds": round(self.stall_seconds, 6),
+            "handler_errors": self.handler_errors,
+            "recent_errors": list(self.recent_errors),
         }
+
+    def histograms(self) -> dict:
+        """IO-layer histograms for the ``server-metrics`` Arrow export."""
+        return {
+            "queue_wait": self.hist_queue_wait,
+            "inline_rpc": self.hist_inline,
+            "dispatch": self.hist_dispatch,
+            "worker_queue_depth": self.hist_depth,
+            "backpressure_stall": self.hist_stall,
+        }
+
+    def _record_error(self, ch: ChannelConnection, req: dict | None,
+                      exc: Exception) -> None:
+        """Structured record of a handler crash (was a stderr traceback):
+        connection fd, verb, trace id when the request carried one."""
+        self.handler_errors += 1
+        rec = {
+            "fd": ch.fd,
+            "verb": (req or {}).get("method", "?"),
+            "error": f"{type(exc).__name__}: {exc}",
+        }
+        trace = (((req or {}).get("options") or {}).get("headers")
+                 or {}).get(HDR_TRACE)
+        if trace:
+            rec["trace_id"] = trace
+        self.recent_errors.append(rec)
 
     # --------------------------------------------------- worker plumbing --
     def _post(self, op: str, ch: ChannelConnection | None) -> None:
@@ -493,8 +559,12 @@ class EventLoopListener:
             pass  # wakeup pipe full: the loop is already awake
 
     def _submit(self, ch: ChannelConnection) -> None:
+        if self._telemetry:
+            ch._submit_t = time.perf_counter()
         with self._run_cv:
             self._runnable.append(ch)
+            if self._telemetry:
+                self.hist_depth.observe(len(self._runnable))
             self._run_cv.notify()
 
     def _try_inline(self, ch: ChannelConnection, meta_raw: bytes) -> bool:
@@ -514,6 +584,7 @@ class EventLoopListener:
             return False  # a broken predicate degrades to the worker path
         ch.bytes_received += FRAME.size + len(meta_raw)
         self.inline_rpcs += 1
+        t0 = time.perf_counter() if self._telemetry else 0.0
         try:
             self._rpc(ch, KIND_CTRL, req)
             ch.flush_output()
@@ -525,9 +596,11 @@ class EventLoopListener:
             ch.close()
         except (ConnectionError, OSError):
             ch.close()
-        except Exception:
-            traceback.print_exc()
+        except Exception as e:
+            self._record_error(ch, req, e)
             ch.close()
+        if self._telemetry:
+            self.hist_inline.observe(time.perf_counter() - t0)
         return True
 
     def _worker(self) -> None:
@@ -538,12 +611,15 @@ class EventLoopListener:
                         return
                     self._run_cv.wait()
                 ch = self._runnable.popleft()
+            if self._telemetry and ch._submit_t:
+                self.hist_dispatch.observe(time.perf_counter() - ch._submit_t)
+                ch._submit_t = 0.0
             try:
                 self._drain(ch)
             except Exception:
-                # handler bug: _drain already closed the channel; report it
-                # without killing the worker
-                traceback.print_exc()
+                # handler bug: _drain already closed the channel and recorded
+                # a structured error; the worker itself must survive
+                pass
             ch = None  # no stale channel ref while parked on the condvar
 
     def _drain(self, ch: ChannelConnection) -> None:
@@ -583,9 +659,10 @@ class EventLoopListener:
                 with ch._in_cv:
                     ch._active = False
                 return
-            except Exception:
+            except Exception as e:
                 # handler bug: contain it to this connection — the loop and
                 # the worker pool must survive arbitrary handler failures
+                self._record_error(ch, req if isinstance(req, dict) else None, e)
                 ch.close()
                 with ch._in_cv:
                     ch._active = False

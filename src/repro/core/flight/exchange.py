@@ -46,6 +46,7 @@ materialization.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 from collections import deque
@@ -62,6 +63,7 @@ from .errors import (
 )
 from .protocol import CallOptions, ExchangeCommand, FlightDescriptor
 from .services import drive_exchange
+from .telemetry import HDR_TRACE, propagation_headers
 from .transport import KIND_CTRL
 
 DEFAULT_WINDOW = 16  # in-flight input batches per exchange stream
@@ -652,14 +654,32 @@ class Pipeline:
         self._options = options
         self.streams: list[ExchangeStreamBase] = []
 
+    def _stage_options(self) -> CallOptions | None:
+        """Per-run CallOptions with the active trace context attached, so a
+        traced caller's pipeline stitches one span per exchange stage (each
+        server's middleware parents its ``DoExchange:<service>`` span here).
+        Explicit trace headers in the pipeline's own options win."""
+        trace = propagation_headers()
+        if trace is None:
+            return self._options
+        base = self._options
+        hdrs = dict(base.headers) if base is not None and base.headers else {}
+        if HDR_TRACE in hdrs:
+            return base
+        hdrs.update(trace)
+        if base is None:
+            return CallOptions(headers=hdrs)
+        return dataclasses.replace(base, headers=hdrs)
+
     def run(self, schema: Schema, batches: Iterable[RecordBatch]):
         """Start every link; returns the last stage's stream (iterate it)."""
         self.streams = []
         it: Iterable[RecordBatch] = batches
         cur_schema = schema
+        options = self._stage_options()
         for client, desc in self._stages:
             stream = client.do_exchange_stream(desc, cur_schema,
-                                               options=self._options)
+                                               options=options)
             stream.feed(it)
             self.streams.append(stream)
             cur_schema = stream.out_schema  # blocks until the frame lands

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from .errors import FlightError, FlightUnauthenticated
+from .telemetry import LogHistogram, ServerTelemetry, TraceContext
 
 
 def _exchange_service_label(request: dict) -> str:
@@ -113,15 +114,35 @@ class AuthTokenMiddleware(ServerMiddleware):
 
 
 class MetricsMiddleware(ServerMiddleware):
-    """Per-verb call/error/latency counters (surfaced by ``server-stats``).
+    """Per-verb call/error/latency accounting (surfaced by ``server-stats``).
 
-    Locked: each TCP connection runs on its own handler thread, so
-    concurrent RPCs hit these read-modify-write updates simultaneously."""
+    Latency is a ``LogHistogram`` per verb (and per exchange service), so
+    ``server-metrics`` exports p50/p95/p99 instead of one scalar sum; the
+    legacy ``seconds`` sums stay for back-compat.  Errors count per verb
+    *and* per ``FlightError`` wire code (``error_codes``) — a dashboard can
+    tell ``not_found`` noise from an ``unavailable`` incident.
 
-    def __init__(self):
+    When constructed with a ``ServerTelemetry`` in ``"full"`` mode this is
+    also the server-side tracer: a request arriving with trace headers gets
+    a child ``Span`` opened in ``on_call`` (installed as the thread-local
+    active span so handlers can ``add_stage``) and recorded in
+    ``on_complete`` with queue-wait and handler stage timings.  Untraced
+    requests pay one header lookup.  Everything here is non-blocking and
+    allocation-light on purpose: this middleware lives in the
+    ``MiddlewareStack`` module, so it must keep the event loop's inline
+    fast-path certificate valid (see ``FlightServerBase._rpc_inline_ok``).
+
+    Locked where it matters: each TCP connection runs on its own handler
+    thread, so concurrent RPCs hit the dict read-modify-writes
+    simultaneously; histogram bumps are deliberately lock-free."""
+
+    def __init__(self, telemetry: ServerTelemetry | None = None):
+        self.telemetry = telemetry
         self.calls: dict[str, int] = {}
         self.errors: dict[str, int] = {}
+        self.error_codes: dict[str, dict[str, int]] = {}
         self.seconds: dict[str, float] = {}
+        self.latency: dict[str, LogHistogram] = {}  # per-verb log2 buckets
         self.actions: dict[str, int] = {}  # DoAction broken out by type
         # DoExchange broken out by service: call/error/latency per transform
         self.exchanges: dict[str, dict] = {}
@@ -129,7 +150,8 @@ class MetricsMiddleware(ServerMiddleware):
 
     def _exchange_entry(self, label: str) -> dict:
         return self.exchanges.setdefault(
-            label, {"calls": 0, "errors": 0, "seconds": 0.0})
+            label, {"calls": 0, "errors": 0, "seconds": 0.0,
+                    "hist": LogHistogram()})
 
     def on_call(self, ctx: CallContext) -> None:
         ctx.state["metrics_t0"] = time.perf_counter()
@@ -142,29 +164,65 @@ class MetricsMiddleware(ServerMiddleware):
                 label = _exchange_service_label(ctx.request)
                 ctx.state["metrics_exchange"] = label
                 self._exchange_entry(label)["calls"] += 1
+        tel = self.telemetry
+        if tel is not None and tel.trace_enabled:
+            parent = TraceContext.from_headers(ctx.headers)
+            if parent is not None:  # caller-sampled: only traced requests pay
+                name = ctx.method
+                if name == "DoAction":
+                    name = f"DoAction:{(ctx.request.get('action') or {}).get('type', '?')}"
+                elif name == "DoExchange":
+                    name = f"DoExchange:{ctx.state.get('metrics_exchange', '?')}"
+                span, prev = tel.begin_span(name, parent)
+                qw = ctx.state.get("queue_wait_s")
+                if qw:
+                    span.stages["queue"] = qw
+                ctx.state["telemetry_span"] = (span, prev)
 
     def on_complete(self, ctx: CallContext, error: Exception | None) -> None:
         dt = time.perf_counter() - ctx.state.get("metrics_t0", time.perf_counter())
+        tel = self.telemetry
+        if tel is None or tel.metrics_enabled:
+            hist = self.latency.get(ctx.method)
+            if hist is None:  # racy setdefault is fine: worst case one resets
+                hist = self.latency[ctx.method] = LogHistogram()
+            hist.observe(dt)
         with self._lock:
             self.seconds[ctx.method] = self.seconds.get(ctx.method, 0.0) + dt
             if error is not None:
                 self.errors[ctx.method] = self.errors.get(ctx.method, 0) + 1
+                code = getattr(error, "code", None) or type(error).__name__
+                by_code = self.error_codes.setdefault(ctx.method, {})
+                by_code[code] = by_code.get(code, 0) + 1
             label = ctx.state.get("metrics_exchange")
             if label is not None:
                 e = self._exchange_entry(label)
                 e["seconds"] += dt
                 if error is not None:
                     e["errors"] += 1
+        if label is not None and (tel is None or tel.metrics_enabled):
+            self.exchanges[label]["hist"].observe(dt)
+        traced = ctx.state.pop("telemetry_span", None)
+        if traced is not None:
+            span, prev = traced
+            # handler time excludes the pre-dispatch queue wait, which
+            # happened before this span's clock started
+            span.stages.setdefault("handler", dt)
+            tel.end_span(span, prev, dt, error)
 
     def snapshot(self) -> dict:
         with self._lock:
             return {
                 "calls": dict(self.calls),
                 "errors": dict(self.errors),
+                "error_codes": {k: dict(v) for k, v in self.error_codes.items()},
                 "seconds": {k: round(v, 6) for k, v in self.seconds.items()},
+                "latency": {k: h.snapshot() for k, h in self.latency.items()},
                 "actions": dict(self.actions),
                 "exchanges": {
-                    k: {**v, "seconds": round(v["seconds"], 6)}
+                    k: {**{kk: vv for kk, vv in v.items() if kk != "hist"},
+                        "seconds": round(v["seconds"], 6),
+                        "latency": v["hist"].snapshot()}
                     for k, v in self.exchanges.items()
                 },
             }

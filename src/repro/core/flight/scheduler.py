@@ -32,7 +32,7 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Iterable, Iterator, Protocol, runtime_checkable
 
 from ..recordbatch import RecordBatch, Table
@@ -124,10 +124,26 @@ class ParallelStreamScheduler:
         self.retries = 0
         self.hedges = 0
 
-    def _do_get(self, client: FlightClientProtocol, ticket):
+    def _do_get(self, client: FlightClientProtocol, ticket,
+                options: CallOptions | None = None):
         """Issue DoGet.  ``FlightClientProtocol`` makes ``options`` part of
         the contract, so it is always forwarded — no signature probing."""
-        return client.do_get(ticket, options=self.call_options)
+        return client.do_get(
+            ticket, options=options if options is not None else self.call_options)
+
+    def _endpoint_options(self, ep: FlightEndpoint) -> CallOptions | None:
+        """Base CallOptions plus the trace context the planner stamped into
+        the endpoint's ``app_metadata["trace"]`` (telemetry.py) — so every
+        shard fetch stitches under the planning server's span instead of
+        arriving untraced.  Explicit caller headers win on key collisions."""
+        md = getattr(ep, "app_metadata", None)
+        trace = md.get("trace") if isinstance(md, dict) else None
+        if not isinstance(trace, dict):
+            return self.call_options
+        base = self.call_options
+        if base is None:
+            return CallOptions(headers=dict(trace))
+        return replace(base, headers={**trace, **(base.headers or {})})
 
     def _do_put(self, client: FlightClientProtocol, descriptor, schema):
         """Open a DoPut stream, forwarding CallOptions unconditionally."""
@@ -185,7 +201,8 @@ class ParallelStreamScheduler:
                 self._bump("retries")
             attempted = True
             try:
-                reader = self._do_get(client, ep.ticket)
+                reader = self._do_get(client, ep.ticket,
+                                      self._endpoint_options(ep))
                 seen = 0
                 for b in reader:
                     seen += 1
@@ -206,9 +223,10 @@ class ParallelStreamScheduler:
         locs: list[Location | None] = list(ep.locations) or [None]
         done = threading.Event()
         winner: list[list[RecordBatch]] = []
+        ep_options = self._endpoint_options(ep)
 
         def attempt(client) -> list[RecordBatch]:
-            return list(self._do_get(client, ep.ticket))
+            return list(self._do_get(client, ep.ticket, ep_options))
 
         primary_client = None
         primary_loc: Location | None = None

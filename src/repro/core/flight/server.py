@@ -134,6 +134,13 @@ from .eventloop import EventLoopListener
 from .exchange import DEFAULT_WINDOW, ack_interval
 from .services import ExchangeService, ExchangeServiceRegistry, drive_exchange
 from .storage import StorageProvider, make_provider
+from .telemetry import (
+    ServerTelemetry,
+    add_stage,
+    current_span,
+    propagation_headers,
+    telemetry_action,
+)
 from .transport import (
     COALESCE_BYTES,
     KIND_CTRL,
@@ -180,6 +187,10 @@ class ServerConfig:
     storage: "str | StorageProvider | None" = None
     io_mode: str = "eventloop"
     io_workers: int = 0
+    # telemetry plane (telemetry.py): "off" | "metrics" (histograms only) |
+    # "full" (histograms + caller-sampled distributed tracing, the default —
+    # untraced traffic pays one header lookup per RPC)
+    telemetry: str = "full"
 
 
 class _ProviderMapping(Mapping):
@@ -277,6 +288,7 @@ class FlightServerBase:
         coalesce: bool = True,
         io_mode: str = "eventloop",
         io_workers: int = 0,
+        telemetry: str = "full",
         middleware: Iterable[ServerMiddleware] | None = None,
         services: ExchangeServiceRegistry | None = None,
     ):
@@ -287,16 +299,19 @@ class FlightServerBase:
         self.io_mode = io_mode
         self.io_workers = io_workers
         self.encode_calls = 0  # encode_batch invocations on the DoGet path
+        self.rows_served = 0  # rows shipped by DoGet (cached + uncached paths)
         # named streaming-exchange transforms (services.py); a shared
         # registry object makes one `register` visible on many servers
         self.services = services if services is not None else ExchangeServiceRegistry()
         self._listener: SocketListener | EventLoopListener | None = None
+        self.telemetry = ServerTelemetry(telemetry, service=location_name)
         stack: list[ServerMiddleware] = list(middleware or [])
         if auth_token is not None and not any(
             isinstance(m, AuthTokenMiddleware) for m in stack
         ):
             stack.insert(0, AuthTokenMiddleware(auth_token))
-        self.metrics = MetricsMiddleware()  # first: counts rejected calls too
+        # first: counts rejected calls too; also the server-side tracer
+        self.metrics = MetricsMiddleware(telemetry=self.telemetry)
         self.middleware = MiddlewareStack([self.metrics, *stack])
 
     # -- handlers to override ------------------------------------------- #
@@ -348,7 +363,8 @@ class FlightServerBase:
             self._listener = EventLoopListener(
                 self._dispatch_rpc, host, port,
                 workers=self.io_workers or None,
-                inline_ok=self._rpc_inline_ok).start()
+                inline_ok=self._rpc_inline_ok,
+                telemetry=self.telemetry.metrics_enabled).start()
         elif self.io_mode == "threads":
             self._listener = SocketListener(self._handle_connection, host, port).start()
         else:
@@ -417,12 +433,19 @@ class FlightServerBase:
             raise FlightError("expected control frame opening an RPC")
         method = req.get("method")
         opts = req.get("options") or {}
+        ctx = self._call_context(method or "?", req)
+        # event-loop channels stamp how long the opening frame sat parsed in
+        # the inbox before a worker picked it up; traced spans surface it as
+        # the "queue" stage (inline dispatch never queues — no attribute)
+        queue_wait = getattr(conn, "last_queue_wait_s", 0.0)
+        if queue_wait:
+            ctx.state["queue_wait_s"] = queue_wait
         try:
             # unary verbs buffer their reply and send it *after* the
             # middleware chain unwinds: once the client holds the answer,
             # every on_complete hook (metrics, logging) has already fired
             reply: dict | None = None
-            with self.middleware.wrap(self._call_context(method or "?", req)):
+            with self.middleware.wrap(ctx):
                 if method == "GetFlightInfo":
                     info = self.get_flight_info_impl(
                         FlightDescriptor.from_json(req["descriptor"]))
@@ -467,13 +490,19 @@ class FlightServerBase:
             raise FlightInvalidArgument(f"unknown wire codec {codec!r}",
                                         detail={"wire_codec": codec})
         coalesce = opts.get("coalesce")
+        # stage timing is sampled: only a traced request (active span set by
+        # MetricsMiddleware) pays the perf_counter pairs on this hot path
+        traced = current_span() is not None
         pre = self.do_get_encoded(ticket) if codec == self.wire_codec else None
         if pre is not None:  # encode-once cache: no per-request encoding
             schema_msg, batch_msgs = pre
             conn.send_ctrl({"ok": True})
+            t0 = time.perf_counter() if traced else 0.0
             self._send_stream(
                 conn, chain((schema_msg,), batch_msgs, (encode_eos(codec),)), coalesce
             )
+            if traced:
+                add_stage("flush", time.perf_counter() - t0)
             return
         schema, batches = self.do_get_impl(ticket)
         conn.send_ctrl({"ok": True})
@@ -482,10 +511,22 @@ class FlightServerBase:
             yield encode_schema(schema)
             for b in batches:
                 self.encode_calls += 1
-                yield encode_batch(b, codec)
+                self.rows_served += b.num_rows
+                if traced:
+                    te = time.perf_counter()
+                    msg = encode_batch(b, codec)
+                    add_stage("encode", time.perf_counter() - te)
+                    yield msg
+                else:
+                    yield encode_batch(b, codec)
             yield encode_eos(codec)
 
+        t0 = time.perf_counter() if traced else 0.0
         self._send_stream(conn, frames(), coalesce)
+        if traced:
+            # the walltime of the send loop minus encode = queueing/sendmsg
+            add_stage("flush", max(time.perf_counter() - t0
+                                   - (current_span().stages.get("encode", 0.0)), 0.0))
 
     def _recv_stream(self, conn: FrameConnection) -> tuple[Schema, Iterator[RecordBatch]]:
         kind, meta, body = conn.recv_frame()
@@ -717,6 +758,7 @@ class InMemoryFlightServer(FlightServerBase):
         storage=_UNSET,
         io_mode=_UNSET,
         io_workers=_UNSET,
+        telemetry=_UNSET,
         middleware: Iterable[ServerMiddleware] | None = None,
         services: ExchangeServiceRegistry | None = None,
     ):
@@ -736,6 +778,7 @@ class InMemoryFlightServer(FlightServerBase):
                 "storage": storage,
                 "io_mode": io_mode,
                 "io_workers": io_workers,
+                "telemetry": telemetry,
             }.items() if v is not _UNSET
         }
         if overrides:
@@ -743,17 +786,21 @@ class InMemoryFlightServer(FlightServerBase):
         self.config = cfg
         super().__init__(location_name, cfg.auth_token, wire_codec=cfg.wire_codec,
                          coalesce=cfg.coalesce, io_mode=cfg.io_mode,
-                         io_workers=cfg.io_workers, middleware=middleware,
-                         services=services)
+                         io_workers=cfg.io_workers, telemetry=cfg.telemetry,
+                         middleware=middleware, services=services)
         self._provider = make_provider(cfg.storage)
         self._lock = threading.Lock()
         self.batches_per_endpoint = cfg.batches_per_endpoint  # 0 = single endpoint
         self.shard_id = shard_id  # set by cluster.py: stamped into tickets
+        if shard_id is not None:
+            self.telemetry.shard = shard_id  # spans carry shard identity
         self.endpoints_per_query = cfg.endpoints_per_query  # GetFlightInfo(QueryCommand) fan-out
         # encode-once cache: dataset -> (schema msg, per-batch msgs), built on
         # first DoGet, invalidated whenever the dataset changes
         self.cache_encoded = cfg.cache_encoded
-        self._encoded: dict[str, tuple[EncodedMessage, tuple[EncodedMessage, ...]]] = {}
+        self._encoded: dict[
+            str, tuple[EncodedMessage, tuple[EncodedMessage, ...], tuple[int, ...]]
+        ] = {}
         self._versions: dict[str, int] = {}  # bumped on every dataset mutation
         self.cache_hits = 0
         self.cache_misses = 0
@@ -825,11 +872,17 @@ class InMemoryFlightServer(FlightServerBase):
         n = info["batches"]
         per = self.batches_per_endpoint or n or 1
         extra = {} if self.shard_id is None else {"shard": self.shard_id}
+        # a traced planning call stamps its span into the endpoints, so the
+        # scheduler's later DoGets stitch to this GetFlightInfo's trace
+        md = dict(extra)
+        trace = propagation_headers()
+        if trace is not None:
+            md["trace"] = trace
         endpoints = [
             FlightEndpoint(
                 Ticket.for_range(name, i, min(i + per, n), **extra),
                 self.locations(),
-                app_metadata=extra or None,
+                app_metadata=md or None,
             )
             for i in range(0, max(n, 1), per)
         ]
@@ -859,6 +912,9 @@ class InMemoryFlightServer(FlightServerBase):
         span = max(hi - lo, 0)
         per = max(1, -(-span // self.endpoints_per_query))
         extra = {} if self.shard_id is None else {"shard": self.shard_id}
+        trace = propagation_headers()
+        if trace is not None:
+            extra = {**extra, "trace": trace}
         endpoints = [
             FlightEndpoint(
                 Ticket.for_command(
@@ -975,6 +1031,7 @@ class InMemoryFlightServer(FlightServerBase):
             entry = self._encoded.get(name)
             if entry is not None:
                 self.cache_hits += 1
+                self.rows_served += sum(entry[2][start:stop_ix])
                 return entry[0], list(entry[1][start:stop_ix])
             self.cache_misses += 1
             batches = self._provider.read_batches(name)
@@ -988,12 +1045,13 @@ class InMemoryFlightServer(FlightServerBase):
         for b in batches:
             self.encode_calls += 1
             msgs.append(encode_batch(b, self.wire_codec))
-        entry = (schema_msg, tuple(msgs))
+        entry = (schema_msg, tuple(msgs), tuple(b.num_rows for b in batches))
         with self._lock:
             # cache only if the dataset didn't change while we encoded; the
             # stale-but-consistent snapshot still serves this request
             if self._versions.get(name, 0) == version and self._provider.exists(name):
                 self._encoded[name] = entry
+            self.rows_served += sum(entry[2][start:stop_ix])
         return entry[0], list(entry[1][start:stop_ix])
 
     def _rpc_inline_ok(self, req: dict) -> bool:
@@ -1264,6 +1322,10 @@ class InMemoryFlightServer(FlightServerBase):
         super().shutdown()
 
     def do_action_impl(self, action: Action) -> list[ActionResult]:
+        # telemetry export: spans / histogram snapshots as Arrow IPC bodies
+        told = telemetry_action(self, action)
+        if told is not None:
+            return told
         if action.type == "txn-prepare":
             return [ActionResult(json.dumps(
                 self._txn_prepare(parse_txn_body(action.body))).encode())]
@@ -1338,6 +1400,7 @@ class InMemoryFlightServer(FlightServerBase):
                     "encode_cache_hits": self.cache_hits,
                     "encode_cache_misses": self.cache_misses,
                     "encode_cache_datasets": len(self._encoded),
+                    "rows_served": self.rows_served,
                     "wire_codec": self.wire_codec,
                     "coalesce": self.coalesce,
                     "queries_executed": self.queries_executed,

@@ -437,6 +437,54 @@ class TestFaultInjection:
         finally:
             cl.shutdown()
 
+    def test_kill_mid_read_traces_error_and_failover_spans_in_one_trace(self):
+        """Trace propagation under faults: a kill mid-read must yield a span
+        marked ``error=FlightUnavailable`` on the dead holder AND a
+        successful sibling span on the failover holder, under one trace."""
+        from repro.core.flight import Tracer, batch_to_spans, decode_telemetry_batch
+
+        cl = FlightClusterServer(num_shards=3, replicas=2).serve_tcp()
+        try:
+            cl.add_dataset("big", seq_batches(30, rows=200))
+            cli = FlightClusterClient(
+                f"tcp://127.0.0.1:{cl.port}", max_streams=3, window=2)
+            inj = FaultInjector(cl)
+            tracer = Tracer()
+            with tracer.trace("failover-read") as ctx:
+                got, killed = [], False
+                for i, b in enumerate(cli.stream("big")):
+                    got.append(b)
+                    if i == 2 and not killed:
+                        inj.kill(0)              # verbs fail + connections drop
+                        killed = True
+                # a second read in the same trace, on a fresh client (fresh
+                # dials — the old client's severed connections fail before
+                # reaching any server): membership still lists the killed
+                # shard, so its endpoints route there first — the dead
+                # holder's DoGet dies typed on the server, the replica
+                # serves the slice
+                cli2 = FlightClusterClient(
+                    f"tcp://127.0.0.1:{cl.port}", max_streams=3, window=2)
+                t, _ = cli2.read("big")
+            assert killed
+            assert all_ks(got) == list(range(6000))
+            assert all_ks(t) == list(range(6000))
+            res = cli.head.do_action(Action("cluster-trace", b""))
+            spans = [s for s in batch_to_spans(decode_telemetry_batch(res[0].body))
+                     if s["trace_id"] == ctx.trace_id]
+            dead = [s for s in spans
+                    if s["name"] == "DoGet" and s["status"] == "unavailable"]
+            assert dead and all(s["shard"] == 0 for s in dead)
+            # the failover sibling: same trace, same parent hop, another shard
+            ok = [s for s in spans
+                  if s["name"] == "DoGet" and s["status"] == "ok"
+                  and s["shard"] != 0]
+            assert ok
+            parents = {s["parent_id"] for s in dead}
+            assert any(s["parent_id"] in parents for s in ok)
+        finally:
+            cl.shutdown()
+
     def test_prober_declares_killed_shard_dead_and_plans_avoid_it(self):
         cl = FlightClusterServer(num_shards=3, replicas=2,
                                  suspect_after=0.05, dead_after=0.1)

@@ -1,0 +1,192 @@
+"""flight-top: a terminal view of a live Flight server or cluster head.
+
+Scrapes the Flight-native telemetry actions — ``server-stats`` (JSON) and
+``cluster-metrics`` / ``server-metrics`` (Arrow record batches) — and renders
+the numbers an operator reaches for first: per-verb call counts and
+p50/p95/p99 latency, error breakdowns by wire code, event-loop health
+(queue-wait, dispatch latency, worker queue depth, backpressure stalls, fd
+counts) and per-shard serving rates.
+
+One-shot (print once and exit)::
+
+    PYTHONPATH=src python tools/flight_top.py tcp://127.0.0.1:8815
+
+Watch mode (redraw every N seconds; rates are deltas between scrapes)::
+
+    PYTHONPATH=src python tools/flight_top.py tcp://127.0.0.1:8815 --watch 2
+
+``--selftest`` spins an in-process TCP cluster, sends traced traffic, takes
+two scrapes and renders them — the CI docs job runs this so the tool can
+never rot apart from the scrape schema it reads.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.flight import (  # noqa: E402
+    Action,
+    FlightClient,
+    batch_to_rows,
+    decode_telemetry_batch,
+)
+
+
+def scrape(client: FlightClient) -> dict:
+    """One snapshot: metrics rows (cluster-wide when the target is a head,
+    single-server otherwise) + the head's own server-stats JSON."""
+    try:
+        body = client.do_action(Action("cluster-metrics"))[0].body
+    except Exception:
+        body = client.do_action(Action("server-metrics"))[0].body
+    rows = batch_to_rows(decode_telemetry_batch(body))
+    stats = json.loads(client.do_action("server-stats")[0].body)
+    return {"t": time.time(), "rows": rows, "stats": stats}
+
+
+def _ms(s: float) -> str:
+    return f"{s * 1e3:8.2f}"
+
+
+def _by(rows: list[dict], scope: str) -> list[dict]:
+    return [r for r in rows if r["scope"] == scope]
+
+
+def render(snap: dict, prev: dict | None = None) -> str:
+    rows, stats = snap["rows"], snap["stats"]
+    io = stats.get("io") or {}
+    dt = (snap["t"] - prev["t"]) if prev else 0.0
+    lines: list[str] = []
+    epoch = next((r["epoch"] for r in rows if r.get("epoch", -1) >= 0), None)
+    head = "flight-top"
+    if epoch is not None:
+        head += f"  epoch={epoch}"
+    head += (f"  fds={io.get('open_fds', '?')}"
+             f"  conns={io.get('open_connections', '?')}"
+             f"  queue={io.get('worker_queue_depth', '?')}"
+             f"  stall_s={io.get('stall_seconds', 0)}"
+             f"  io_errors={io.get('handler_errors', 0)}")
+    lines.append(head)
+
+    lines.append("")
+    lines.append(f"{'shard':>5} {'verb':<24} {'calls':>8} {'p50 ms':>8} "
+                 f"{'p95 ms':>8} {'p99 ms':>8}")
+    for r in sorted(_by(rows, "verb") + _by(rows, "exchange"),
+                    key=lambda r: (r.get("shard", -1), r["name"])):
+        sh = r.get("shard", -1)
+        lines.append(f"{('head' if sh < 0 else sh):>5} {r['name']:<24} "
+                     f"{r['count']:>8} {_ms(r['p50_s'])} {_ms(r['p95_s'])} "
+                     f"{_ms(r['p99_s'])}")
+
+    serve = _by(rows, "serve")
+    if serve:
+        lines.append("")
+        lines.append(f"{'shard':>5} {'rows served':>12} {'rows/s':>10}")
+        prev_serve = {(" ", r.get("shard", -1)): r["count"]
+                      for r in _by(prev["rows"], "serve")} if prev else {}
+        for r in sorted(serve, key=lambda r: r.get("shard", -1)):
+            sh = r.get("shard", -1)
+            rate = ""
+            if prev and dt > 0:
+                rate = f"{(r['count'] - prev_serve.get((' ', sh), 0)) / dt:10.0f}"
+            lines.append(f"{('head' if sh < 0 else sh):>5} "
+                         f"{r['count']:>12} {rate:>10}")
+
+    errs = _by(rows, "errors")
+    if errs:
+        lines.append("")
+        lines.append(f"{'shard':>5} {'verb:code':<32} {'count':>8}")
+        for r in sorted(errs, key=lambda r: (r.get("shard", -1), r["name"])):
+            sh = r.get("shard", -1)
+            lines.append(f"{('head' if sh < 0 else sh):>5} {r['name']:<32} "
+                         f"{r['count']:>8}")
+
+    ios = _by(rows, "io")
+    if ios:
+        lines.append("")
+        lines.append(f"{'shard':>5} {'event loop':<24} {'n':>8} {'p50':>10} "
+                     f"{'p99':>10}")
+        for r in sorted(ios, key=lambda r: (r.get("shard", -1), r["name"])):
+            sh = r.get("shard", -1)
+            if r["name"] == "worker_queue_depth":  # depth buckets, not seconds
+                p50, p99 = f"{r['p50_s']:10.0f}", f"{r['p99_s']:10.0f}"
+            else:
+                p50 = f"{r['p50_s'] * 1e6:8.0f}us"
+                p99 = f"{r['p99_s'] * 1e6:8.0f}us"
+            lines.append(f"{('head' if sh < 0 else sh):>5} {r['name']:<24} "
+                         f"{r['count']:>8} {p50} {p99}")
+    return "\n".join(lines)
+
+
+def selftest() -> int:
+    """Spin a 2-shard cluster over TCP, run traced reads, render two scrapes."""
+    import numpy as np
+
+    from repro.core import RecordBatch
+    from repro.core.flight import (FlightClusterClient, FlightClusterServer,
+                                   Tracer)
+
+    cluster = FlightClusterServer(num_shards=2)
+    cluster.serve_tcp()
+    try:
+        cluster.add_dataset("t", [
+            RecordBatch.from_numpy(
+                {"k": np.arange(i * 100, (i + 1) * 100, dtype=np.int64)})
+            for i in range(4)])
+        uri = f"tcp://127.0.0.1:{cluster.port}"
+        cli = FlightClusterClient(uri)
+        tracer = Tracer()
+        with tracer.trace("flight-top-selftest"):
+            table, _ = cli.read("t")
+        assert table.num_rows == 400
+        head = FlightClient(uri)
+        first = scrape(head)
+        with tracer.trace("flight-top-selftest-2"):
+            cli.read("t")
+        second = scrape(head)
+        out = render(second, prev=first)
+        print(out)
+        assert "DoGet" in out and "rows served" in out
+        # both shards' DoGet rows must be present in the cluster scrape
+        shards = {r.get("shard") for r in second["rows"]
+                  if r["scope"] == "verb" and r["name"] == "DoGet"}
+        assert {0, 1} <= shards, shards
+        print("\nflight_top selftest: ok")
+        return 0
+    finally:
+        cluster.shutdown()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("uri", nargs="?", help="tcp://host:port of a server or head")
+    ap.add_argument("--watch", type=float, default=0.0, metavar="SECONDS",
+                    help="redraw every N seconds (0 = one-shot)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="spin an in-process cluster, scrape it, exit")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest()
+    if not args.uri:
+        ap.error("uri required (or --selftest)")
+    client = FlightClient(args.uri)
+    prev = None
+    while True:
+        snap = scrape(client)
+        out = render(snap, prev=prev)
+        if args.watch:
+            print("\x1b[2J\x1b[H" + out, flush=True)
+        else:
+            print(out)
+            return 0
+        prev = snap
+        time.sleep(args.watch)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
